@@ -1,0 +1,59 @@
+"""Paper Table 2 + Figure 1 (left): throughput and memory of SAMA vs baseline
+meta-gradient algorithms at fixed global batch.
+
+Throughput = meta-steps/s x samples-per-step measured on CPU (relative
+ordering is the claim); memory = compiled peak (argument+temp+output) from
+memory_analysis of each method's jitted step — the structural analogue of
+the paper's GPU MB numbers.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import data, optim
+from repro.core import EngineConfig, init_state, make_meta_step, problems
+from benchmarks.common import emit, mini_bert, time_fn, wrench_task
+
+METHODS = ["sama", "sama_na", "t1t2", "neumann", "cg", "iterdiff"]
+
+
+def main(fast: bool = True):
+    ccfg, train, meta, test = wrench_task(seed=1)
+    model = mini_bert(num_labels=ccfg.num_classes, d_model=128)
+    batch, unroll = 48, 2  # paper: global batch 48
+
+    spec = problems.make_data_optimization_spec(model.classifier_per_example, reweight=True)
+    lam = problems.init_data_optimization_lam(jax.random.PRNGKey(1), reweight=True)
+    theta = model.init(jax.random.PRNGKey(0))
+
+    it = data.BatchIterator(train, meta, batch_size=batch, meta_batch_size=batch,
+                            unroll=unroll, seed=0)
+    base_b, meta_b = next(it)
+    base_b = jax.tree_util.tree_map(jnp.asarray, base_b)
+    meta_b = jax.tree_util.tree_map(jnp.asarray, meta_b)
+
+    for method in METHODS:
+        base_opt = optim.adam(1e-3)
+        meta_opt = optim.adam(1e-3)
+        step = make_meta_step(spec, base_opt, meta_opt,
+                              EngineConfig(method=method, unroll_steps=unroll))
+        state = init_state(theta, lam, base_opt, meta_opt)
+        jstep = jax.jit(step)
+        us = time_fn(lambda: jstep(state, base_b, meta_b), iters=3)
+        throughput = batch * unroll / (us / 1e6)
+
+        compiled = jax.jit(step).lower(state, base_b, meta_b).compile()
+        try:
+            ma = compiled.memory_analysis()
+            peak_mb = (ma.argument_size_in_bytes + ma.output_size_in_bytes
+                       + ma.temp_size_in_bytes) / 2**20
+        except Exception:
+            peak_mb = float("nan")
+        emit(f"table2_{method}", us, f"samples_per_s={throughput:.1f};peak_mb={peak_mb:.1f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,39 @@
+"""Paper Table 1: noisy finetuning with weak supervision (WRENCH-analog).
+
+Compares test accuracy of: plain finetuning on weak labels, SAMA-NA (+R),
+SAMA (+R), SAMA (+R&C) — the paper's claim is the ordering
+finetune < SAMA-NA < SAMA and that +C helps on top of +R.
+"""
+
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import accuracy, emit, mini_bert, train_meta, train_plain, wrench_task
+
+
+def main(fast: bool = True):
+    steps = 100 if fast else 400
+    ccfg, train, meta, test = wrench_task(seed=0)
+    model = mini_bert(num_labels=ccfg.num_classes)
+
+    t0 = time.perf_counter()
+    theta = train_plain(model, train, steps=steps * 2)
+    acc = accuracy(model, theta, test)
+    emit("table1_finetune_weak", (time.perf_counter() - t0) * 1e6 / steps, f"acc={acc:.4f}")
+
+    rows = [
+        ("table1_sama_na_R", dict(method="sama_na", correct=False)),
+        ("table1_sama_R", dict(method="sama", correct=False)),
+        ("table1_sama_RC", dict(method="sama", correct=True)),
+    ]
+    for name, kw in rows:
+        t0 = time.perf_counter()
+        state, eng = train_meta(model, train, meta, steps=steps, **kw)
+        us = (time.perf_counter() - t0) * 1e6 / steps
+        acc = accuracy(model, state.theta, test)
+        emit(name, us, f"acc={acc:.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,128 @@
+"""Shared benchmark utilities: the WRENCH-analog synthetic task, a mini-BERT
+classifier factory, timing helpers, and CSV emission.
+
+Every benchmark prints ``name,us_per_call,derived`` rows (one per paper-table
+cell it reproduces) so ``python -m benchmarks.run`` produces one CSV.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs, data, optim
+from repro.core import Engine, EngineConfig, problems
+from repro.models import Model
+
+
+def emit(name: str, us_per_call: float, derived: str):
+    print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def time_fn(fn, *args, iters: int = 3, warmup: int = 1) -> float:
+    """Median wall-time per call in microseconds (blocks on jax outputs)."""
+
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts) * 1e6)
+
+
+# ---------------------------------------------------------------------------
+# WRENCH-analog task: weakly-labeled text classification with a mini-BERT
+# ---------------------------------------------------------------------------
+
+
+def wrench_task(seed: int = 0, n_train: int = 512, n_meta: int = 128, n_test: int = 512,
+                lf_accuracy: float = 0.5):
+    """Synthetic WRENCH: clean meta/dev split, majority-vote weak labels on
+    train (the paper's App. B.1 setup), clean test. LF accuracy is set low
+    enough (~58% majority-vote labels) that plain finetuning visibly suffers
+    — the regime the paper's Table 1 operates in."""
+
+    ccfg = data.ClassificationConfig(num_classes=4, vocab_size=512, seq_len=32, seed=seed)
+    train = data.make_classification_dataset(ccfg, n_train, noise=0.0, seed=seed)
+    train["y"] = data.weak_labels(train["y_true"], 4, num_lfs=5, lf_accuracy=lf_accuracy, seed=seed + 1)
+    meta = data.make_classification_dataset(ccfg, n_meta, noise=0.0, seed=seed + 2)
+    test = data.make_classification_dataset(ccfg, n_test, noise=0.0, seed=seed + 3)
+    return ccfg, train, meta, test
+
+
+def mini_bert(num_labels: int = 4, d_model: int = 128, layers: int = 2) -> Model:
+    cfg = configs.get_smoke_config("bert-base").replace(
+        d_model=d_model, num_layers=layers, num_labels=num_labels,
+        num_heads=max(d_model // 64, 2), num_kv_heads=max(d_model // 64, 2),
+        head_dim=64, d_ff=d_model * 2, remat=False,
+    )
+    return Model(cfg)
+
+
+def accuracy(model: Model, params, dataset, batch: int = 128) -> float:
+    n = len(dataset["tokens"])
+    correct = 0
+    fwd = jax.jit(lambda p, b: model.forward(p, b)[0])
+    for i in range(0, n, batch):
+        b = {"tokens": jnp.asarray(dataset["tokens"][i : i + batch])}
+        logits = fwd(params, b)
+        pred = np.asarray(jnp.argmax(logits, -1))
+        correct += int((pred == dataset["y_true"][i : i + batch]).sum())
+    return correct / n
+
+
+def train_meta(model: Model, train, meta, *, method: str, steps: int, seed: int = 0,
+               reweight=True, correct=False, unroll: int = 2,
+               batch: int = 32, meta_batch: int = 32) -> Tuple[Dict, Engine]:
+    spec = problems.make_data_optimization_spec(
+        model.classifier_per_example, reweight=reweight, correct=correct,
+    )
+    lam = problems.init_data_optimization_lam(
+        jax.random.PRNGKey(seed + 10), reweight=reweight, correct=correct,
+        num_classes=model.cfg.num_labels,
+    )
+    theta = model.init(jax.random.PRNGKey(seed))
+    eng = Engine(
+        spec, base_opt=optim.adam(1e-3), meta_opt=optim.adam(1e-3),
+        cfg=EngineConfig(method=method, unroll_steps=unroll),
+    )
+    state = eng.init(theta, lam)
+    it = data.BatchIterator(train, meta, batch_size=batch, meta_batch_size=meta_batch,
+                            unroll=unroll, seed=seed)
+    state, hist = eng.run(state, it, num_meta_steps=steps, log_every=max(steps // 4, 1))
+    return state, eng
+
+
+def train_plain(model: Model, train, *, steps: int, seed: int = 0, batch: int = 32):
+    """No-meta-learning finetuning baseline."""
+
+    theta = model.init(jax.random.PRNGKey(seed))
+    opt = optim.adam(1e-3)
+    st = opt.init(theta)
+    rng = np.random.default_rng(seed)
+    n = len(train["tokens"])
+
+    def loss_fn(p, b):
+        pe = model.classifier_per_example(p, b)
+        return jnp.mean(pe.loss)
+
+    step = jax.jit(
+        lambda p, s, b: _sgd_step(loss_fn, opt, p, s, b)
+    )
+    for _ in range(steps):
+        idx = rng.integers(0, n, batch)
+        b = {"tokens": jnp.asarray(train["tokens"][idx]), "y": jnp.asarray(train["y"][idx])}
+        theta, st = step(theta, st, b)
+    return theta
+
+
+def _sgd_step(loss_fn, opt, p, s, b):
+    g = jax.grad(loss_fn)(p, b)
+    upd, s = opt.update(g, s, p)
+    return optim.apply_updates(p, upd), s

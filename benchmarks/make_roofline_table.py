@@ -1,0 +1,84 @@
+"""Render experiments/dryrun/*.json into the EXPERIMENTS.md roofline tables.
+
+    PYTHONPATH=src python -m benchmarks.make_roofline_table [--mesh pod16x16]
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+ARCH_ORDER = [
+    "gemma3-1b", "gemma3-27b", "gemma2-9b", "minicpm3-4b", "kimi-k2-1t-a32b",
+    "qwen2-moe-a2.7b", "zamba2-7b", "rwkv6-1.6b", "whisper-small",
+    "llama-3.2-vision-90b",
+]
+
+
+def fmt_s(x):
+    if x is None:
+        return "-"
+    if x < 1e-3:
+        return f"{x*1e6:.0f}us"
+    if x < 1.0:
+        return f"{x*1e3:.1f}ms"
+    return f"{x:.2f}s"
+
+
+def fmt_b(x):
+    if x is None:
+        return "-"
+    for unit, div in (("TB", 1e12), ("GB", 1e9), ("MB", 1e6), ("KB", 1e3)):
+        if x >= div:
+            return f"{x/div:.1f}{unit}"
+    return f"{x:.0f}B"
+
+
+def load(mesh: str):
+    rows = {}
+    for path in glob.glob(f"experiments/dryrun/*_{mesh}.json"):
+        with open(path) as f:
+            r = json.load(f)
+        base = os.path.basename(path)[: -len(f"_{mesh}.json")]
+        arch, shape = None, None
+        for s in SHAPE_ORDER:
+            if base.endswith("_" + s):
+                arch, shape = base[: -len(s) - 1], s
+        rows[(arch, shape)] = r
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="pod16x16")
+    args = ap.parse_args()
+    rows = load(args.mesh)
+
+    print(f"### Roofline — {args.mesh} ({'512' if 'pod2' in args.mesh else '256'} chips)\n")
+    print("| arch | shape | compute | memory | collective | dominant | useful | coll.bytes/dev | peak mem/dev | compile_s |")
+    print("|---|---|---|---|---|---|---|---|---|---|")
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            r = rows.get((arch, shape))
+            if r is None:
+                print(f"| {arch} | {shape} | — | — | — | MISSING | — | — | — | — |")
+                continue
+            if r["status"] == "skipped":
+                print(f"| {arch} | {shape} | — | — | — | skipped (full attention; DESIGN §4) | — | — | — | — |")
+                continue
+            if r["status"] == "error":
+                print(f"| {arch} | {shape} | — | — | — | ERROR | — | — | — | — |")
+                continue
+            print(
+                f"| {arch} | {shape} | {fmt_s(r['compute_s'])} | {fmt_s(r['memory_s'])} | "
+                f"{fmt_s(r['collective_s'])} | **{r['dominant']}** | {r['useful_ratio']:.2f} | "
+                f"{fmt_b(r['collective_bytes_per_device'])} | {fmt_b(r.get('peak_memory_bytes'))} | "
+                f"{r.get('compile_s', 0)} |"
+            )
+
+
+if __name__ == "__main__":
+    main()

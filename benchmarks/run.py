@@ -1,0 +1,51 @@
+"""Benchmark runner: one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--full] [--only NAME]
+
+Prints ``name,us_per_call,derived`` CSV rows.
+"""
+
+from __future__ import annotations
+
+import argparse
+import importlib
+import time
+import traceback
+
+BENCHES = [
+    "bench_biased_regression",  # Appendix E / Fig 5
+    "bench_wrench",  # Table 1
+    "bench_throughput_memory",  # Table 2 + Fig 1 left
+    "bench_memory_vs_modelsize",  # Fig 1 right
+    "bench_cont_pretrain",  # Table 3
+    "bench_data_pruning",  # Fig 3
+    "bench_ablation",  # Tables 8/9
+    "bench_distributed",  # Fig 2 / Table 2 multi-GPU structure
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true", help="full-size (slow) runs")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    print("name,us_per_call,derived")
+    failures = []
+    for name in BENCHES:
+        if args.only and args.only not in name:
+            continue
+        t0 = time.time()
+        try:
+            mod = importlib.import_module(f"benchmarks.{name}")
+            mod.main(fast=not args.full)
+            print(f"# {name} done in {time.time() - t0:.1f}s")
+        except Exception:
+            failures.append(name)
+            print(f"# {name} FAILED:\n# " + traceback.format_exc().replace("\n", "\n# "))
+    if failures:
+        raise SystemExit(f"benchmarks failed: {failures}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,72 @@
+"""Continued pretraining as SAMA-reweighted multitask learning (Sec. 4.2).
+
+The auxiliary corpus mixes in-domain and harmful data; SAMA learns to keep
+the former and suppress the latter, beating both ft-only and equal-weight
+multitask (TARTAN-MT) baselines on held-out finetune loss.
+
+    PYTHONPATH=src python examples/continued_pretrain.py [--steps 80]
+"""
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs, data, optim
+from repro.core import Engine, EngineConfig, problems
+from repro.core.meta_modules import apply_weight_net, weight_features
+from repro.models import Model
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=80)
+    args = ap.parse_args()
+
+    cfg = configs.get_smoke_config("gemma3-1b").replace(remat=False)
+    model = Model(cfg)
+    seq, batch = 32, 16
+
+    lm = data.LMStreamConfig(vocab_size=cfg.vocab_size, seq_len=seq, markov_strength=0.8)
+    rng = np.random.default_rng(0)
+    ft_train = data.lm_batch(lm, rng, 256)["tokens"]
+    ft_meta = data.lm_batch(lm, rng, 128)["tokens"]
+    ft_test = data.lm_batch(lm, rng, 256)["tokens"]
+    aux_in = data.lm_batch(lm, rng, 256)["tokens"]
+    aux_bad = rng.integers(0, cfg.vocab_size, size=(256, seq)).astype(np.int32)
+    aux = np.concatenate([aux_in, aux_bad])
+
+    spec = problems.make_auxiliary_spec(model.lm_loss, model.per_example)
+    lam = problems.init_data_optimization_lam(jax.random.PRNGKey(5), reweight=True)
+    eng = Engine(spec, base_opt=optim.adam(1e-3), meta_opt=optim.adam(3e-3),
+                 cfg=EngineConfig(method="sama", unroll_steps=2))
+    state = eng.init(model.init(jax.random.PRNGKey(0)), lam)
+
+    def batches():
+        while True:
+            fi = rng.integers(0, len(ft_train), (2, batch))
+            ai = rng.integers(0, len(aux), (2, batch))
+            mi = rng.integers(0, len(ft_meta), batch)
+            yield ({"ft": {"tokens": jnp.asarray(ft_train[fi])},
+                    "pt": {"tokens": jnp.asarray(aux[ai])}},
+                   {"ft": {"tokens": jnp.asarray(ft_meta[mi])}})
+
+    state, hist = eng.run(state, batches(), num_meta_steps=args.steps, log_every=20)
+    for h in hist:
+        print({k: round(v, 4) for k, v in h.items()})
+
+    pe = jax.jit(model.per_example)(state.theta, {"tokens": jnp.asarray(aux[::4])})
+    w = apply_weight_net(state.lam["reweight"], weight_features(pe.loss))
+    half = len(aux[::4]) // 2
+    print(f"aux weights: in-domain={float(jnp.mean(w[:half])):.3f} "
+          f"harmful={float(jnp.mean(w[half:])):.3f}")
+
+    lm_loss = jax.jit(model.lm_loss)
+    test = float(np.mean([float(lm_loss(state.theta, {"tokens": jnp.asarray(ft_test[i:i+64])}))
+                          for i in range(0, 256, 64)]))
+    print(f"held-out finetune loss after SAMA multitask: {test:.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,102 @@
+"""Appendix D analog: does few-shot meta learning improve with model SCALE
+under SAMA?
+
+iMAML-style setup: base level solves a regularized adaptation problem
+    theta*(task) = argmin L_task(theta) + (beta/2)||theta - lam||^2
+(lam = shared initialization = the meta learner), meta level evaluates the
+adapted model on the task's query set. We sweep the adapter width and report
+query accuracy — the paper's Fig. 4 question ("can scale replace algorithmic
+sophistication?") in miniature.
+
+    PYTHONPATH=src python examples/few_shot_scaling.py
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import optim
+from repro.core import BilevelSpec, EngineConfig, init_state, make_meta_step
+
+D_IN, N_WAY, K_SHOT, K_QUERY = 16, 5, 5, 10
+BETA = 1.0
+
+
+def sample_task(key):
+    """A random linear multiclass task: class prototypes + noisy samples."""
+    kp, ks, kq = jax.random.split(key, 3)
+    protos = jax.random.normal(kp, (N_WAY, D_IN))
+    ys = jnp.tile(jnp.arange(N_WAY), K_SHOT)
+    yq = jnp.tile(jnp.arange(N_WAY), K_QUERY)
+    xs = protos[ys] + 0.3 * jax.random.normal(ks, (N_WAY * K_SHOT, D_IN))
+    xq = protos[yq] + 0.3 * jax.random.normal(kq, (N_WAY * K_QUERY, D_IN))
+    return {"xs": xs, "ys": ys, "xq": xq, "yq": yq}
+
+
+def make_net(width):
+    def init(key):
+        k1, k2 = jax.random.split(key)
+        return {
+            "w1": jax.random.normal(k1, (D_IN, width)) / np.sqrt(D_IN),
+            "w2": jax.random.normal(k2, (width, N_WAY)) / np.sqrt(width),
+        }
+
+    def apply(p, x):
+        return jax.nn.relu(x @ p["w1"]) @ p["w2"]
+
+    return init, apply
+
+
+def run_width(width, meta_steps=150, seed=0):
+    init, apply = make_net(width)
+
+    def ce(p, x, y):
+        logp = jax.nn.log_softmax(apply(p, x), -1)
+        return -jnp.mean(jnp.take_along_axis(logp, y[:, None], 1))
+
+    # base: adapt on support with proximity to lam; meta: query loss
+    spec = BilevelSpec(
+        base_loss=lambda th, lam, b: ce(th, b["xs"], b["ys"])
+        + 0.5 * BETA * sum(jnp.sum((th[k] - lam[k]) ** 2) for k in th),
+        meta_loss=lambda th, lam, b: ce(th, b["xq"], b["yq"]),
+    )
+    base_opt = optim.adam(5e-2)
+    meta_opt = optim.adam(5e-3)
+    step = jax.jit(make_meta_step(spec, base_opt, meta_opt,
+                                  EngineConfig(method="sama", unroll_steps=5)))
+    lam = init(jax.random.PRNGKey(seed))
+    state = init_state(lam, lam, base_opt, meta_opt)
+
+    key = jax.random.PRNGKey(seed + 1)
+    for i in range(meta_steps):
+        key, kt = jax.random.split(key)
+        task = sample_task(kt)
+        batches = jax.tree_util.tree_map(lambda x: jnp.tile(x[None], (5,) + (1,) * x.ndim), task)
+        # fresh adaptation each task: theta restarts from lam
+        state = state._replace(theta=state.lam, base_opt_state=base_opt.init(state.lam))
+        state, metrics = step(state, batches, task)
+
+    # evaluate: adapt on 20 fresh tasks, measure query accuracy
+    accs = []
+    for t in range(20):
+        task = sample_task(jax.random.PRNGKey(10_000 + t))
+        th, st = state.lam, base_opt.init(state.lam)
+        for _ in range(10):
+            g = jax.grad(spec.base_scalar)(th, state.lam, task)
+            upd, st = base_opt.update(g, st, th)
+            th = optim.apply_updates(th, upd)
+        pred = jnp.argmax(apply(th, task["xq"]), -1)
+        accs.append(float(jnp.mean(pred == task["yq"])))
+    return float(np.mean(accs))
+
+
+def main():
+    print(f"{N_WAY}-way {K_SHOT}-shot, SAMA meta-learned initialization (iMAML-style)")
+    for width in (8, 32, 128):
+        acc = run_width(width)
+        print(f"  width {width:4d}: query accuracy {acc:.3f}")
+    print("(the paper's Appendix D observation: accuracy grows with width)")
+
+
+if __name__ == "__main__":
+    main()

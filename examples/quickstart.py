@@ -1,0 +1,65 @@
+"""Quickstart: SAMA data reweighting in ~60 lines.
+
+40% of the training labels are flipped; a small clean meta set guides
+MetaWeightNet to downweight the noise. Runs in under a minute on CPU.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import optim
+from repro.core import Engine, EngineConfig, problems
+from repro.core.meta_modules import apply_weight_net, weight_features
+
+# --- a tiny noisy classification problem -----------------------------------
+key = jax.random.PRNGKey(0)
+d, n = 16, 512
+w_true = jax.random.normal(key, (d,))
+X = jax.random.normal(jax.random.PRNGKey(1), (n, d))
+y_true = (X @ w_true > 0).astype(jnp.int32)
+corrupted = jnp.arange(n) < int(0.4 * n)
+y_noisy = jnp.where(corrupted, 1 - y_true, y_true)
+Xm = jax.random.normal(jax.random.PRNGKey(2), (256, d))
+ym = (Xm @ w_true > 0).astype(jnp.int32)
+
+# --- base model: logistic regression; meta learner: MetaWeightNet ----------
+def apply_fn(theta, x):
+    return x @ theta["w"] + theta["b"]
+
+spec = problems.make_data_optimization_spec(
+    problems.softmax_per_example(apply_fn), reweight=True
+)
+theta0 = {"w": jnp.zeros((d, 2)), "b": jnp.zeros((2,))}
+lam0 = problems.init_data_optimization_lam(jax.random.PRNGKey(3), reweight=True)
+
+engine = Engine(
+    spec,
+    base_opt=optim.adam(1e-2),
+    meta_opt=optim.adam(1e-2),
+    cfg=EngineConfig(method="sama", unroll_steps=2),  # the paper's algorithm
+)
+state = engine.init(theta0, lam0)
+
+rng = np.random.default_rng(0)
+
+def batches():
+    while True:
+        idx = rng.integers(0, n, (2, 64))
+        midx = rng.integers(0, 256, 64)
+        yield ({"x": X[idx], "y": y_noisy[idx]}, {"x": Xm[midx], "y": ym[midx]})
+
+state, history = engine.run(state, batches(), num_meta_steps=200, log_every=50)
+for h in history:
+    print({k: round(v, 4) for k, v in h.items()})
+
+# --- inspect what the meta learner decided ---------------------------------
+logits = apply_fn(state.theta, X)
+loss_i = -jnp.take_along_axis(jax.nn.log_softmax(logits, -1), y_noisy[:, None], 1)[:, 0]
+w = apply_weight_net(state.lam["reweight"], weight_features(loss_i))
+print(f"mean weight on clean samples:     {float(w[~corrupted].mean()):.3f}")
+print(f"mean weight on corrupted samples: {float(w[corrupted].mean()):.3f}")
+test_acc = float(jnp.mean((jnp.argmax(apply_fn(state.theta, Xm), -1) == ym)))
+print(f"clean test accuracy: {test_acc:.3f}")

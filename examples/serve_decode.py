@@ -1,0 +1,25 @@
+"""Batched serving demo: prefill + greedy decode through the per-family
+serve_step (KV cache for attention archs, recurrent state for SSM archs).
+
+    PYTHONPATH=src python examples/serve_decode.py --arch zamba2-7b
+    PYTHONPATH=src python examples/serve_decode.py --arch gemma2-9b
+"""
+
+import argparse
+
+from repro.launch import serve
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="rwkv6-1.6b")
+    args = ap.parse_args()
+
+    import sys
+    sys.argv = ["serve", "--arch", args.arch, "--smoke", "--batch", "4",
+                "--prompt-len", "12", "--gen", "12"]
+    serve.main()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+"""Checkpoint substrate: npz + JSON-manifest pytree save/restore."""
+
+from repro.checkpoint.checkpoint import latest_step, restore, save
+
+__all__ = ["latest_step", "restore", "save"]

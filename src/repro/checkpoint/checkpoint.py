@@ -1,0 +1,73 @@
+"""Pytree checkpointing: npz blobs + a JSON manifest (treedef + shapes +
+dtypes + user metadata), no external deps. Handles the full EngineState
+(both levels' params + optimizer states + step) for resume.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PyTree = Any
+
+MANIFEST = "manifest.json"
+ARRAYS = "arrays.npz"
+
+
+def _flatten_with_paths(tree: PyTree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    names, leaves = [], []
+    for path, leaf in flat:
+        names.append(jax.tree_util.keystr(path))
+        leaves.append(np.asarray(leaf))
+    return names, leaves, treedef
+
+
+def save(path: str, tree: PyTree, *, step: Optional[int] = None, meta: Optional[Dict] = None):
+    os.makedirs(path, exist_ok=True)
+    names, leaves, _ = _flatten_with_paths(tree)
+    np.savez(os.path.join(path, ARRAYS), **{f"a{i}": leaf for i, leaf in enumerate(leaves)})
+    manifest = {
+        "names": names,
+        "shapes": [list(l.shape) for l in leaves],
+        "dtypes": [str(l.dtype) for l in leaves],
+        "step": step,
+        "meta": meta or {},
+    }
+    with open(os.path.join(path, MANIFEST), "w") as f:
+        json.dump(manifest, f, indent=1)
+
+
+def restore(path: str, like: PyTree) -> Tuple[PyTree, Dict]:
+    """Restore into the structure of ``like`` (shape/dtype validated)."""
+
+    with open(os.path.join(path, MANIFEST)) as f:
+        manifest = json.load(f)
+    blobs = np.load(os.path.join(path, ARRAYS))
+    names, leaves_like, treedef = _flatten_with_paths(like)
+    if names != manifest["names"]:
+        raise ValueError(
+            f"checkpoint structure mismatch: {set(names) ^ set(manifest['names'])}"
+        )
+    restored = []
+    for i, (name, ref) in enumerate(zip(names, leaves_like)):
+        arr = blobs[f"a{i}"]
+        if list(arr.shape) != list(ref.shape):
+            raise ValueError(f"{name}: shape {arr.shape} != expected {ref.shape}")
+        restored.append(jnp.asarray(arr, dtype=ref.dtype))
+    tree = jax.tree_util.tree_unflatten(treedef, restored)
+    return tree, manifest
+
+
+def latest_step(root: str) -> Optional[str]:
+    """Given root/step_000123 layout, return the newest checkpoint dir."""
+
+    if not os.path.isdir(root):
+        return None
+    steps = sorted(d for d in os.listdir(root) if d.startswith("step_"))
+    return os.path.join(root, steps[-1]) if steps else None

@@ -1,0 +1,23 @@
+"""The paper's primary contribution: SAMA — scalable meta learning as
+bilevel optimization with (i) identity base-Jacobian approximation,
+(ii) analytic algorithmic adaptation for adaptive optimizers, and
+(iii) a single-sync distributed schedule (see launch.distributed)."""
+
+from repro.core.bilevel import BilevelSpec
+from repro.core.engine import Engine, EngineConfig, EngineState, init_state, make_meta_step
+from repro.core.sama import SAMAConfig, SAMAResult, sama_hypergrad
+from repro.core import baselines, meta_modules
+
+__all__ = [
+    "BilevelSpec",
+    "Engine",
+    "EngineConfig",
+    "EngineState",
+    "SAMAConfig",
+    "SAMAResult",
+    "baselines",
+    "init_state",
+    "make_meta_step",
+    "meta_modules",
+    "sama_hypergrad",
+]

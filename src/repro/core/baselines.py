@@ -1,0 +1,167 @@
+"""Baseline hypergradient algorithms the paper compares SAMA against
+(Fig. 1 table, Tables 2/8/9): iterative differentiation, Neumann series,
+conjugate gradient, and T1-T2 (DARTS one-step).
+
+All of these compute dL_meta/dlam for the same BilevelSpec, so the Engine can
+swap them in with a config string — that is exactly the paper's ablation
+surface. The second-order ones (Neumann, CG, iterative diff) use exact
+autodiff Hessian-vector products, which is what makes them slow and memory
+hungry at scale; we keep them exact so the benchmarks reproduce the paper's
+efficiency gaps honestly.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.bilevel import BilevelSpec
+from repro.optim import Optimizer, apply_updates
+
+PyTree = Any
+
+
+def _tmap(fn, *trees):
+    return jax.tree_util.tree_map(fn, *trees)
+
+
+def _vdot(a: PyTree, b: PyTree) -> jnp.ndarray:
+    leaves_a = jax.tree_util.tree_leaves(a)
+    leaves_b = jax.tree_util.tree_leaves(b)
+    return sum(jnp.vdot(x, y) for x, y in zip(leaves_a, leaves_b))
+
+
+def hvp(loss_theta, theta: PyTree, vec: PyTree) -> PyTree:
+    """Hessian-vector product d^2 L/dtheta^2 . vec via forward-over-reverse
+    (Pearlmutter). One extra linearization per call — the cost SAMA avoids."""
+
+    return jax.jvp(jax.grad(loss_theta), (theta,), (vec,))[1]
+
+
+def mixed_vjp(spec: BilevelSpec, theta, lam, base_batch, vec: PyTree) -> PyTree:
+    """Exact  d^2 L_base / dlam dtheta . vec  =  grad_lam <grad_theta L_base, vec>."""
+
+    def inner(lam_):
+        g_theta = jax.grad(spec.base_scalar, argnums=0)(theta, lam_, base_batch)
+        return _vdot(g_theta, vec)
+
+    return jax.grad(inner)(lam)
+
+
+# ---------------------------------------------------------------------------
+# Neumann series [Lorraine et al. 2020]
+# ---------------------------------------------------------------------------
+
+
+def neumann_hypergrad(
+    spec: BilevelSpec, theta, lam, base_batch, meta_batch,
+    *, num_terms: int = 5, scale: float = 0.1,
+):
+    """inv(H) g  ~=  scale * sum_i (I - scale*H)^i g, truncated."""
+
+    g_meta = jax.grad(spec.meta_scalar, argnums=0)(theta, lam, meta_batch)
+    loss_theta = lambda th: spec.base_scalar(th, lam, base_batch)
+
+    def body(_, carry):
+        p, acc = carry
+        hp = hvp(loss_theta, theta, p)
+        p = _tmap(lambda a, b: a - scale * b, p, hp)
+        acc = _tmap(jnp.add, acc, p)
+        return p, acc
+
+    p0 = g_meta
+    acc0 = g_meta
+    _, acc = jax.lax.fori_loop(0, num_terms, body, (p0, acc0))
+    inv_hvp = _tmap(lambda x: scale * x, acc)
+    return _tmap(jnp.negative, mixed_vjp(spec, theta, lam, base_batch, inv_hvp))
+
+
+# ---------------------------------------------------------------------------
+# Conjugate gradient [Rajeswaran et al. 2019, iMAML]
+# ---------------------------------------------------------------------------
+
+
+def cg_hypergrad(
+    spec: BilevelSpec, theta, lam, base_batch, meta_batch,
+    *, num_iters: int = 5, damping: float = 1e-3,
+):
+    """Solve (H + damping I) x = g_meta with CG, then -mixed_vjp(x)."""
+
+    g_meta = jax.grad(spec.meta_scalar, argnums=0)(theta, lam, meta_batch)
+    loss_theta = lambda th: spec.base_scalar(th, lam, base_batch)
+
+    def matvec(x):
+        h = hvp(loss_theta, theta, x)
+        return _tmap(lambda hx, xi: hx + damping * xi, h, x)
+
+    x0 = _tmap(jnp.zeros_like, g_meta)
+    r0 = g_meta
+    p0 = g_meta
+    rs0 = _vdot(r0, r0)
+
+    def body(_, carry):
+        x, r, p, rs = carry
+        ap = matvec(p)
+        alpha = rs / jnp.maximum(_vdot(p, ap), 1e-30)
+        x = _tmap(lambda xi, pi: xi + alpha * pi, x, p)
+        r = _tmap(lambda ri, api: ri - alpha * api, r, ap)
+        rs_new = _vdot(r, r)
+        beta = rs_new / jnp.maximum(rs, 1e-30)
+        p = _tmap(lambda ri, pi: ri + beta * pi, r, p)
+        return x, r, p, rs_new
+
+    x, *_ = jax.lax.fori_loop(0, num_iters, body, (x0, r0, p0, rs0))
+    return _tmap(jnp.negative, mixed_vjp(spec, theta, lam, base_batch, x))
+
+
+# ---------------------------------------------------------------------------
+# T1-T2 / DARTS one-step [Luketina et al. 2016; Liu et al. 2019]
+# ---------------------------------------------------------------------------
+
+
+def t1t2_hypergrad(spec: BilevelSpec, theta, lam, base_batch, meta_batch):
+    """Identity base-Jacobian, *no* optimizer adaptation, exact mixed VJP.
+    (SAMA-NA with central difference replaced by the exact second-order
+    product — the classical formulation.)"""
+
+    g_meta = jax.grad(spec.meta_scalar, argnums=0)(theta, lam, meta_batch)
+    return _tmap(jnp.negative, mixed_vjp(spec, theta, lam, base_batch, g_meta))
+
+
+# ---------------------------------------------------------------------------
+# Iterative differentiation [MAML-style unrolled]
+# ---------------------------------------------------------------------------
+
+
+def iterdiff_hypergrad(
+    spec: BilevelSpec, theta, lam, base_batches, meta_batch,
+    *, base_opt: Optimizer,
+):
+    """Differentiate through K unrolled optimizer steps. ``base_batches`` is a
+    pytree with a leading unroll axis. Memory grows with K — the point the
+    paper makes against iterative differentiation."""
+
+    def unrolled_meta_loss(lam_):
+        state = base_opt.init(theta)
+
+        def step(carry, batch):
+            th, st = carry
+            g = jax.grad(spec.base_scalar, argnums=0)(th, lam_, batch)
+            upd, st = base_opt.update(g, st, th)
+            return (apply_updates(th, upd), st), None
+
+        (theta_k, _), _ = jax.lax.scan(step, (theta, state), base_batches)
+        return spec.meta_scalar(theta_k, lam_, meta_batch)
+
+    return jax.grad(unrolled_meta_loss)(lam)
+
+
+HYPERGRAD_BASELINES = {
+    "neumann": neumann_hypergrad,
+    "cg": cg_hypergrad,
+    "t1t2": t1t2_hypergrad,
+    "iterdiff": iterdiff_hypergrad,
+}

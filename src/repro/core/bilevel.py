@@ -1,0 +1,39 @@
+"""Bilevel problem specification.
+
+A meta-learning program (paper Sec. 2) is
+
+    lam* = argmin_lam  L_meta(D_meta; theta*(lam))
+    s.t. theta*(lam) = argmin_theta L_base(D_base; theta, lam)
+
+We capture it as two pure scalar loss functions over pytrees. Everything in
+``core`` (SAMA + baseline hypergradient algorithms, the Engine) is generic
+over this spec — data reweighting, label correction, auxiliary-loss
+reweighting and the biased-regression sanity problem are all instances.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+PyTree = Any
+Batch = Any
+LossFn = Callable[[PyTree, PyTree, Batch], Any]  # (theta, lam, batch) -> scalar
+
+
+@dataclasses.dataclass(frozen=True)
+class BilevelSpec:
+    """The bilevel program. Loss functions must be jit-safe and return a
+    scalar (or (scalar, aux) when ``has_aux``)."""
+
+    base_loss: LossFn
+    meta_loss: LossFn
+    has_aux: bool = False
+
+    def base_scalar(self, theta, lam, batch):
+        out = self.base_loss(theta, lam, batch)
+        return out[0] if self.has_aux else out
+
+    def meta_scalar(self, theta, lam, batch):
+        out = self.meta_loss(theta, lam, batch)
+        return out[0] if self.has_aux else out

@@ -1,0 +1,191 @@
+"""The meta-training Engine.
+
+One ``meta_step`` = K unrolled base optimizer steps + one meta update, with
+the hypergradient algorithm selected by config ("sama", "sama_na", "t1t2",
+"neumann", "cg", "iterdiff") — this is the paper's whole ablation surface
+(Tables 8/9) behind one switch.
+
+The Engine builds a *pure* step function (state, base_batches, meta_batch) ->
+(state, metrics) so it can be jit'ed on one device (benchmarks, examples) or
+handed to the launcher which wraps it in pjit/shard_map for the production
+mesh. ``base_batches`` carries a leading unroll axis of length K.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import baselines as bl
+from repro.core import sama as sama_mod
+from repro.core.bilevel import BilevelSpec
+from repro.optim import Optimizer, OptState, apply_updates
+
+PyTree = Any
+
+METHODS = ("sama", "sama_na", "t1t2", "neumann", "cg", "iterdiff")
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    method: str = "sama"
+    unroll_steps: int = 1
+    alpha: float = 1.0  # SAMA perturbation scale
+    base_nudge: bool = True
+    adapt_clip: float = 0.0  # see SAMAConfig.adapt_clip
+    # baseline-specific knobs
+    neumann_terms: int = 5
+    neumann_scale: float = 0.1
+    cg_iters: int = 5
+    cg_damping: float = 1e-3
+
+    def __post_init__(self):
+        if self.method not in METHODS:
+            raise ValueError(f"method {self.method!r} not in {METHODS}")
+
+    @property
+    def sama_cfg(self) -> sama_mod.SAMAConfig:
+        return sama_mod.SAMAConfig(
+            alpha=self.alpha,
+            adapt=(self.method == "sama"),
+            base_nudge=self.base_nudge and self.method in ("sama", "sama_na"),
+            adapt_clip=self.adapt_clip,
+        )
+
+
+class EngineState(NamedTuple):
+    theta: PyTree
+    base_opt_state: OptState
+    lam: PyTree
+    meta_opt_state: OptState
+    step: jnp.ndarray
+
+
+def init_state(theta: PyTree, lam: PyTree, base_opt: Optimizer, meta_opt: Optimizer) -> EngineState:
+    return EngineState(
+        theta=theta,
+        base_opt_state=base_opt.init(theta),
+        lam=lam,
+        meta_opt_state=meta_opt.init(lam),
+        step=jnp.zeros([], jnp.int32),
+    )
+
+
+def _unroll_base(spec: BilevelSpec, base_opt: Optimizer, theta, opt_state, lam, base_batches):
+    """K base optimizer steps via lax.scan. Carries the last base gradient and
+    the optimizer state *at which it was computed* — SAMA's adaptation matrix
+    is evaluated there (paper footnote 2: no extra backward pass)."""
+
+    g0 = jax.tree_util.tree_map(jnp.zeros_like, theta)
+
+    def step(carry, batch):
+        th, st, _, _ = carry
+        loss, g = jax.value_and_grad(spec.base_scalar, argnums=0)(th, lam, batch)
+        upd, st_new = base_opt.update(g, st, th)
+        th_new = apply_updates(th, upd)
+        return (th_new, st_new, g, st), loss
+
+    init = (theta, opt_state, g0, opt_state)
+    (theta, opt_state, g_last, st_at_g), losses = jax.lax.scan(step, init, base_batches)
+    return theta, opt_state, g_last, st_at_g, losses
+
+
+def make_meta_step(
+    spec: BilevelSpec,
+    base_opt: Optimizer,
+    meta_opt: Optimizer,
+    cfg: EngineConfig = EngineConfig(),
+) -> Callable[[EngineState, Any, Any], Tuple[EngineState, Dict[str, jnp.ndarray]]]:
+    """Build the pure meta-step function."""
+
+    def meta_step(state: EngineState, base_batches, meta_batch):
+        theta0 = state.theta
+
+        theta, b_state, g_base, st_at_g, base_losses = _unroll_base(
+            spec, base_opt, state.theta, state.base_opt_state, state.lam, base_batches
+        )
+
+        last_batch = jax.tree_util.tree_map(lambda x: x[-1], base_batches)
+        eps = jnp.zeros([], jnp.float32)
+
+        if cfg.method in ("sama", "sama_na"):
+            res = sama_mod.sama_hypergrad(
+                spec, theta, state.lam, last_batch, meta_batch,
+                base_opt=base_opt, base_opt_state=st_at_g, g_base=g_base,
+                cfg=cfg.sama_cfg,
+            )
+            hyper, meta_loss, eps = res.hypergrad, res.meta_loss, res.eps
+            theta = sama_mod.apply_base_nudge(theta, res.v, res.eps, cfg.sama_cfg)
+        elif cfg.method == "t1t2":
+            meta_loss = spec.meta_scalar(theta, state.lam, meta_batch)
+            hyper = bl.t1t2_hypergrad(spec, theta, state.lam, last_batch, meta_batch)
+        elif cfg.method == "neumann":
+            meta_loss = spec.meta_scalar(theta, state.lam, meta_batch)
+            hyper = bl.neumann_hypergrad(
+                spec, theta, state.lam, last_batch, meta_batch,
+                num_terms=cfg.neumann_terms, scale=cfg.neumann_scale,
+            )
+        elif cfg.method == "cg":
+            meta_loss = spec.meta_scalar(theta, state.lam, meta_batch)
+            hyper = bl.cg_hypergrad(
+                spec, theta, state.lam, last_batch, meta_batch,
+                num_iters=cfg.cg_iters, damping=cfg.cg_damping,
+            )
+        elif cfg.method == "iterdiff":
+            # MAML-style: the hypergradient differentiates through the whole
+            # unroll from theta0 (memory ~ K backward graphs).
+            meta_loss = spec.meta_scalar(theta, state.lam, meta_batch)
+            hyper = bl.iterdiff_hypergrad(
+                spec, theta0, state.lam, base_batches, meta_batch, base_opt=base_opt
+            )
+        else:  # pragma: no cover
+            raise AssertionError(cfg.method)
+
+        upd, m_state = meta_opt.update(hyper, state.meta_opt_state, state.lam)
+        lam = apply_updates(state.lam, upd)
+
+        metrics = {
+            "base_loss": jnp.mean(base_losses),
+            "meta_loss": meta_loss,
+            "hypergrad_norm": sama_mod.global_norm(hyper),
+            "eps": eps,
+        }
+        new_state = EngineState(
+            theta=theta,
+            base_opt_state=b_state,
+            lam=lam,
+            meta_opt_state=m_state,
+            step=state.step + 1,
+        )
+        return new_state, metrics
+
+    return meta_step
+
+
+class Engine:
+    """Convenience single-process driver around the pure step function."""
+
+    def __init__(self, spec, base_opt, meta_opt, cfg: EngineConfig = EngineConfig(), jit: bool = True):
+        self.spec = spec
+        self.base_opt = base_opt
+        self.meta_opt = meta_opt
+        self.cfg = cfg
+        step = make_meta_step(spec, base_opt, meta_opt, cfg)
+        self.step_fn = jax.jit(step) if jit else step
+
+    def init(self, theta, lam) -> EngineState:
+        return init_state(theta, lam, self.base_opt, self.meta_opt)
+
+    def run(self, state: EngineState, batch_iter, num_meta_steps: int, log_every: int = 0):
+        """batch_iter yields (base_batches[K], meta_batch)."""
+
+        history = []
+        for i in range(num_meta_steps):
+            base_batches, meta_batch = next(batch_iter)
+            state, metrics = self.step_fn(state, base_batches, meta_batch)
+            if log_every and (i % log_every == 0 or i == num_meta_steps - 1):
+                history.append({k: float(v) for k, v in metrics.items()} | {"step": i})
+        return state, history

@@ -1,0 +1,90 @@
+"""Meta-learner modules (the lambda side of the bilevel program).
+
+The paper's data-optimization experiments use small MLP meta learners:
+
+* MetaWeightNet [58]-style reweighting net ``w(features; lam_r)`` — here with
+  the paper's Sec. 4.3 extension of feeding prediction *uncertainty* next to
+  the loss value.
+* Label corrector ``c(x, y; lam_c)`` [70] producing a corrected soft label
+  from (stop-grad) model beliefs and the observed noisy label.
+
+Both are plain pytrees + pure apply functions, so they ride along with any
+architecture and shard trivially (they are tiny and replicated).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+def _dense_init(key, n_in, n_out, scale=None):
+    scale = scale if scale is not None else 1.0 / jnp.sqrt(n_in)
+    wkey, _ = jax.random.split(key)
+    return {
+        "w": jax.random.normal(wkey, (n_in, n_out), dtype=jnp.float32) * scale,
+        "b": jnp.zeros((n_out,), jnp.float32),
+    }
+
+
+def _dense(p, x):
+    return x @ p["w"] + p["b"]
+
+
+# ---------------------------------------------------------------------------
+# MetaWeightNet
+# ---------------------------------------------------------------------------
+
+
+def init_weight_net(key, in_dim: int = 2, hidden: int = 100) -> PyTree:
+    k1, k2 = jax.random.split(key)
+    return {"l1": _dense_init(k1, in_dim, hidden), "l2": _dense_init(k2, hidden, 1)}
+
+
+def apply_weight_net(params: PyTree, feats: jnp.ndarray) -> jnp.ndarray:
+    """feats: (B, in_dim) — typically [loss, uncertainty]. Returns (B,) weights
+    in (0, 1). Features are stop-gradiented by the caller (they come from the
+    base model); lambda only flows through the MLP."""
+
+    h = jax.nn.relu(_dense(params["l1"], feats))
+    return jax.nn.sigmoid(_dense(params["l2"], h))[..., 0]
+
+
+def weight_features(per_sample_loss: jnp.ndarray, uncertainty: jnp.ndarray = None) -> jnp.ndarray:
+    """Assemble (and detach) the MWN input features."""
+
+    feats = [jax.lax.stop_gradient(per_sample_loss)]
+    if uncertainty is not None:
+        feats.append(jax.lax.stop_gradient(uncertainty))
+    return jnp.stack(feats, axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Label corrector
+# ---------------------------------------------------------------------------
+
+
+def init_label_corrector(key, num_classes: int, hidden: int = 128) -> PyTree:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "l1": _dense_init(k1, 2 * num_classes, hidden),
+        "l2": _dense_init(k2, hidden, num_classes),
+        "mix": _dense_init(k3, hidden, 1),
+    }
+
+
+def apply_label_corrector(
+    params: PyTree, model_probs: jnp.ndarray, noisy_onehot: jnp.ndarray
+) -> jnp.ndarray:
+    """Returns corrected soft labels (B, C): a learned convex mix of the
+    observed noisy label and an MLP-proposed distribution."""
+
+    x = jnp.concatenate([jax.lax.stop_gradient(model_probs), noisy_onehot], axis=-1)
+    h = jax.nn.relu(_dense(params["l1"], x))
+    proposed = jax.nn.softmax(_dense(params["l2"], h), axis=-1)
+    gate = jax.nn.sigmoid(_dense(params["mix"], h))  # (B, 1)
+    return (1.0 - gate) * noisy_onehot + gate * proposed

@@ -1,0 +1,136 @@
+"""Builders that assemble BilevelSpecs for the paper's data-optimization
+applications (Sec. 4):
+
+* ``make_data_optimization_spec`` — noisy-data reweighting (+ optional label
+  correction), Sec. 4.1 / data pruning Sec. 4.3 (with uncertainty feature).
+* ``make_auxiliary_spec`` — continued-pretraining auxiliary-loss reweighting
+  (TARTAN-style multitask), Sec. 4.2.
+
+They are model-agnostic: the caller supplies a ``per_example_fn`` that maps
+(theta, batch) to per-sample quantities; any architecture in ``repro.models``
+plugs in through its loss adapter.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.bilevel import BilevelSpec
+from repro.core import meta_modules as mm
+
+PyTree = Any
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class PerExample:
+    """Per-sample quantities from the base model on one batch (a pytree, so
+    it can cross jit/grad boundaries)."""
+
+    loss: jnp.ndarray  # (B,) per-sample loss under the *observed* labels
+    logits: Optional[jnp.ndarray] = None  # (B, C) — needed for label correction
+    label_onehot: Optional[jnp.ndarray] = None  # (B, C)
+    uncertainty: Optional[jnp.ndarray] = None  # (B,)
+
+
+PerExampleFn = Callable[[PyTree, Any], PerExample]
+
+
+def init_data_optimization_lam(
+    key,
+    *,
+    reweight: bool = True,
+    correct: bool = False,
+    num_classes: Optional[int] = None,
+    use_uncertainty: bool = False,
+    hidden: int = 100,
+) -> PyTree:
+    lam = {}
+    k1, k2 = jax.random.split(key)
+    if reweight:
+        in_dim = 2 if use_uncertainty else 1
+        lam["reweight"] = mm.init_weight_net(k1, in_dim=in_dim, hidden=hidden)
+    if correct:
+        assert num_classes is not None, "label correction needs num_classes"
+        lam["correct"] = mm.init_label_corrector(k2, num_classes=num_classes)
+    return lam
+
+
+def make_data_optimization_spec(
+    per_example_fn: PerExampleFn,
+    *,
+    reweight: bool = True,
+    correct: bool = False,
+    use_uncertainty: bool = False,
+) -> BilevelSpec:
+    """Sec. 4.1:  min_lam L(D_clean; theta*)  s.t.
+    theta* = argmin mean_i w(L_i; lam_r) * CE(f(x_i), c(x_i, y_i; lam_c))."""
+
+    def base_loss(theta, lam, batch):
+        pe = per_example_fn(theta, batch)
+        loss_i = pe.loss
+        if correct:
+            probs = jax.nn.softmax(pe.logits, axis=-1)
+            corrected = mm.apply_label_corrector(lam["correct"], probs, pe.label_onehot)
+            logp = jax.nn.log_softmax(pe.logits, axis=-1)
+            loss_i = -jnp.sum(corrected * logp, axis=-1)
+        if reweight:
+            feats = mm.weight_features(
+                loss_i, pe.uncertainty if use_uncertainty else None
+            )
+            w = mm.apply_weight_net(lam["reweight"], feats)
+            return jnp.mean(w * loss_i)
+        return jnp.mean(loss_i)
+
+    def meta_loss(theta, lam, batch):
+        del lam  # the meta loss is plain risk on clean/meta data
+        pe = per_example_fn(theta, batch)
+        return jnp.mean(pe.loss)
+
+    return BilevelSpec(base_loss=base_loss, meta_loss=meta_loss)
+
+
+def make_auxiliary_spec(
+    ft_loss_fn: Callable[[PyTree, Any], jnp.ndarray],  # (theta, batch)->scalar
+    pt_per_example_fn: Callable[[PyTree, Any], PerExample],
+    *,
+    use_uncertainty: bool = False,
+) -> BilevelSpec:
+    """Sec. 4.2: one-stage multitask continued pretraining
+    base = L_ft + mean_i w(x_i; lam) * L_pt,i ;  meta = L_ft."""
+
+    def base_loss(theta, lam, batch):
+        ft_batch, pt_batch = batch["ft"], batch["pt"]
+        ft = ft_loss_fn(theta, ft_batch)
+        pe = pt_per_example_fn(theta, pt_batch)
+        feats = mm.weight_features(pe.loss, pe.uncertainty if use_uncertainty else None)
+        w = mm.apply_weight_net(lam["reweight"], feats)
+        return ft + jnp.mean(w * pe.loss)
+
+    def meta_loss(theta, lam, batch):
+        del lam
+        return ft_loss_fn(theta, batch["ft"])
+
+    return BilevelSpec(base_loss=base_loss, meta_loss=meta_loss)
+
+
+def softmax_per_example(apply_fn: Callable[[PyTree, jnp.ndarray], jnp.ndarray]) -> PerExampleFn:
+    """Adapter for plain classifiers: batch = {'x': (B, ...), 'y': (B,) int}.
+    Uncertainty is predictive entropy (cheap stand-in for the paper's
+    EMA-disagreement; the EMA variant lives in benchmarks/data pruning)."""
+
+    def fn(theta, batch):
+        logits = apply_fn(theta, batch["x"])
+        num_classes = logits.shape[-1]
+        onehot = jax.nn.one_hot(batch["y"], num_classes, dtype=logits.dtype)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        loss = -jnp.sum(onehot * logp, axis=-1)
+        p = jnp.exp(logp)
+        entropy = -jnp.sum(p * logp, axis=-1)
+        return PerExample(loss=loss, logits=logits, label_onehot=onehot, uncertainty=entropy)
+
+    return fn

@@ -1,0 +1,147 @@
+"""SAMA meta-gradient (paper Sec. 3, Eqs. 3-5).
+
+The meta gradient is approximated by
+
+    dL_meta/dlam  ~=  -(d/dlam L_base(theta+, lam) - d/dlam L_base(theta-, lam)) / (2 eps)
+
+with
+    theta+- = theta* +- eps * v
+    v       = (du/dg) .* dL_meta/dtheta*          (algorithmic adaptation)
+    eps     = alpha / ||v||_2                      (DARTS-style step size)
+
+Only *first-order* backward passes appear:
+    pass 1: g_meta = grad_theta L_meta          (local, no sync needed)
+    pass 2: grad_lam L_base(theta+)             (local)
+    pass 3: grad_lam L_base(theta-)             (synced once, in the caller)
+
+The adaptation diagonal du/dg is analytic (repro.optim.Optimizer.adaptation)
+and reuses the base gradient stored from the most recent unroll step — no
+extra backward pass (paper footnote 2). The single gradient synchronization
+point of the distributed schedule lives in ``launch.distributed``, not here:
+this module is purely local math so that it composes with pjit and shard_map
+alike.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.bilevel import BilevelSpec
+from repro.optim import Optimizer, OptState
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class SAMAConfig:
+    alpha: float = 1.0  # perturbation scale; paper finds 1.0 robust (Sec 3.2)
+    adapt: bool = True  # False => SAMA-NA ablation (no algorithmic adaptation)
+    base_nudge: bool = True  # theta <- theta - eps*v at meta updates (F2SA/BOME-style)
+    eps_floor: float = 1e-12
+    # Mitigation for the cold-state Adam pathology (see DESIGN.md §6 note):
+    # on coordinates where the base optimizer state is cold (m=v=0, g~0) the
+    # exact Adam adaptation diagonal is ~lr/eps_adam (huge), so v concentrates
+    # on base-dead coordinates and the central difference underflows. Clipping
+    # |du/dg| at adapt_clip bounds their influence. 0 disables (paper-exact).
+    adapt_clip: float = 0.0
+
+
+class SAMAResult(NamedTuple):
+    hypergrad: PyTree  # dL_meta/dlam
+    v: PyTree  # perturbation direction (du/dg .* g_meta)
+    eps: jnp.ndarray  # scalar step size
+    meta_loss: jnp.ndarray
+
+
+def _tmap(fn, *trees):
+    return jax.tree_util.tree_map(fn, *trees)
+
+
+def global_norm(tree: PyTree) -> jnp.ndarray:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves))
+
+
+def perturbation_direction(
+    spec: BilevelSpec,
+    theta: PyTree,
+    lam: PyTree,
+    meta_batch,
+    *,
+    base_opt: Optimizer,
+    base_opt_state: OptState,
+    g_base: Optional[PyTree],
+    cfg: SAMAConfig,
+):
+    """Backward pass 1 + the (analytic, backprop-free) adaptation product."""
+
+    meta_loss, g_meta = jax.value_and_grad(spec.meta_scalar, argnums=0)(theta, lam, meta_batch)
+    if cfg.adapt:
+        if g_base is None:
+            raise ValueError("algorithmic adaptation needs the last base gradient g_base")
+        a = base_opt.adaptation(g_base, base_opt_state, theta)
+        if cfg.adapt_clip:
+            a = _tmap(lambda ai: jnp.clip(ai, -cfg.adapt_clip, cfg.adapt_clip), a)
+        v = _tmap(lambda ai, gi: ai * gi, a, g_meta)
+    else:
+        v = g_meta
+    return meta_loss, v
+
+
+def central_difference_hypergrad(
+    spec: BilevelSpec,
+    theta: PyTree,
+    lam: PyTree,
+    base_batch,
+    v: PyTree,
+    *,
+    cfg: SAMAConfig,
+):
+    """Backward passes 2+3: the finite-difference mixed second derivative
+
+        d^2 L_base / dlam dtheta . v
+            ~= (grad_lam L_base(theta + eps v) - grad_lam L_base(theta - eps v)) / (2 eps)
+    """
+
+    eps = cfg.alpha / jnp.maximum(global_norm(v), cfg.eps_floor)
+    theta_p = _tmap(lambda t, vi: t + eps * vi.astype(t.dtype), theta, v)
+    theta_m = _tmap(lambda t, vi: t - eps * vi.astype(t.dtype), theta, v)
+    gl_p = jax.grad(spec.base_scalar, argnums=1)(theta_p, lam, base_batch)
+    gl_m = jax.grad(spec.base_scalar, argnums=1)(theta_m, lam, base_batch)
+    hyper = _tmap(lambda p, m: -(p - m) / (2.0 * eps), gl_p, gl_m)
+    return hyper, eps
+
+
+def sama_hypergrad(
+    spec: BilevelSpec,
+    theta: PyTree,
+    lam: PyTree,
+    base_batch,
+    meta_batch,
+    *,
+    base_opt: Optimizer,
+    base_opt_state: OptState,
+    g_base: Optional[PyTree] = None,
+    cfg: SAMAConfig = SAMAConfig(),
+) -> SAMAResult:
+    """The full (single-device / local-shard) SAMA meta gradient."""
+
+    meta_loss, v = perturbation_direction(
+        spec, theta, lam, meta_batch,
+        base_opt=base_opt, base_opt_state=base_opt_state, g_base=g_base, cfg=cfg,
+    )
+    hyper, eps = central_difference_hypergrad(spec, theta, lam, base_batch, v, cfg=cfg)
+    return SAMAResult(hypergrad=hyper, v=v, eps=eps, meta_loss=meta_loss)
+
+
+def apply_base_nudge(theta: PyTree, v: PyTree, eps: jnp.ndarray, cfg: SAMAConfig) -> PyTree:
+    """theta <- theta - eps*v (paper Sec. 3.2, final paragraph). The direct
+    meta gradient is injected into the base parameters every meta update."""
+
+    if not cfg.base_nudge:
+        return theta
+    return _tmap(lambda t, vi: (t - eps * vi.astype(t.dtype)).astype(t.dtype), theta, v)

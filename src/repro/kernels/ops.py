@@ -1,0 +1,43 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+On this CPU container the kernels execute in ``interpret=True`` mode (the
+kernel body runs as traced jnp ops); on a TPU runtime set
+``repro.kernels.ops.INTERPRET = False`` (or export REPRO_PALLAS_COMPILE=1) to
+compile them for real. The jnp oracles in ``ref.py`` stay the numerical
+ground truth either way.
+"""
+
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import adam_adapt as _adam
+from repro.kernels import weighted_ce as _wce
+from repro.kernels import ref
+
+INTERPRET = os.environ.get("REPRO_PALLAS_COMPILE", "0") != "1"
+
+
+def cross_entropy(logits: jnp.ndarray, targets: jnp.ndarray) -> jnp.ndarray:
+    """Per-token CE for (..., V) logits and (...,) int targets, via the
+    blockwise-vocab Pallas kernel (differentiable)."""
+
+    shape = targets.shape
+    r = int(jnp.prod(jnp.asarray(shape))) if shape else 1
+    logits2 = logits.reshape(r, logits.shape[-1])
+    targets1 = targets.reshape(r)
+    ce = _wce.cross_entropy(logits2, targets1, INTERPRET)
+    return ce.reshape(shape)
+
+
+def adam_adapt_product(g, m, v, g_meta, *, t, b1=0.9, b2=0.999, eps=1e-8, lr=1.0):
+    """Fused SAMA adaptation product over a flat array."""
+    return _adam.adam_adapt_product(
+        g, m, v, g_meta, t=t, b1=b1, b2=b2, eps=eps, lr=lr, interpret=INTERPRET
+    )
+
+
+__all__ = ["INTERPRET", "adam_adapt_product", "cross_entropy", "ref"]

@@ -1,0 +1,49 @@
+"""Pure-jnp oracles for every Pallas kernel. Tests assert_allclose the
+kernels (interpret mode on CPU) against these across shape/dtype sweeps.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def cross_entropy(logits: jnp.ndarray, targets: jnp.ndarray) -> jnp.ndarray:
+    """logits: (R, V); targets: (R,) int. Returns per-row CE (R,) f32."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    tgt = jnp.take_along_axis(logits, targets[:, None], axis=-1)[:, 0]
+    return lse - tgt
+
+
+def cross_entropy_grad(logits, targets, g):
+    """d(sum g_r * CE_r)/dlogits: (softmax - onehot) * g."""
+    logits32 = logits.astype(jnp.float32)
+    p = jax.nn.softmax(logits32, axis=-1)
+    onehot = jax.nn.one_hot(targets, logits.shape[-1], dtype=jnp.float32)
+    return ((p - onehot) * g[:, None]).astype(logits.dtype)
+
+
+def adam_adapt_product(g, m, v, g_meta, *, t, b1, b2, eps, lr):
+    """SAMA perturbation direction for Adam (paper Appendix C, exact):
+    out = (du_adam/dg)|_(g, m, v, t) * g_meta, elementwise. All f32.
+    Also returns sum(out^2) for the eps = alpha/||v|| step size."""
+
+    g = g.astype(jnp.float32)
+    m = m.astype(jnp.float32)
+    v = v.astype(jnp.float32)
+    g_meta = g_meta.astype(jnp.float32)
+
+    bc1 = 1.0 - b1**t
+    bc2 = 1.0 - b2**t
+    m1 = b1 * m + (1.0 - b1) * g
+    v1 = b2 * v + (1.0 - b2) * g * g
+    mhat = m1 / bc1
+    vhat = v1 / bc2
+    denom = jnp.sqrt(vhat) + eps
+    a = (1.0 - b1) / bc1
+    b = (1.0 - b2) / bc2
+    safe_sqrt = jnp.maximum(jnp.sqrt(vhat), 1e-15)
+    diag = lr * (a / denom - mhat * b * g / (safe_sqrt * denom * denom))
+    out = diag * g_meta
+    return out, jnp.sum(out * out)

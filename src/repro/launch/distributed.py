@@ -1,0 +1,161 @@
+"""The paper's distributed execution schedule (Fig. 2), in JAX.
+
+Two implementations of the same SAMA meta step:
+
+* ``make_pjit_step`` — "Betty-style DDP" baseline: the Engine's pure step
+  under jit; XLA inserts a gradient synchronization wherever the math needs
+  one. In particular the meta pass's theta-gradient (pass 1) gets a
+  model-sized all-reduce of its own.
+
+* ``make_manual_step`` — the paper's single-sync schedule via shard_map,
+  manual over the data axes, auto over "model":
+    passes 1-3 run on LOCAL shards with NO collective;
+    ONE bucketed pmean carries (hypergrad, v, eps, metrics) — the analogue
+    of PyTorch's single overlapped bucketed all-reduce. The base-level unroll
+    keeps its standard per-step DDP pmean (that sync exists in the paper's
+    base level too).
+
+  Statistically, the manual path averages per-shard central differences
+  (each with its own local eps); by linearity of the mixed second derivative
+  its expectation equals the pjit estimator's. With identical per-device
+  batches the two are exactly equal — that is what tests/test_distributed.py
+  pins, along with the collective-count claim, by parsing the lowered HLO.
+
+The base nudge (theta <- theta - eps*v) must keep replicas consistent, so v
+and eps ride inside the same single pmean bucket as the hypergradient —
+still one synchronization point.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core import sama as sama_mod
+from repro.core.bilevel import BilevelSpec
+from repro.core.engine import EngineConfig, EngineState, make_meta_step
+from repro.launch.mesh import data_axes
+from repro.optim import Optimizer, apply_updates
+
+PyTree = Any
+
+
+def make_pjit_step(spec: BilevelSpec, base_opt, meta_opt, cfg: EngineConfig):
+    """Naive DDP baseline: correctness by SPMD propagation."""
+    return make_meta_step(spec, base_opt, meta_opt, cfg)
+
+
+def make_manual_step(
+    spec: BilevelSpec,
+    base_opt: Optimizer,
+    meta_opt: Optimizer,
+    cfg: EngineConfig,
+    mesh,
+    axes=None,
+):
+    """SAMA's single-sync schedule. Returns a shard_map'ed step with the same
+    signature as the Engine step: (state, base_batches[K], meta_batch).
+
+    ``axes``: mesh axes to be *manual* data-parallel over (default: the
+    pod/data axes, leaving "model" to the auto partitioner). Passing ALL axes
+    gives pure DDP — the right configuration for models that fit per-device
+    (see §Perf pair 1)."""
+
+    dp = tuple(axes) if axes is not None else data_axes(mesh)
+    sama_cfg = cfg.sama_cfg
+    assert cfg.method in ("sama", "sama_na"), "manual schedule implements SAMA"
+
+    def local_step(state: EngineState, base_batches, meta_batch):
+        theta, b_state, lam = state.theta, state.base_opt_state, state.lam
+
+        # ---- base unroll: standard DDP (one pmean per base step) ----
+        g0 = jax.tree_util.tree_map(jnp.zeros_like, theta)
+
+        def base_one(carry, batch):
+            th, st, _, _ = carry
+            loss, g_loc = jax.value_and_grad(spec.base_scalar, argnums=0)(th, lam, batch)
+            g = jax.tree_util.tree_map(
+                lambda gl: jax.lax.pmean(gl.astype(jnp.float32), dp).astype(gl.dtype), g_loc
+            )
+            upd, st_new = base_opt.update(g, st, th)
+            return (apply_updates(th, upd), st_new, g, st), loss
+
+        (theta, b_state, g_base, st_at_g), losses = jax.lax.scan(
+            base_one, (theta, b_state, g0, b_state), base_batches
+        )
+        last_batch = jax.tree_util.tree_map(lambda x: x[-1], base_batches)
+
+        # ---- SAMA passes 1-3: strictly LOCAL (no collective) ----
+        meta_loss_loc, v_loc = sama_mod.perturbation_direction(
+            spec, theta, lam, meta_batch,
+            base_opt=base_opt, base_opt_state=st_at_g, g_base=g_base, cfg=sama_cfg,
+        )
+        hyper_loc, eps_loc = sama_mod.central_difference_hypergrad(
+            spec, theta, lam, last_batch, v_loc, cfg=sama_cfg
+        )
+
+        # ---- THE single synchronization point (one bucketed all-reduce) ----
+        # (f32 cast: XLA's AllReducePromotion pass crashes on bf16 variadic
+        # all-reduce on the CPU backend; on TPU this cast is also what DDP
+        # implementations do for reduction accuracy.)
+        bucket_in = jax.tree_util.tree_map(
+            lambda x: x.astype(jnp.float32), (hyper_loc, v_loc, eps_loc, meta_loss_loc)
+        )
+        hyper, v, eps, meta_loss = jax.lax.pmean(bucket_in, dp)
+
+        upd, m_state = meta_opt.update(hyper, state.meta_opt_state, lam)
+        lam = apply_updates(lam, upd)
+        theta = sama_mod.apply_base_nudge(theta, v, eps, sama_cfg)
+
+        metrics = {
+            "base_loss": jax.lax.pmean(jnp.mean(losses), dp),
+            "meta_loss": meta_loss,
+            "hypergrad_norm": sama_mod.global_norm(hyper),
+            "eps": eps,
+        }
+        new_state = EngineState(
+            theta=theta, base_opt_state=b_state, lam=lam,
+            meta_opt_state=m_state, step=state.step + 1,
+        )
+        return new_state, metrics
+
+    def batch_spec(t):
+        nd = len(t.shape)
+        return P(*((None, dp) + (None,) * (nd - 2)))  # (K, B, ...) -> shard B
+
+    def meta_spec(t):
+        nd = len(t.shape)
+        return P(*((dp,) + (None,) * (nd - 1)))
+
+    def wrap(state, base_batches, meta_batch):
+        in_specs = (
+            jax.tree_util.tree_map(lambda _: P(), state),
+            jax.tree_util.tree_map(batch_spec, base_batches),
+            jax.tree_util.tree_map(meta_spec, meta_batch),
+        )
+        out_specs = (
+            jax.tree_util.tree_map(lambda _: P(), state),
+            {"base_loss": P(), "meta_loss": P(), "hypergrad_norm": P(), "eps": P()},
+        )
+        fn = jax.shard_map(
+            local_step, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            axis_names=set(dp), check_vma=False,
+        )
+        return fn(state, base_batches, meta_batch)
+
+    return wrap
+
+
+def count_data_allreduces(hlo_text: str) -> int:
+    """Number of all-reduce(-start) ops in a lowered module (structure audit)."""
+    import re
+
+    n = 0
+    for line in hlo_text.splitlines():
+        if re.search(r"=\s+\S.*\s+all-reduce(-start)?\(", line) and "all-reduce-done" not in line:
+            n += 1
+    return n

@@ -1,0 +1,140 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape) on
+the production mesh, print memory/cost analysis, and record roofline terms.
+
+MUST be run as its own process (the two lines above run before any other
+import — jax locks the device count on first init):
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch gemma3-1b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod]
+
+Outputs one JSON per job under experiments/dryrun/.
+"""
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro import configs
+from repro.configs import INPUT_SHAPES
+from repro.launch import specs as specs_mod
+from repro.launch.mesh import make_production_mesh
+from repro.roofline import analyze
+from repro.models import transformer as tf
+
+import jax.numpy as jnp
+
+OUT_DIR = "experiments/dryrun"
+
+
+def run_job(arch: str, shape_name: str, *, multi_pod: bool = False, save: bool = True,
+            variant: str = "baseline"):
+    cfg = configs.get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    if variant != "baseline":
+        mesh_name = f"{mesh_name}_{variant}"
+
+    job = specs_mod.make_job(cfg, shape, mesh, variant=variant)
+    if job is None:
+        result = {
+            "name": f"{arch}:{shape_name}",
+            "mesh": mesh_name,
+            "status": "skipped",
+            "reason": "long_500k requires sub-quadratic attention (DESIGN.md §4)",
+        }
+        _emit(result, save, arch, shape_name, mesh_name)
+        return result
+
+    t0 = time.time()
+    try:
+        with mesh:
+            lowered = jax.jit(job.step_fn).lower(*job.args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+            mem = compiled.memory_analysis()
+            print(f"[{job.name}@{mesh_name}] memory_analysis: {mem}")
+            cost = compiled.cost_analysis()
+            print(f"[{job.name}@{mesh_name}] cost_analysis flops={cost.get('flops', 0):.3e} "
+                  f"bytes={cost.get('bytes accessed', 0):.3e}")
+
+            dry_cfg = cfg.replace(param_dtype="bfloat16", dtype="bfloat16")
+            if variant in ("sharded_ce", "opt", "opt_manual"):
+                dry_cfg = dry_cfg.replace(sharded_ce=True)
+            if variant in ("chunked_attn", "opt", "opt_manual"):
+                dry_cfg = dry_cfg.replace(attn_chunk=1024)
+            param_shapes = jax.eval_shape(lambda: tf.init_params(dry_cfg, jax.random.PRNGKey(0)))
+            cache_shapes = None
+            if job.kind == "decode":
+                cache_shapes = jax.eval_shape(
+                    lambda: tf.init_cache(dry_cfg, shape.global_batch, shape.seq_len, jnp.bfloat16)
+                )
+            roof = analyze(
+                job.name, compiled, compiled.as_text(), dry_cfg, shape, job.kind,
+                param_shapes, n_devices=mesh.size, cache_shapes=cache_shapes,
+            )
+        result = roof.as_dict()
+        result.update({
+            "mesh": mesh_name,
+            "status": "ok",
+            "lower_s": round(t_lower, 2),
+            "compile_s": round(t_compile, 2),
+        })
+    except Exception as e:  # noqa: BLE001 — a dry-run failure is a finding
+        result = {
+            "name": f"{arch}:{shape_name}",
+            "mesh": mesh_name,
+            "status": "error",
+            "error": f"{type(e).__name__}: {e}",
+            "traceback": traceback.format_exc()[-2000:],
+        }
+    _emit(result, save, arch, shape_name, mesh_name)
+    return result
+
+
+def _emit(result, save, arch, shape_name, mesh_name):
+    line = {k: v for k, v in result.items() if k not in ("collectives", "traceback")}
+    print(json.dumps(line, default=str))
+    if save:
+        os.makedirs(OUT_DIR, exist_ok=True)
+        fname = f"{OUT_DIR}/{arch}_{shape_name}_{mesh_name}.json"
+        with open(fname, "w") as f:
+            json.dump(result, f, indent=1, default=str)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, help="architecture id (see repro.configs)")
+    ap.add_argument("--shape", default=None, choices=list(INPUT_SHAPES))
+    ap.add_argument("--all", action="store_true", help="run every (arch x shape)")
+    ap.add_argument("--multi-pod", action="store_true", help="use the 2x16x16 512-chip mesh")
+    ap.add_argument("--variant", default="baseline", choices=list(specs_mod.VARIANTS))
+    args = ap.parse_args()
+
+    assert len(jax.devices()) == 512, "dry-run needs the forced 512 host devices"
+
+    if args.all:
+        archs = list(configs.ASSIGNED_ARCHS)
+        shapes = list(INPUT_SHAPES)
+    else:
+        assert args.arch and args.shape, "--arch and --shape (or --all)"
+        archs, shapes = [args.arch], [args.shape]
+
+    failures = 0
+    for arch in archs:
+        for shape_name in shapes:
+            r = run_job(arch, shape_name, multi_pod=args.multi_pod, variant=args.variant)
+            failures += r["status"] == "error"
+    if failures:
+        raise SystemExit(f"{failures} dry-run jobs failed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,209 @@
+"""Parameter / batch / cache partition rules for the production mesh.
+
+Tensor-parallel layout over the "model" axis, GSPMD-style:
+  column-parallel (output-dim sharded): QKV projections, MLP up/gate,
+    MLA decompressors, SSM in-projections, embeddings (vocab-sharded).
+  row-parallel (input-dim sharded): attention O, MLP down, SSM out-proj.
+  expert-parallel: MoE expert stacks shard their leading E axis.
+  replicated: norms, biases, scalars, routers, meta-learner parameters.
+
+Rules are matched on the flattened parameter path (most specific first) and
+give the spec of the TRAILING dims; leading stacked-layer axes are padded
+with None, so the same table covers flat, scanned, and grouped-scanned
+stacks.
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+PyTree = Any
+
+# (path regex, candidate trailing-dims specs). First rule match wins; within
+# a rule, the first candidate whose sharded dims all divide evenly wins
+# (e.g. qwen's 60 experts don't split 16 ways -> fall back to tensor-parallel
+# WITHIN each expert instead of replicating 34 GB of expert weights).
+_PARAM_RULES = [
+    # --- MoE ---
+    (r"experts.*(up|gate)", [("model", None, None), (None, None, "model")]),
+    (r"experts.*down", [("model", None, None), (None, "model", None)]),
+    (r"moe.*router", (None, None)),
+    # --- rwkv channel-mix (wv is a down-projection here) ---
+    (r"cmix.*wv", ("model", None)),
+    (r"cmix.*(wk|wr)", (None, "model")),
+    # --- rwkv time-mix ---
+    (r"tmix.*wo", ("model", None)),
+    (r"tmix.*(wr|wk|wv|wg)\b", (None, "model")),
+    (r"tmix.*(wA|wB)", (None, None)),  # decay LoRA: tiny, replicated
+    (r"tmix.*\bu\b", (None, None)),
+    # --- MLA ---
+    (r"(wq_a|wkv_a)", (None, None)),  # into tiny latent ranks: replicated
+    (r"(wq_b|wkv_b)", (None, "model")),
+    # --- attention / cross-attention ---
+    (r"(attn|xattn).*wo", ("model", None)),
+    (r"(attn|xattn).*(wq|wk|wv)", (None, "model")),
+    # --- MLPs (incl. MoE shared expert) ---
+    (r"(mlp|shared).*down", ("model", None)),
+    (r"(mlp|shared).*(up|gate)", (None, "model")),
+    # --- mamba ---
+    (r"in_proj", (None, "model")),
+    (r"out_proj", ("model", None)),
+    (r"conv_w", ("model", None)),
+    (r"conv_b", ("model",)),
+    # --- embeddings / heads ---
+    (r"pos_embed", (None, None)),
+    (r"embed", ("model", None)),  # vocab-sharded (logits come out vocab-sharded)
+    (r"projector", (None, "model")),
+    (r"cls_head", (None, None)),
+]
+
+
+def _head_aligned(path: str, cfg, mesh) -> bool:
+    """Attention projections are only worth sharding when whole heads land on
+    each device; splitting a head's Dh across the model axis turns every
+    attention einsum into a chain of reshard collectives (measured: the
+    dominant collective cost for small-head archs — EXPERIMENTS.md §Perf)."""
+
+    if cfg is None:
+        return True
+    model = mesh.shape.get("model", 1)
+    if re.search(r"(attn|xattn).*(wk|wv)\b", path):
+        return cfg.num_kv_heads % model == 0 and cfg.num_kv_heads > 0
+    if re.search(r"(attn|xattn).*(wq|wo)\b", path) or re.search(r"(wq_b|wkv_b)", path):
+        return cfg.num_heads % model == 0 and cfg.num_heads > 0
+    return True
+
+
+def param_spec(path: str, shape: Tuple[int, ...], mesh, cfg=None) -> P:
+    ndim = len(shape)
+    if not _head_aligned(path, cfg, mesh):
+        return P()
+    for pat, candidates in _PARAM_RULES:
+        if not re.search(pat, path):
+            continue
+        if isinstance(candidates, tuple):
+            candidates = [candidates]
+        chosen = None
+        for trailing in candidates:
+            if len(trailing) > ndim:
+                continue
+            dims = [None] * (ndim - len(trailing)) + list(trailing)
+            if all(ax is None or shape[i] % mesh.shape[ax] == 0 for i, ax in enumerate(dims)):
+                chosen = dims
+                break
+        if chosen is None:
+            # last resort: first candidate with un-divisible dims replicated
+            trailing = candidates[0]
+            if len(trailing) > ndim:
+                return P()
+            chosen = [None] * (ndim - len(trailing)) + list(trailing)
+            for i, ax in enumerate(chosen):
+                if ax is not None and shape[i] % mesh.shape[ax] != 0:
+                    chosen[i] = None
+        return P(*chosen)
+    return P()  # replicate by default (norms, biases, scalars)
+
+
+def tree_param_specs(tree: PyTree, mesh, cfg=None) -> PyTree:
+    """Pytree of PartitionSpecs matching ``tree`` (of arrays or SDS).
+    ``cfg`` enables head-alignment-aware attention sharding."""
+
+    def one(path, leaf):
+        return param_spec(jax.tree_util.keystr(path), tuple(leaf.shape), mesh, cfg)
+
+    return jax.tree_util.tree_map_with_path(one, tree)
+
+
+def shardings_like(mesh, spec_tree: PyTree) -> PyTree:
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), spec_tree, is_leaf=lambda x: isinstance(x, P)
+    )
+
+
+def replicated(mesh):
+    return NamedSharding(mesh, P())
+
+
+# ---------------------------------------------------------------------------
+# batch & cache specs
+# ---------------------------------------------------------------------------
+
+
+def _divisible(n: int, mesh, axis: str) -> bool:
+    return axis in mesh.axis_names and n % mesh.shape[axis] == 0
+
+
+def batch_spec(mesh, *, leading_unroll: bool = False) -> P:
+    """Shard the (global) batch dim over pod x data."""
+    dp = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+    if leading_unroll:
+        return P(None, dp)
+    return P(dp)
+
+
+def dp_size(mesh) -> int:
+    return int(jnp.prod(jnp.asarray([mesh.shape[a] for a in mesh.axis_names if a in ("pod", "data")])))
+
+
+def cache_spec(path: str, shape: Tuple[int, ...], mesh) -> P:
+    """Decode-cache sharding. Batch-shards when the batch divides the dp
+    axes; otherwise (long_500k, B=1) shards the cache *sequence* over data
+    and heads over model where divisible."""
+
+    dp = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+    dpn = dp_size(mesh)
+    ndim = len(shape)
+
+    # KV-style caches: (L..., B, T, KV, Dh) — detect by >=3 trailing dims with
+    # a long T. SSM states: (L..., B, H, P, N) / conv (L..., B, K, C).
+    is_kv = re.search(r"(kv|krope|ckv)", path) is not None
+
+    if is_kv:
+        # trailing dims for plain kv: (B, T, KV, Dh); mla ckv: (B, T, r); krope: (B, T, dr)
+        n_lead = ndim - (4 if re.search(r"(attn_kv|kv)", path) and not re.search(r"ckv|krope", path) else 3)
+        lead = (None,) * max(n_lead, 0)
+        b = shape[len(lead)]
+        t_axis_shardable = _divisible(shape[len(lead) + 1], mesh, "data")
+        if b % dpn == 0 and b >= dpn:
+            spec = (dp, None) + ((None,) * (ndim - len(lead) - 2))
+        elif t_axis_shardable:
+            spec = (None, "data") + ((None,) * (ndim - len(lead) - 2))
+        else:
+            spec = (None,) * (ndim - len(lead))
+        # shard KV heads over model when present & divisible
+        spec = list(spec)
+        if ndim - len(lead) == 4 and _divisible(shape[len(lead) + 2], mesh, "model"):
+            spec[2] = "model"
+        return P(*(lead + tuple(spec)))
+
+    # SSM / conv / token-shift states: shard batch if divisible, else heads
+    # over model where divisible, else replicate.
+    for i, d in enumerate(shape):
+        pass
+    # find batch dim: first dim after stacked-layer dims. Heuristic: states are
+    # (L, B, ...) or (G, K, B, ...); shard the largest trailing dim over model
+    # if divisible and batch over dp if divisible.
+    spec = [None] * ndim
+    # try batch = any dim equal to a multiple of dpn among the first 3 dims
+    for i in range(ndim):
+        if shape[i] % dpn == 0 and shape[i] >= dpn:
+            spec[i] = dp
+            break
+    else:
+        for i in range(ndim - 1, -1, -1):
+            if _divisible(shape[i], mesh, "model"):
+                spec[i] = "model"
+                break
+    return P(*spec)
+
+
+def tree_cache_specs(tree: PyTree, mesh) -> PyTree:
+    def one(path, leaf):
+        return cache_spec(jax.tree_util.keystr(path), leaf.shape, mesh)
+
+    return jax.tree_util.tree_map_with_path(one, tree)

@@ -1,0 +1,266 @@
+"""ShapeDtypeStruct input specs (with shardings) + the step functions that
+the dry-run lowers, for every (arch x input-shape x mesh) combination.
+
+No device allocation happens here: shapes come from jax.eval_shape over the
+real init functions, and shardings are attached to the SDS leaves so
+``jax.jit(step).lower(**specs)`` sees the production layout.
+
+The train shape lowers the FULL SAMA bilevel step (unrolled base Adam step +
+Eq. 5 meta gradient + meta update) — the paper's technique is the thing
+being dry-run, not a plain train step. Decode shapes lower ``serve_step``.
+
+Beyond-paper feature: optimizer moments are ZeRO-1-style sharded over the
+data axes on top of the parameter's tensor-parallel sharding (the paper's
+Conclusion lists optimizer sharding as future work).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import optim
+from repro.configs import ArchConfig, InputShape
+from repro.core import EngineConfig, init_state, make_meta_step, problems
+from repro.launch import sharding as sh
+from repro.models import Model, transformer as tf
+
+PyTree = Any
+
+META_BATCH_FRACTION = 8  # meta batch = global_batch / 8 (clean data is scarce)
+
+
+class LoweringJob(NamedTuple):
+    """A step function + fully-specced example args, ready to lower."""
+
+    name: str
+    step_fn: Callable
+    args: Tuple
+    kind: str  # train | prefill | decode
+
+
+def _sds(tree_shapes: PyTree, mesh, spec_tree: PyTree) -> PyTree:
+    def one(s, spec):
+        return jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=NamedSharding(mesh, spec))
+
+    return jax.tree_util.tree_map(
+        one, tree_shapes, spec_tree, is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct)
+    )
+
+
+def _replicated_sds(tree_shapes: PyTree, mesh) -> PyTree:
+    return jax.tree_util.tree_map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=NamedSharding(mesh, P())),
+        tree_shapes,
+    )
+
+
+def _moment_specs(param_specs: PyTree, shapes: PyTree, mesh) -> PyTree:
+    """ZeRO-1: additionally shard each moment's largest un-sharded dim over
+    the data axes (when divisible)."""
+
+    dp = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+    dpn = sh.dp_size(mesh)
+
+    def one(spec, s):
+        dims = list(spec) + [None] * (len(s.shape) - len(spec))
+        cands = [
+            (s.shape[i], i) for i, d in enumerate(dims) if d is None and s.shape[i] % dpn == 0 and s.shape[i] >= dpn
+        ]
+        if cands:
+            _, i = max(cands)
+            dims[i] = dp
+        return P(*dims)
+
+    return jax.tree_util.tree_map(
+        one, param_specs, shapes, is_leaf=lambda x: isinstance(x, P)
+    )
+
+
+def _batch_shapes(cfg: ArchConfig, batch: int, seq: int, *, unroll: Optional[int] = None):
+    def lead(shape):
+        return (unroll,) + shape if unroll is not None else shape
+
+    b = {"tokens": jax.ShapeDtypeStruct(lead((batch, seq)), jnp.int32)}
+    act = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    if cfg.family == "vlm":
+        b["patches"] = jax.ShapeDtypeStruct(lead((batch, cfg.vision_tokens, cfg.vision_dim)), act)
+    if cfg.family == "audio":
+        b["frames"] = jax.ShapeDtypeStruct(lead((batch, cfg.encoder_seq, cfg.d_model)), act)
+    return b
+
+
+def _batch_specs(batch_shapes: PyTree, mesh, *, unroll: bool, shard_batch: bool = True,
+                 all_axes: bool = False):
+    """all_axes: shard the batch over the WHOLE mesh (pure data parallelism —
+    the dp_only variant for models too small for tensor parallelism)."""
+
+    def one(s):
+        nd = len(s.shape)
+        if not shard_batch:
+            return P()
+        if all_axes:
+            dp = tuple(mesh.axis_names)
+        else:
+            dp = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+        if unroll:
+            return P(*((None, dp) + (None,) * (nd - 2)))
+        return P(*((dp,) + (None,) * (nd - 1)))
+
+    return jax.tree_util.tree_map(one, batch_shapes)
+
+
+def make_train_job(cfg: ArchConfig, shape: InputShape, mesh, *, engine_cfg: Optional[EngineConfig] = None,
+                   manual_sync: bool = False, head_align: bool = False,
+                   dp_only: bool = False) -> LoweringJob:
+    """The SAMA bilevel train step, fully sharded. ``manual_sync`` swaps in
+    the paper's single-sync shard_map schedule (launch.distributed)."""
+
+    model = Model(cfg)
+    engine_cfg = engine_cfg or EngineConfig(method="sama", unroll_steps=1)
+    base_opt = optim.adam(1e-4)
+    meta_opt = optim.adam(1e-4)
+    spec = problems.make_data_optimization_spec(
+        model.classifier_per_example if cfg.family == "encoder" else model.per_example,
+        reweight=True,
+    )
+    if manual_sync:
+        from repro.launch.distributed import make_manual_step
+
+        axes = tuple(mesh.axis_names) if dp_only else None
+        step = make_manual_step(spec, base_opt, meta_opt, engine_cfg, mesh, axes=axes)
+    else:
+        step = make_meta_step(spec, base_opt, meta_opt, engine_cfg)
+
+    key = jax.random.PRNGKey(0)
+
+    def build_state():
+        theta = tf.init_params(cfg, key)
+        lam = problems.init_data_optimization_lam(jax.random.PRNGKey(1), reweight=True)
+        return init_state(theta, lam, base_opt, meta_opt)
+
+    state_shapes = jax.eval_shape(build_state)
+
+    if dp_only:
+        param_specs = jax.tree_util.tree_map(lambda _: P(), state_shapes.theta)
+    else:
+        param_specs = sh.tree_param_specs(state_shapes.theta, mesh, cfg if head_align else None)
+    mu_specs = _moment_specs(param_specs, state_shapes.theta, mesh)
+    state_specs = state_shapes._replace(
+        theta=param_specs,
+        base_opt_state=state_shapes.base_opt_state._replace(
+            count=P(),
+            mu=mu_specs if state_shapes.base_opt_state.mu is not None else None,
+            nu=mu_specs if state_shapes.base_opt_state.nu is not None else None,
+        ),
+        lam=jax.tree_util.tree_map(lambda _: P(), state_shapes.lam),
+        meta_opt_state=jax.tree_util.tree_map(lambda _: P(), state_shapes.meta_opt_state),
+        step=P(),
+    )
+    state_sds = _sds(state_shapes, mesh, state_specs)
+
+    k = engine_cfg.unroll_steps
+    base_shapes = _batch_shapes(cfg, shape.global_batch, shape.seq_len, unroll=k)
+    min_meta = mesh.size if dp_only else sh.dp_size(mesh)
+    meta_shapes = _batch_shapes(cfg, max(shape.global_batch // META_BATCH_FRACTION, min_meta), shape.seq_len)
+    base_sds = _sds(base_shapes, mesh, _batch_specs(base_shapes, mesh, unroll=True, all_axes=dp_only))
+    meta_sds = _sds(meta_shapes, mesh, _batch_specs(meta_shapes, mesh, unroll=False, all_axes=dp_only))
+
+    return LoweringJob(
+        name=f"{cfg.name}:{shape.name}:sama_train",
+        step_fn=step,
+        args=(state_sds, base_sds, meta_sds),
+        kind="train",
+    )
+
+
+def make_prefill_job(cfg: ArchConfig, shape: InputShape, mesh, head_align: bool = False) -> LoweringJob:
+    model = Model(cfg)
+
+    def prefill(params, batch):
+        logits, _ = model.forward(params, batch)
+        return logits
+
+    param_shapes = jax.eval_shape(lambda: tf.init_params(cfg, jax.random.PRNGKey(0)))
+    params_sds = _sds(param_shapes, mesh, sh.tree_param_specs(param_shapes, mesh, cfg if head_align else None))
+    batch_shapes = _batch_shapes(cfg, shape.global_batch, shape.seq_len)
+    batch_sds = _sds(batch_shapes, mesh, _batch_specs(batch_shapes, mesh, unroll=False))
+    return LoweringJob(
+        name=f"{cfg.name}:{shape.name}:prefill",
+        step_fn=prefill,
+        args=(params_sds, batch_sds),
+        kind="prefill",
+    )
+
+
+def make_decode_job(cfg: ArchConfig, shape: InputShape, mesh, head_align: bool = False) -> LoweringJob:
+    model = Model(cfg)
+
+    def serve_step(params, cache, tokens, pos):
+        return model.decode_step(params, cache, tokens, pos)
+
+    param_shapes = jax.eval_shape(lambda: tf.init_params(cfg, jax.random.PRNGKey(0)))
+    params_sds = _sds(param_shapes, mesh, sh.tree_param_specs(param_shapes, mesh, cfg if head_align else None))
+
+    cache_shapes = jax.eval_shape(
+        lambda: tf.init_cache(cfg, shape.global_batch, shape.seq_len, jnp.bfloat16)
+    )
+    cache_sds = _sds(cache_shapes, mesh, sh.tree_cache_specs(cache_shapes, mesh))
+
+    dpn = sh.dp_size(mesh)
+    shard_batch = shape.global_batch % dpn == 0 and shape.global_batch >= dpn
+    tok_spec = P(tuple(a for a in mesh.axis_names if a in ("pod", "data")), None) if shard_batch else P()
+    tokens_sds = jax.ShapeDtypeStruct(
+        (shape.global_batch, 1), jnp.int32, sharding=NamedSharding(mesh, tok_spec)
+    )
+    pos_sds = jax.ShapeDtypeStruct((), jnp.int32, sharding=NamedSharding(mesh, P()))
+    return LoweringJob(
+        name=f"{cfg.name}:{shape.name}:serve_decode",
+        step_fn=serve_step,
+        args=(params_sds, cache_sds, tokens_sds, pos_sds),
+        kind="decode",
+    )
+
+
+VARIANTS = ("baseline", "sharded_ce", "chunked_attn", "head_align", "dp_only", "opt",
+            "manual", "opt_manual", "dp_only_manual")
+
+
+def make_job(cfg: ArchConfig, shape: InputShape, mesh, variant: str = "baseline") -> Optional[LoweringJob]:
+    """Job for one (arch, shape) pair, honoring the legality rules:
+    long_500k only for sub-quadratic/sliding-window archs (DESIGN.md §4).
+
+    Variants (§Perf hillclimbs):
+      baseline     — paper-faithful pjit step, take_along CE, full-score attn
+      sharded_ce   — one-hot-reduction CE (no logits all-gather)
+      chunked_attn — blockwise online-softmax attention
+      opt          — sharded_ce + chunked_attn
+      manual       — the paper's single-sync shard_map schedule (train only)
+      opt_manual   — opt + manual
+    """
+
+    if shape.name == "long_500k" and not cfg.supports_long_context:
+        return None
+    dry_cfg = cfg.replace(param_dtype="bfloat16", dtype="bfloat16")
+    if variant in ("sharded_ce", "opt", "opt_manual"):
+        dry_cfg = dry_cfg.replace(sharded_ce=True)
+    if variant in ("chunked_attn", "opt", "opt_manual"):
+        dry_cfg = dry_cfg.replace(attn_chunk=1024)
+    head_align = variant in ("head_align", "opt", "opt_manual")
+    manual = variant in ("manual", "opt_manual", "dp_only_manual")
+    dp_only = variant in ("dp_only", "dp_only_manual")
+
+    if shape.kind == "train":
+        job = make_train_job(dry_cfg, shape, mesh, manual_sync=manual, head_align=head_align,
+                             dp_only=dp_only)
+    elif shape.kind == "prefill":
+        job = make_prefill_job(dry_cfg, shape, mesh, head_align=head_align)
+    else:
+        job = make_decode_job(dry_cfg, shape, mesh, head_align=head_align)
+    if variant != "baseline":
+        job = job._replace(name=f"{job.name}:{variant}")
+    return job

@@ -1,0 +1,7 @@
+"""Architecture substrate: the 10 assigned architectures + the paper's own
+BERT-base, as pure-functional JAX models with scan-compiled layer stacks."""
+
+from repro.models.model import Model, token_cross_entropy
+from repro.models import attention, common, moe, ssm, transformer
+
+__all__ = ["Model", "attention", "common", "moe", "ssm", "token_cross_entropy", "transformer"]

@@ -1,0 +1,346 @@
+"""State-space / linear-recurrence layers.
+
+* Mamba2 (SSD) — chunkwise-parallel scan: intra-chunk attention-like masked
+  matmuls + lax.scan over chunks carrying the (B, H, P, N) state. All decay
+  exponents are differences of a monotone cumsum with i >= j, hence <= 0 and
+  numerically safe to exponentiate in f32.
+* RWKV6 ("Finch") — data-dependent per-channel decay. Intra-chunk term needs
+  a per-(i, j, k) exponent, materialized blockwise per chunk (the TPU/VMEM
+  analogue of flash-linear-attention's SRAM blocks).
+
+Both expose a one-token ``*_decode`` with O(1) state — this is what makes the
+``long_500k`` shape legal for rwkv6/zamba2.
+
+TPU adaptation note (DESIGN.md §2): the chunk size trades VMEM footprint of
+the (Q, Q) intra-chunk blocks against the length of the sequential
+chunk-scan; defaults are picked so a chunk's working set fits VMEM.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common as cm
+
+PyTree = Any
+
+
+def causal_depthwise_conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """x: (B, S, C); w: (C, K) depthwise causal filter."""
+    K = w.shape[1]
+    pad = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(pad[:, i : i + x.shape[1], :] * w[:, i] for i in range(K))
+    return out + b
+
+
+# ===========================================================================
+# Mamba2 / SSD
+# ===========================================================================
+
+
+def mamba_dims(cfg):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    H = d_inner // cfg.ssm_head_dim
+    return d_inner, H, cfg.ssm_head_dim, cfg.ssm_state
+
+
+def init_mamba(cfg, key, dtype=jnp.float32):
+    D = cfg.d_model
+    d_inner, H, P, N = mamba_dims(cfg)
+    conv_dim = d_inner + 2 * N
+    ks = jax.random.split(key, 4)
+    return {
+        "in_proj": cm.dense_init(ks[0], (D, 2 * d_inner + 2 * N + H), dtype=dtype),
+        "conv_w": cm.dense_init(ks[1], (conv_dim, cfg.ssm_conv), scale=1.0, dtype=dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "A_log": jnp.zeros((H,), jnp.float32),  # A = -exp(A_log) = -1 init
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.full((H,), -2.0, jnp.float32),  # softplus(-2) ~ 0.12
+        "norm": jnp.ones((d_inner,), jnp.float32),
+        "out_proj": cm.dense_init(ks[2], (d_inner, D), dtype=dtype),
+    }
+
+
+def _mamba_preproj(cfg, p, x):
+    d_inner, H, P, N = mamba_dims(cfg)
+    zxbcdt = x @ p["in_proj"].astype(x.dtype)
+    z = zxbcdt[..., :d_inner]
+    xBC = zxbcdt[..., d_inner : 2 * d_inner + 2 * N]
+    dt_raw = zxbcdt[..., 2 * d_inner + 2 * N :]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # (B,S,H)
+    return z, xBC, dt
+
+
+def _mamba_postproc(cfg, p, y, z):
+    d_inner, H, P, N = mamba_dims(cfg)
+    B, S = y.shape[:2]
+    y = y.reshape(B, S, d_inner) * jax.nn.silu(z)
+    yf = y.astype(jnp.float32)
+    y = (yf * jax.lax.rsqrt(jnp.mean(yf**2, -1, keepdims=True) + 1e-6) * p["norm"]).astype(y.dtype)
+    return y @ p["out_proj"].astype(y.dtype)
+
+
+def apply_mamba(cfg, p: PyTree, x: jnp.ndarray) -> jnp.ndarray:
+    """Training/prefill path. x: (B, S, D)."""
+
+    d_inner, H, P, N = mamba_dims(cfg)
+    Bsz, S, _ = x.shape
+    Q = min(cfg.ssm_chunk, S)
+    assert S % Q == 0, f"seq {S} not divisible by ssm chunk {Q}"
+    nc = S // Q
+
+    z, xBC, dt = _mamba_preproj(cfg, p, x)
+    xBC = jax.nn.silu(causal_depthwise_conv(xBC, p["conv_w"].astype(x.dtype), p["conv_b"].astype(x.dtype)))
+    xs = xBC[..., :d_inner].reshape(Bsz, S, H, P)
+    Bm = xBC[..., d_inner : d_inner + N]  # (B,S,N) shared across heads
+    Cm = xBC[..., d_inner + N :]
+
+    A = -jnp.exp(p["A_log"])  # (H,)
+    a = dt * A  # (B,S,H) <= 0
+
+    # chunked views
+    def ch(t):
+        return t.reshape((Bsz, nc, Q) + t.shape[2:])
+
+    a_c, dt_c = ch(a), ch(dt)
+    x_c, B_c, C_c = ch(xs), ch(Bm), ch(Cm)
+    ii = jnp.arange(Q)
+    causal = ii[:, None] >= ii[None, :]
+
+    def body(S_prev, inp):
+        """One chunk: intra-chunk masked matmuls + inter-chunk from carried
+        state. All per-chunk intermediates are transient (VMEM-sized)."""
+        a_q, dt_q, x_q, B_q, C_q = inp  # (B,Q,H), (B,Q,H), (B,Q,H,P), (B,Q,N), (B,Q,N)
+        cum = jnp.cumsum(a_q, axis=1)  # (B,Q,H), decreasing
+
+        scores = jnp.einsum("bin,bjn->bij", C_q, B_q)  # (B,Q,Q)
+        diff = cum[:, :, None, :] - cum[:, None, :, :]  # (B,i,j,H): <=0 for i>=j
+        L = jnp.where(causal[None, :, :, None], jnp.exp(diff), 0.0)
+        M = scores[:, :, :, None] * L * dt_q[:, None, :, :]  # (B,i,j,H)
+        y = jnp.einsum("bijh,bjhp->bihp", M.astype(x_q.dtype), x_q)
+
+        decay_in = jnp.exp(cum).astype(S_prev.dtype)  # (B,Q,H)
+        y = y + jnp.einsum("bin,bhpn,bih->bihp", C_q, S_prev, decay_in)
+
+        decay_out = jnp.exp(cum[:, -1:, :] - cum)  # (B,Q,H)
+        w_j = (decay_out * dt_q).astype(x_q.dtype)
+        S_loc = jnp.einsum("bjh,bjn,bjhp->bhpn", w_j, B_q, x_q)
+        S_new = jnp.exp(cum[:, -1, :])[:, :, None, None].astype(S_prev.dtype) * S_prev + S_loc
+        return S_new, y
+
+    S0 = jnp.zeros((Bsz, H, P, N), x.dtype)
+    xs_scan = tuple(jnp.moveaxis(t, 1, 0) for t in (a_c, dt_c, x_c, B_c, C_c))
+    _, y = jax.lax.scan(body, S0, xs_scan)  # (nc,B,Q,H,P)
+    y = jnp.moveaxis(y, 0, 1) + x_c * p["D"].astype(x.dtype)[None, None, None, :, None]
+    y = y.reshape(Bsz, S, H, P)
+    return _mamba_postproc(cfg, p, y, z)
+
+
+def init_mamba_state(cfg, batch: int, dtype=jnp.bfloat16) -> Dict:
+    d_inner, H, P, N = mamba_dims(cfg)
+    conv_dim = d_inner + 2 * N
+    return {
+        "ssm": jnp.zeros((batch, H, P, N), dtype),
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, conv_dim), dtype),
+    }
+
+
+def mamba_decode(cfg, p: PyTree, x: jnp.ndarray, state: Dict) -> Tuple[jnp.ndarray, Dict]:
+    """One-token step. x: (B, 1, D)."""
+
+    d_inner, H, P, N = mamba_dims(cfg)
+    Bsz = x.shape[0]
+    z, xBC, dt = _mamba_preproj(cfg, p, x)  # (B,1,...)
+    conv_in = jnp.concatenate([state["conv"].astype(x.dtype), xBC], axis=1)  # (B,K,conv_dim)
+    xBC_t = jax.nn.silu(
+        jnp.sum(conv_in * p["conv_w"].astype(x.dtype).T[None], axis=1) + p["conv_b"].astype(x.dtype)
+    )  # (B,conv_dim)
+    new_conv = conv_in[:, 1:]
+
+    xt = xBC_t[:, :d_inner].reshape(Bsz, H, P)
+    Bt = xBC_t[:, d_inner : d_inner + N]
+    Ct = xBC_t[:, d_inner + N :]
+    dt_t = dt[:, 0]  # (B,H)
+    A = -jnp.exp(p["A_log"])
+    decay = jnp.exp(dt_t * A).astype(x.dtype)  # (B,H)
+
+    S = state["ssm"].astype(x.dtype)
+    S = decay[:, :, None, None] * S + jnp.einsum(
+        "bh,bn,bhp->bhpn", dt_t.astype(x.dtype), Bt, xt
+    )
+    y = jnp.einsum("bn,bhpn->bhp", Ct, S) + xt * p["D"].astype(x.dtype)[None, :, None]
+    out = _mamba_postproc(cfg, p, y[:, None].reshape(Bsz, 1, H, P), z)
+    return out, {"ssm": S.astype(state["ssm"].dtype), "conv": new_conv.astype(state["conv"].dtype)}
+
+
+# ===========================================================================
+# RWKV6 (Finch)
+# ===========================================================================
+
+
+def rwkv_dims(cfg):
+    H = cfg.d_model // cfg.rwkv_head_dim
+    return H, cfg.rwkv_head_dim
+
+
+def init_rwkv_time_mix(cfg, key, dtype=jnp.float32):
+    D = cfg.d_model
+    H, K = rwkv_dims(cfg)
+    L = cfg.rwkv_decay_lora
+    ks = jax.random.split(key, 8)
+    return {
+        "mu": {n: jnp.full((D,), 0.5, jnp.float32) for n in ("r", "k", "v", "g", "w")},
+        "wr": cm.dense_init(ks[0], (D, D), dtype=dtype),
+        "wk": cm.dense_init(ks[1], (D, D), dtype=dtype),
+        "wv": cm.dense_init(ks[2], (D, D), dtype=dtype),
+        "wg": cm.dense_init(ks[3], (D, D), dtype=dtype),
+        "wo": cm.dense_init(ks[4], (D, D), dtype=dtype),
+        "w0": jnp.full((D,), -1.0, jnp.float32),  # decay bias: w ~ exp(-exp(-1+...))
+        "wA": cm.dense_init(ks[5], (D, L), dtype=dtype),
+        "wB": cm.dense_init(ks[6], (L, D), scale=0.1, dtype=dtype),
+        "u": jnp.zeros((H, K), jnp.float32),  # "bonus" for the current token
+        "ln_x": {"scale": jnp.ones((D,), jnp.float32), "bias": jnp.zeros((D,), jnp.float32)},
+    }
+
+
+def init_rwkv_channel_mix(cfg, key, dtype=jnp.float32):
+    D, F = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    return {
+        "mu": {n: jnp.full((D,), 0.5, jnp.float32) for n in ("k", "r")},
+        "wk": cm.dense_init(ks[0], (D, F), dtype=dtype),
+        "wv": cm.dense_init(ks[1], (F, D), dtype=dtype),
+        "wr": cm.dense_init(ks[2], (D, D), dtype=dtype),
+    }
+
+
+def _token_shift(x, x_prev_last=None):
+    """x_{t-1} with zeros (or carried state) at t=0. x: (B,S,D)."""
+    if x_prev_last is None:
+        pad = jnp.zeros_like(x[:, :1])
+    else:
+        pad = x_prev_last[:, None]
+    return jnp.concatenate([pad, x[:, :-1]], axis=1)
+
+
+def _mix(x, xprev, mu):
+    return x + (xprev - x) * mu.astype(x.dtype)
+
+
+def _rwkv_proj(cfg, p, x, xprev):
+    H, K = rwkv_dims(cfg)
+    B, S, D = x.shape
+    r = (_mix(x, xprev, p["mu"]["r"]) @ p["wr"].astype(x.dtype)).reshape(B, S, H, K)
+    k = (_mix(x, xprev, p["mu"]["k"]) @ p["wk"].astype(x.dtype)).reshape(B, S, H, K)
+    v = (_mix(x, xprev, p["mu"]["v"]) @ p["wv"].astype(x.dtype)).reshape(B, S, H, K)
+    g = jax.nn.silu(_mix(x, xprev, p["mu"]["g"]) @ p["wg"].astype(x.dtype))
+    xw = _mix(x, xprev, p["mu"]["w"])
+    lora = jnp.tanh(xw @ p["wA"].astype(x.dtype)) @ p["wB"].astype(x.dtype)
+    logw = -jnp.exp(jnp.clip(p["w0"] + lora.astype(jnp.float32), -8.0, 3.0))  # (B,S,D) < 0
+    return r, k, v, g, logw.reshape(B, S, H, K)
+
+
+def _rwkv_out(cfg, p, y, g, x_dtype):
+    """Per-head groupnorm, gate, output proj. y: (B,S,H,K) f32."""
+    B, S, H, K = y.shape
+    mu = jnp.mean(y, -1, keepdims=True)
+    var = jnp.var(y, -1, keepdims=True)
+    yn = (y - mu) * jax.lax.rsqrt(var + 1e-5)
+    yn = yn.reshape(B, S, H * K) * p["ln_x"]["scale"] + p["ln_x"]["bias"]
+    out = (yn.astype(x_dtype) * g) @ p["wo"].astype(x_dtype)
+    return out
+
+
+def apply_rwkv_time_mix(cfg, p: PyTree, x: jnp.ndarray, x_prev_last=None) -> jnp.ndarray:
+    """Chunkwise WKV6. x: (B,S,D)."""
+
+    H, K = rwkv_dims(cfg)
+    B, S, D = x.shape
+    Q = min(cfg.ssm_chunk, S)
+    assert S % Q == 0
+    nc = S // Q
+
+    xprev = _token_shift(x, x_prev_last)
+    r, k, v, g, logw = _rwkv_proj(cfg, p, x, xprev)
+
+    def ch(t):
+        return t.reshape((B, nc, Q) + t.shape[2:])
+
+    r_c, k_c, v_c, w_c = ch(r), ch(k), ch(v), ch(logw)
+    ii = jnp.arange(Q)
+    strict = ii[:, None] > ii[None, :]
+
+    def body(S_prev, inp):
+        """One chunk. The per-(i,j,channel) decay tensor exists only inside
+        this body — (B,Q,Q,H,K) is the VMEM-resident block, per the FLA
+        blockwise formulation."""
+        r_q, k_q, v_q, w_q = (t.astype(jnp.float32) for t in inp)  # (B,Q,H,K)
+        cw = jnp.cumsum(w_q, axis=1)  # decreasing
+        q_shift = jnp.pad(cw[:, :-1], ((0, 0), (1, 0), (0, 0), (0, 0)))  # cw_{t-1}
+
+        # intra: y_t = sum_{j<t} (r_t . e^{cw_{t-1}-cw_j} k_j) v_j + bonus_t
+        diff = q_shift[:, :, None] - cw[:, None, :]  # (B,i,j,H,K) <= 0 where j<i
+        dec = jnp.where(strict[None, :, :, None, None], jnp.exp(diff), 0.0)
+        att = jnp.einsum("bihk,bijhk,bjhk->bijh", r_q, dec, k_q)
+        y = jnp.einsum("bijh,bjhk->bihk", att, v_q)
+        bonus = jnp.einsum("bihk,hk,bihk->bih", r_q, p["u"], k_q)
+        y = y + bonus[..., None] * v_q
+
+        # inter: from the carried state
+        rd = r_q * jnp.exp(q_shift)  # exponent <= 0
+        y = y + jnp.einsum("bihk,bhkv->bihv", rd, S_prev)
+
+        decay_out = jnp.exp(cw[:, -1:] - cw)  # (B,Q,H,K)
+        S_loc = jnp.einsum("bjhk,bjhv->bhkv", decay_out * k_q, v_q)
+        S_new = jnp.exp(cw[:, -1])[..., None] * S_prev + S_loc
+        return S_new, y
+
+    S0 = jnp.zeros((B, H, K, K), jnp.float32)
+    xs_scan = tuple(jnp.moveaxis(t, 1, 0) for t in (r_c, k_c, v_c, w_c))
+    _, y = jax.lax.scan(body, S0, xs_scan)  # (nc,B,Q,H,K)
+    y = jnp.moveaxis(y, 0, 1).reshape(B, S, H, K)
+    return _rwkv_out(cfg, p, y, g, x.dtype)
+
+
+def init_rwkv_state(cfg, batch: int, dtype=jnp.float32) -> Dict:
+    H, K = rwkv_dims(cfg)
+    D = cfg.d_model
+    return {
+        "S": jnp.zeros((batch, H, K, K), jnp.float32),  # f32: recurrent state
+        "x_att": jnp.zeros((batch, D), dtype),
+        "x_ffn": jnp.zeros((batch, D), dtype),
+    }
+
+
+def rwkv_time_mix_decode(cfg, p, x, state):
+    """x: (B,1,D); returns (out, new_state fragments)."""
+
+    H, K = rwkv_dims(cfg)
+    B = x.shape[0]
+    xprev = state["x_att"][:, None].astype(x.dtype)
+    r, k, v, g, logw = _rwkv_proj(cfg, p, x, xprev)
+    r1, k1, v1 = (t[:, 0].astype(jnp.float32) for t in (r, k, v))  # (B,H,K)
+    w1 = jnp.exp(logw[:, 0].astype(jnp.float32))  # (B,H,K)
+    S = state["S"]
+    kv = jnp.einsum("bhk,bhv->bhkv", k1, v1)
+    y = jnp.einsum("bhk,bhkv->bhv", r1, S + p["u"][None, :, :, None] * kv)
+    S_new = w1[..., None] * S + kv
+    out = _rwkv_out(cfg, p, y[:, None], g, x.dtype)
+    return out, {"S": S_new, "x_att": x[:, 0].astype(state["x_att"].dtype)}
+
+
+def apply_rwkv_channel_mix(cfg, p, x, x_prev_last=None):
+    xprev = _token_shift(x, x_prev_last)
+    k = _mix(x, xprev, p["mu"]["k"]) @ p["wk"].astype(x.dtype)
+    k = jnp.square(jax.nn.relu(k))
+    kv = k @ p["wv"].astype(x.dtype)
+    rgate = jax.nn.sigmoid(_mix(x, xprev, p["mu"]["r"]) @ p["wr"].astype(x.dtype))
+    return rgate * kv
+
+
+def rwkv_channel_mix_decode(cfg, p, x, state):
+    out = apply_rwkv_channel_mix(cfg, p, x, state["x_ffn"])
+    return out, {"x_ffn": x[:, 0].astype(state["x_ffn"].dtype)}

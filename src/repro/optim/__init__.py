@@ -1,0 +1,27 @@
+"""Optimizer substrate: pytree optimizers + analytic SAMA adaptation matrices."""
+
+from repro.optim.optimizers import (
+    OptState,
+    Optimizer,
+    adam,
+    adamw,
+    apply_updates,
+    get_optimizer,
+    momentum,
+    rmsprop,
+    sgd,
+)
+from repro.optim import schedules
+
+__all__ = [
+    "OptState",
+    "Optimizer",
+    "adam",
+    "adamw",
+    "apply_updates",
+    "get_optimizer",
+    "momentum",
+    "rmsprop",
+    "sgd",
+    "schedules",
+]

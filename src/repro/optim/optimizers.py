@@ -1,0 +1,262 @@
+"""From-scratch pytree optimizers with analytic adaptation matrices.
+
+The update convention follows the paper (Sec. 2, Eq. 2):
+
+    theta_t = theta_{t-1} - u(g_t; state)
+
+``Optimizer.update`` returns the *step* ``u`` (to be subtracted) plus new
+state. ``Optimizer.adaptation`` returns the diagonal of ``du/dg`` evaluated at
+the same (g, state) point — the "algorithmic adaptation" matrix of SAMA
+(paper Sec. 3.2 / Appendix C). Because every supported optimizer is
+elementwise, the adaptation matrix is diagonal and costs O(n) (a pytree of
+the same structure as the params).
+
+Correctness of each ``adaptation`` is pinned by tests that compare against
+``jax.jacfwd`` of the scalarized update rule.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim import schedules
+
+PyTree = Any
+
+
+def _tmap(fn, *trees):
+    return jax.tree_util.tree_map(fn, *trees)
+
+
+class OptState(NamedTuple):
+    count: jnp.ndarray  # scalar int32 step counter (post-increment convention)
+    mu: Optional[PyTree] = None  # first moment / momentum
+    nu: Optional[PyTree] = None  # second moment
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    """A base-level iterative solver ``u`` with its analytic ``du/dg``."""
+
+    name: str
+    init: Callable[[PyTree], OptState]
+    # (grads, state, params) -> (step_u, new_state)
+    update: Callable[[PyTree, OptState, PyTree], Tuple[PyTree, OptState]]
+    # (grads, state, params) -> diagonal of du/dg, same structure as params
+    adaptation: Callable[[PyTree, OptState, PyTree], PyTree]
+
+
+def apply_updates(params: PyTree, step: PyTree) -> PyTree:
+    """theta' = theta - u."""
+    return _tmap(lambda p, s: (p - s).astype(p.dtype), params, step)
+
+
+def _zeros_like(params):
+    return _tmap(jnp.zeros_like, params)
+
+
+# ---------------------------------------------------------------------------
+# SGD family
+# ---------------------------------------------------------------------------
+
+
+def sgd(lr: schedules.ScalarOrSchedule, weight_decay: float = 0.0) -> Optimizer:
+    """u = lr * (g + wd * theta).  du/dg = lr * I."""
+
+    lr_fn = schedules.resolve(lr)
+
+    def init(params):
+        del params
+        return OptState(count=jnp.zeros([], jnp.int32))
+
+    def update(grads, state, params):
+        step_lr = lr_fn(state.count)
+        if weight_decay:
+            step = _tmap(lambda g, p: step_lr * (g + weight_decay * p), grads, params)
+        else:
+            step = _tmap(lambda g: step_lr * g, grads)
+        return step, OptState(count=state.count + 1)
+
+    def adaptation(grads, state, params):
+        step_lr = lr_fn(state.count)
+        return _tmap(lambda g: jnp.full_like(g, step_lr), grads)
+
+    return Optimizer("sgd", init, update, adaptation)
+
+
+def momentum(
+    lr: schedules.ScalarOrSchedule, beta: float = 0.9, weight_decay: float = 0.0
+) -> Optimizer:
+    """Heavy-ball: m' = beta*m + g_eff; u = lr*m'.  du/dg = lr * I."""
+
+    lr_fn = schedules.resolve(lr)
+
+    def init(params):
+        return OptState(count=jnp.zeros([], jnp.int32), mu=_zeros_like(params))
+
+    def _geff(grads, params):
+        if weight_decay:
+            return _tmap(lambda g, p: g + weight_decay * p, grads, params)
+        return grads
+
+    def update(grads, state, params):
+        geff = _geff(grads, params)
+        mu = _tmap(lambda m, g: beta * m + g, state.mu, geff)
+        step_lr = lr_fn(state.count)
+        step = _tmap(lambda m: step_lr * m, mu)
+        return step, OptState(count=state.count + 1, mu=mu)
+
+    def adaptation(grads, state, params):
+        step_lr = lr_fn(state.count)
+        return _tmap(lambda g: jnp.full_like(g, step_lr), grads)
+
+    return Optimizer("momentum", init, update, adaptation)
+
+
+# ---------------------------------------------------------------------------
+# Adam family (paper Appendix C)
+# ---------------------------------------------------------------------------
+
+
+def _adam_math(g, m, v, count, b1, b2, eps, step_lr, wd, p):
+    """Shared Adam step + exact diagonal du/dg (Appendix C, without the
+    eps<<1 approximation — we keep the exact expression)."""
+
+    t = count + 1  # bias-correction uses the post-increment step index
+    m1 = b1 * m + (1.0 - b1) * g
+    v1 = b2 * v + (1.0 - b2) * g * g
+    bc1 = 1.0 - jnp.power(b1, t.astype(g.dtype))
+    bc2 = 1.0 - jnp.power(b2, t.astype(g.dtype))
+    mhat = m1 / bc1
+    vhat = v1 / bc2
+    denom = jnp.sqrt(vhat) + eps
+    step = step_lr * mhat / denom
+    if wd:
+        step = step + step_lr * wd * p
+
+    # d mhat / dg = (1-b1)/bc1 ; d vhat / dg = 2 (1-b2) g / bc2
+    a = (1.0 - b1) / bc1
+    b = (1.0 - b2) / bc2
+    sqrt_vhat = jnp.sqrt(vhat)
+    safe_sqrt = jnp.maximum(sqrt_vhat, 1e-15)
+    dstep = step_lr * (a / denom - mhat * b * g / (safe_sqrt * denom * denom))
+    return step, m1, v1, dstep
+
+
+def adam(
+    lr: schedules.ScalarOrSchedule,
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-8,
+    weight_decay: float = 0.0,
+) -> Optimizer:
+    """Adam [32]; ``weight_decay`` here is *decoupled* (AdamW-style) so the
+    adaptation matrix is unaffected by it (the wd term has no g dependence)."""
+
+    lr_fn = schedules.resolve(lr)
+
+    def init(params):
+        return OptState(
+            count=jnp.zeros([], jnp.int32),
+            mu=_zeros_like(params),
+            nu=_zeros_like(params),
+        )
+
+    def update(grads, state, params):
+        step_lr = lr_fn(state.count)
+        mu = _tmap(lambda m, g: b1 * m + (1.0 - b1) * g, state.mu, grads)
+        nu = _tmap(lambda v, g: b2 * v + (1.0 - b2) * g * g, state.nu, grads)
+
+        def one(m1, v1, g, p):
+            t = (state.count + 1).astype(g.dtype)
+            mhat = m1 / (1.0 - jnp.power(b1, t))
+            vhat = v1 / (1.0 - jnp.power(b2, t))
+            step = step_lr * mhat / (jnp.sqrt(vhat) + eps)
+            if weight_decay:
+                step = step + step_lr * weight_decay * p
+            return step
+
+        step = _tmap(one, mu, nu, grads, params)
+        return step, OptState(count=state.count + 1, mu=mu, nu=nu)
+
+    def adaptation(grads, state, params):
+        step_lr = lr_fn(state.count)
+
+        def one(g, m, v, p):
+            _, _, _, dstep = _adam_math(
+                g, m, v, state.count, b1, b2, eps, step_lr, weight_decay, p
+            )
+            return dstep
+
+        return _tmap(one, grads, state.mu, state.nu, params)
+
+    return Optimizer("adam", init, update, adaptation)
+
+
+def adamw(
+    lr: schedules.ScalarOrSchedule,
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-8,
+    weight_decay: float = 0.01,
+) -> Optimizer:
+    opt = adam(lr, b1=b1, b2=b2, eps=eps, weight_decay=weight_decay)
+    return dataclasses.replace(opt, name="adamw")
+
+
+def rmsprop(
+    lr: schedules.ScalarOrSchedule,
+    rho: float = 0.99,
+    eps: float = 1e-8,
+) -> Optimizer:
+    """v' = rho*v + (1-rho) g^2 ; u = lr * g / (sqrt(v') + eps)."""
+
+    lr_fn = schedules.resolve(lr)
+
+    def init(params):
+        return OptState(count=jnp.zeros([], jnp.int32), nu=_zeros_like(params))
+
+    def update(grads, state, params):
+        del params
+        step_lr = lr_fn(state.count)
+        nu = _tmap(lambda v, g: rho * v + (1.0 - rho) * g * g, state.nu, grads)
+        step = _tmap(lambda g, v: step_lr * g / (jnp.sqrt(v) + eps), grads, nu)
+        return step, OptState(count=state.count + 1, nu=nu)
+
+    def adaptation(grads, state, params):
+        del params
+        step_lr = lr_fn(state.count)
+
+        def one(g, v):
+            v1 = rho * v + (1.0 - rho) * g * g
+            sq = jnp.sqrt(v1)
+            denom = sq + eps
+            safe_sq = jnp.maximum(sq, 1e-15)
+            return step_lr * (1.0 / denom - g * (1.0 - rho) * g / (safe_sq * denom * denom))
+
+        return _tmap(one, grads, state.nu)
+
+    return Optimizer("rmsprop", init, update, adaptation)
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+_FACTORIES = {
+    "sgd": sgd,
+    "momentum": momentum,
+    "adam": adam,
+    "adamw": adamw,
+    "rmsprop": rmsprop,
+}
+
+
+def get_optimizer(name: str, lr: schedules.ScalarOrSchedule, **kwargs) -> Optimizer:
+    if name not in _FACTORIES:
+        raise ValueError(f"unknown optimizer {name!r}; have {sorted(_FACTORIES)}")
+    return _FACTORIES[name](lr, **kwargs)

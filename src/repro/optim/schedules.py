@@ -1,0 +1,69 @@
+"""Learning-rate schedules as pure functions of the step count.
+
+Every schedule is a ``Callable[[step], jnp.ndarray]`` so it can live inside
+jitted update rules. ``resolve(lr)`` lets optimizer factories accept either a
+float or a schedule.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Union
+
+import jax.numpy as jnp
+
+Schedule = Callable[[jnp.ndarray], jnp.ndarray]
+ScalarOrSchedule = Union[float, Schedule]
+
+
+def constant(value: float) -> Schedule:
+    def sched(step):
+        del step
+        return jnp.asarray(value, dtype=jnp.float32)
+
+    return sched
+
+
+def cosine_decay(init_value: float, decay_steps: int, alpha: float = 0.0) -> Schedule:
+    def sched(step):
+        frac = jnp.clip(step / max(decay_steps, 1), 0.0, 1.0)
+        cosine = 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+        return init_value * ((1.0 - alpha) * cosine + alpha)
+
+    return sched
+
+
+def linear_warmup_cosine(
+    init_value: float, warmup_steps: int, decay_steps: int, end_value: float = 0.0
+) -> Schedule:
+    def sched(step):
+        step = jnp.asarray(step, dtype=jnp.float32)
+        warm = init_value * step / max(warmup_steps, 1)
+        frac = jnp.clip((step - warmup_steps) / max(decay_steps - warmup_steps, 1), 0.0, 1.0)
+        cos = end_value + (init_value - end_value) * 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+        return jnp.where(step < warmup_steps, warm, cos)
+
+    return sched
+
+
+def linear_decay_with_warmup(
+    init_value: float, total_steps: int, warmup_proportion: float = 0.1
+) -> Schedule:
+    """The BERT-style schedule used in the paper's continued-pretraining runs."""
+
+    warmup_steps = max(int(total_steps * warmup_proportion), 1)
+
+    def sched(step):
+        step = jnp.asarray(step, dtype=jnp.float32)
+        warm = init_value * step / warmup_steps
+        decay = init_value * jnp.clip(
+            (total_steps - step) / max(total_steps - warmup_steps, 1), 0.0, 1.0
+        )
+        return jnp.where(step < warmup_steps, warm, decay)
+
+    return sched
+
+
+def resolve(lr: ScalarOrSchedule) -> Schedule:
+    if callable(lr):
+        return lr
+    return constant(float(lr))

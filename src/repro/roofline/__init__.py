@@ -1,0 +1,21 @@
+"""Roofline analysis from compiled dry-run artifacts (TPU v5e constants)."""
+
+from repro.roofline.analysis import (
+    HBM_BW,
+    HBM_BYTES,
+    ICI_BW,
+    PEAK_FLOPS,
+    Roofline,
+    analyze,
+    forward_flops,
+    param_counts,
+    step_bytes,
+    step_flops,
+)
+from repro.roofline.hlo_parse import collective_stats
+
+__all__ = [
+    "HBM_BW", "HBM_BYTES", "ICI_BW", "PEAK_FLOPS",
+    "Roofline", "analyze", "collective_stats", "forward_flops",
+    "param_counts", "step_bytes", "step_flops",
+]

@@ -1,0 +1,133 @@
+"""Trip-count-aware collective accounting from partitioned HLO text.
+
+XLA's ``cost_analysis`` counts while-loop (lax.scan) bodies ONCE, not
+multiplied by trip count — verified empirically (see EXPERIMENTS.md §Method).
+Collectives inside scanned layer stacks would be undercounted by ~num_layers.
+This parser:
+
+  1. splits the module into named computations,
+  2. reads every ``while`` op's ``body=%comp`` edge and its
+     ``known_trip_count`` from backend_config,
+  3. propagates multipliers ENTRY -> bodies (nested loops multiply),
+  4. sums collective result bytes x multiplier.
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Dict, List, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all", "collective-permute")
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+_COMP_HEADER = re.compile(r"^\s*(?:ENTRY\s+)?%([^\s(]+)\s*\(.*\)\s*->.*\{\s*$")
+_WHILE_RE = re.compile(r"while\(.*?\).*?body=%([^\s,]+)")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+
+
+def shape_bytes(segment: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(segment):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def split_computations(text: str) -> Dict[str, List[str]]:
+    comps: Dict[str, List[str]] = {}
+    cur = None
+    is_entry = None
+    for line in text.splitlines():
+        m = _COMP_HEADER.match(line)
+        if m:
+            cur = m.group(1)
+            if line.lstrip().startswith("ENTRY"):
+                is_entry = cur
+            comps[cur] = []
+            continue
+        if cur is not None:
+            if line.strip() == "}":
+                cur = None
+                continue
+            comps[cur].append(line)
+    if is_entry is not None:
+        comps["__entry__"] = comps[is_entry]
+    return comps
+
+
+def computation_multipliers(comps: Dict[str, List[str]]) -> Dict[str, float]:
+    """Multiplier per computation = product of enclosing loop trip counts."""
+
+    # edges: computation -> [(callee_body, trip)]
+    edges: Dict[str, List[Tuple[str, int]]] = {}
+    for name, lines in comps.items():
+        if name == "__entry__":
+            continue
+        for line in lines:
+            if " while(" in line:
+                mb = _WHILE_RE.search(line)
+                if not mb:
+                    continue
+                mt = _TRIP_RE.search(line)
+                trip = int(mt.group(1)) if mt else 1
+                edges.setdefault(name, []).append((mb.group(1), trip))
+
+    entry = None
+    for name, lines in comps.items():
+        if name != "__entry__" and comps.get("__entry__") is lines:
+            entry = name
+            break
+
+    mult: Dict[str, float] = {}
+    if entry is None:
+        return {name: 1.0 for name in comps}
+
+    def visit(name: str, m: float):
+        # a body may appear once; take max to be safe against re-visits
+        if mult.get(name, 0.0) >= m:
+            return
+        mult[name] = m
+        for body, trip in edges.get(name, []):
+            visit(body, m * trip)
+
+    visit(entry, 1.0)
+    for name in comps:
+        mult.setdefault(name, 1.0)
+    return mult
+
+
+def collective_stats(text: str) -> Dict[str, float]:
+    """Per-type collective bytes/op counts, trip-count scaled."""
+
+    comps = split_computations(text)
+    mult = computation_multipliers(comps)
+
+    out: Dict[str, float] = {f"{c}_bytes": 0.0 for c in COLLECTIVES}
+    out.update({f"{c}_count": 0.0 for c in COLLECTIVES})
+    for name, lines in comps.items():
+        if name == "__entry__":
+            continue
+        m = mult.get(name, 1.0)
+        for line in lines:
+            for c in COLLECTIVES:
+                mm = re.search(rf"=\s+(.*?)\s+{c}(?:-start)?\(", line)
+                if mm and f"{c}-done" not in line:
+                    out[f"{c}_bytes"] += shape_bytes(mm.group(1)) * m
+                    out[f"{c}_count"] += m
+                    break
+    out["total_bytes"] = sum(out[f"{c}_bytes"] for c in COLLECTIVES)
+    out["total_count"] = sum(out[f"{c}_count"] for c in COLLECTIVES)
+    return out

@@ -1,0 +1,112 @@
+"""Property-based tests on model-layer invariants (hypothesis)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro import configs
+from repro.models import attention as attn
+from repro.models import common as cm
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+
+
+class _Cfg:
+    """Minimal attention config stub."""
+
+    def __init__(self, H, KV, Dh, D, window=0, softcap=0.0):
+        self.num_heads, self.num_kv_heads, self.head_dim, self.d_model = H, KV, Dh, D
+        self.sliding_window = window
+        self.attn_logit_softcap = softcap
+        self.use_rope = False
+        self.rope_theta = 1e4
+        self.attn_chunk = 0
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 1000), g=st.sampled_from([1, 2, 4]))
+def test_gqa_equals_mha_with_tiled_kv(seed, g):
+    """GQA with KV heads tiled G times == MHA: grouping must be exact."""
+    B, S, KV, Dh = 2, 8, 2, 16
+    H = KV * g
+    key = jax.random.PRNGKey(seed)
+    q = jax.random.normal(key, (B, S, H, Dh))
+    k = jax.random.normal(jax.random.PRNGKey(seed + 1), (B, S, KV, Dh))
+    v = jax.random.normal(jax.random.PRNGKey(seed + 2), (B, S, KV, Dh))
+    pos = jnp.broadcast_to(jnp.arange(S), (B, S))
+    mask = attn.make_mask(pos, jnp.arange(S))
+    out_gqa = attn._sdpa(q, k, v, mask)
+    k_t = jnp.repeat(k, g, axis=2)
+    v_t = jnp.repeat(v, g, axis=2)
+    out_mha = attn._sdpa(q, k_t, v_t, mask)
+    np.testing.assert_allclose(np.asarray(out_gqa), np.asarray(out_mha), rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 100), window=st.sampled_from([2, 4, 8]))
+def test_local_mask_matches_global_when_window_covers(seed, window):
+    """A local mask with window >= S equals the global causal mask."""
+    S = window  # queries see at most `window` positions => same as causal
+    pos = jnp.broadcast_to(jnp.arange(S), (1, S))
+    m_local = attn.make_mask(pos, jnp.arange(S), local_flag=jnp.asarray(True), window=window)
+    m_global = attn.make_mask(pos, jnp.arange(S))
+    np.testing.assert_array_equal(np.asarray(m_local), np.asarray(m_global))
+
+
+def test_softcap_bounds_and_monotone():
+    x = jnp.linspace(-500, 500, 101)
+    y = cm.softcap(x, 50.0)
+    assert float(jnp.max(jnp.abs(y))) <= 50.0
+    assert bool(jnp.all(jnp.diff(y) >= 0))
+    np.testing.assert_allclose(np.asarray(cm.softcap(x, 0.0)), np.asarray(x))
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 100))
+def test_moe_uniform_router_keeps_token_norms(seed):
+    """With capacity ample and top-k normalized gates, MoE output is a convex
+    combination of expert outputs — finite and batch-shape preserving."""
+    cfg = configs.get_smoke_config("qwen2-moe-a2.7b")
+    p = moe_mod.init_moe(cfg, jax.random.PRNGKey(seed))
+    x = jax.random.normal(jax.random.PRNGKey(seed + 1), (2, 8, cfg.d_model)) * 0.5
+    out, aux = moe_mod.apply_moe(cfg, p, x)
+    assert out.shape == x.shape
+    assert np.all(np.isfinite(np.asarray(out)))
+    assert float(aux) > 0
+
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 50), chunk=st.sampled_from([4, 8, 16]))
+def test_mamba_chunk_invariance(seed, chunk):
+    """Chunked SSD must be invariant to the chunk size (== the recurrence)."""
+    cfg = configs.get_smoke_config("zamba2-7b")
+    p = ssm_mod.init_mamba(cfg, jax.random.PRNGKey(seed))
+    x = jax.random.normal(jax.random.PRNGKey(seed + 1), (1, 16, cfg.d_model)) * 0.3
+    outs = []
+    for q in (chunk, 16):
+        c = cfg.replace(ssm_chunk=q)
+        outs.append(np.asarray(ssm_mod.apply_mamba(c, p, x)))
+    np.testing.assert_allclose(outs[0], outs[1], rtol=2e-3, atol=2e-4)
+
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 50), chunk=st.sampled_from([2, 4, 8]))
+def test_rwkv_chunk_invariance(seed, chunk):
+    cfg = configs.get_smoke_config("rwkv6-1.6b")
+    p = ssm_mod.init_rwkv_time_mix(cfg, jax.random.PRNGKey(seed))
+    x = jax.random.normal(jax.random.PRNGKey(seed + 1), (1, 16, cfg.d_model)) * 0.3
+    outs = []
+    for q in (chunk, 16):
+        c = cfg.replace(ssm_chunk=q)
+        outs.append(np.asarray(ssm_mod.apply_rwkv_time_mix(c, p, x)))
+    np.testing.assert_allclose(outs[0], outs[1], rtol=2e-3, atol=2e-4)
+
+
+def test_causal_depthwise_conv_is_causal():
+    x = jnp.zeros((1, 8, 3)).at[0, 4, :].set(1.0)
+    w = jnp.ones((3, 4))
+    out = ssm_mod.causal_depthwise_conv(x, w, jnp.zeros((3,)))
+    assert np.all(np.asarray(out[0, :4]) == 0)  # nothing before the impulse
+    assert np.all(np.asarray(out[0, 4:]) >= 0)

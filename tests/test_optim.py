@@ -1,0 +1,116 @@
+"""Optimizer substrate tests.
+
+The critical invariant for SAMA is that ``Optimizer.adaptation`` returns the
+exact diagonal of du/dg of the *actual* update rule. We pin that against
+jax.jacfwd of the scalarized step function, per optimizer, at random
+(g, state) points.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import optim
+
+
+@pytest.fixture(autouse=True)
+def _x64():
+    jax.config.update("jax_enable_x64", True)
+    yield
+    jax.config.update("jax_enable_x64", False)
+
+
+def _rand_params(key, shapes=((3,), (2, 4))):
+    keys = jax.random.split(key, len(shapes))
+    return {f"w{i}": jax.random.normal(k, s, dtype=jnp.float64) for i, (k, s) in enumerate(zip(keys, shapes))}
+
+
+OPTS = [
+    ("sgd", dict(lr=0.1)),
+    ("sgd", dict(lr=0.05, weight_decay=0.01)),
+    ("momentum", dict(lr=0.1, beta=0.9)),
+    ("adam", dict(lr=1e-3)),
+    ("adam", dict(lr=1e-3, weight_decay=0.1)),
+    ("adamw", dict(lr=1e-3, weight_decay=0.01)),
+    ("rmsprop", dict(lr=1e-3)),
+]
+
+
+@pytest.mark.parametrize("name,kwargs", OPTS)
+def test_adaptation_matches_jacfwd(name, kwargs):
+    opt = optim.get_optimizer(name, **kwargs)
+    key = jax.random.PRNGKey(0)
+    params = _rand_params(key)
+    state = opt.init(params)
+
+    # warm the state with a couple of real steps so moments are non-trivial
+    for i in range(3):
+        g = _rand_params(jax.random.PRNGKey(10 + i))
+        step, state = opt.update(g, state, params)
+        params = optim.apply_updates(params, step)
+
+    grads = _rand_params(jax.random.PRNGKey(99))
+
+    # autodiff du/dg of the true update rule, leaf by leaf, elementwise
+    def step_of_g(flat_g, treedef, shapes):
+        leaves = []
+        off = 0
+        for s in shapes:
+            n = int(np.prod(s))
+            leaves.append(flat_g[off : off + n].reshape(s))
+            off += n
+        g = jax.tree_util.tree_unflatten(treedef, leaves)
+        step, _ = opt.update(g, state, params)
+        return jnp.concatenate([x.ravel() for x in jax.tree_util.tree_leaves(step)])
+
+    leaves, treedef = jax.tree_util.tree_flatten(grads)
+    shapes = [l.shape for l in leaves]
+    flat_g = jnp.concatenate([l.ravel() for l in leaves])
+    jac = jax.jacfwd(step_of_g)(flat_g, treedef, shapes)
+
+    # the update must be elementwise => jacobian diagonal
+    off_diag = jac - jnp.diag(jnp.diag(jac))
+    np.testing.assert_allclose(np.asarray(off_diag), 0.0, atol=1e-12)
+
+    ad = opt.adaptation(grads, state, params)
+    flat_ad = jnp.concatenate([x.ravel() for x in jax.tree_util.tree_leaves(ad)])
+    np.testing.assert_allclose(np.asarray(jnp.diag(jac)), np.asarray(flat_ad), rtol=1e-9, atol=1e-12)
+
+
+def test_sgd_adaptation_is_lr_identity():
+    opt = optim.sgd(0.25)
+    params = {"w": jnp.ones((4,))}
+    state = opt.init(params)
+    ad = opt.adaptation({"w": jnp.arange(4.0)}, state, params)
+    np.testing.assert_allclose(np.asarray(ad["w"]), 0.25)
+
+
+def test_apply_updates_subtracts():
+    params = {"w": jnp.ones((3,))}
+    new = optim.apply_updates(params, {"w": jnp.full((3,), 0.5)})
+    np.testing.assert_allclose(np.asarray(new["w"]), 0.5)
+
+
+def test_schedules_monotone_and_bounds():
+    s = optim.schedules.linear_warmup_cosine(1.0, warmup_steps=10, decay_steps=100)
+    vals = [float(s(jnp.asarray(t))) for t in range(0, 101, 10)]
+    assert vals[0] == 0.0
+    assert max(vals) <= 1.0 + 1e-6
+    assert vals[-1] <= vals[2]
+
+    d = optim.schedules.linear_decay_with_warmup(2e-5, total_steps=100, warmup_proportion=0.6)
+    assert float(d(jnp.asarray(0))) == 0.0
+    assert abs(float(d(jnp.asarray(60))) - 2e-5) < 1e-9
+    assert float(d(jnp.asarray(100))) <= 1e-12
+
+
+def test_adam_first_step_matches_reference():
+    # reference: step1 of Adam with zero init moments => u = lr * g/(|g|+eps)
+    opt = optim.adam(1e-2, b1=0.9, b2=0.999, eps=1e-8)
+    params = {"w": jnp.zeros((3,), jnp.float64)}
+    g = {"w": jnp.asarray([1.0, -2.0, 0.5], jnp.float64)}
+    state = opt.init(params)
+    step, _ = opt.update(g, state, params)
+    expect = 1e-2 * np.asarray([1.0, -2.0, 0.5]) / (np.abs([1.0, -2.0, 0.5]) + 1e-8)
+    np.testing.assert_allclose(np.asarray(step["w"]), expect, rtol=1e-6)
