@@ -27,10 +27,11 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro import optim
 from repro.core import EngineConfig, init_state, problems
 from repro.launch import distributed as dist
+from repro.launch.mesh import AxisType, make_mesh
 from repro.roofline import hlo_parse
 from benchmarks.common import mini_bert
 
-mesh = jax.make_mesh((8, 1), ("data", "model"), axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh = make_mesh((8, 1), ("data", "model"), axis_types=(AxisType.Auto,) * 2)
 model = mini_bert(num_labels=4, d_model=128)
 spec = problems.make_data_optimization_spec(model.classifier_per_example, reweight=True)
 lam = problems.init_data_optimization_lam(jax.random.PRNGKey(1), reweight=True)

@@ -15,7 +15,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import configs, data, optim
-from repro.core import Engine, EngineConfig, problems
+from repro.api import MetaLearner
+from repro.core import problems
 from repro.models import Model
 
 
@@ -77,9 +78,9 @@ def accuracy(model: Model, params, dataset, batch: int = 128) -> float:
     return correct / n
 
 
-def train_meta(model: Model, train, meta, *, method: str, steps: int, seed: int = 0,
+def train_meta(model: Model, train, meta, *, method: str = "sama", steps: int, seed: int = 0,
                reweight=True, correct=False, unroll: int = 2,
-               batch: int = 32, meta_batch: int = 32) -> Tuple[Dict, Engine]:
+               batch: int = 32, meta_batch: int = 32) -> Tuple[Dict, MetaLearner]:
     spec = problems.make_data_optimization_spec(
         model.classifier_per_example, reweight=reweight, correct=correct,
     )
@@ -88,15 +89,15 @@ def train_meta(model: Model, train, meta, *, method: str, steps: int, seed: int 
         num_classes=model.cfg.num_labels,
     )
     theta = model.init(jax.random.PRNGKey(seed))
-    eng = Engine(
-        spec, base_opt=optim.adam(1e-3), meta_opt=optim.adam(1e-3),
-        cfg=EngineConfig(method=method, unroll_steps=unroll),
+    learner = MetaLearner(
+        spec, base_opt="adam", base_lr=1e-3, meta_opt="adam", meta_lr=1e-3,
+        method=method, unroll_steps=unroll,
     )
-    state = eng.init(theta, lam)
+    learner.init(theta, lam)
     it = data.BatchIterator(train, meta, batch_size=batch, meta_batch_size=meta_batch,
                             unroll=unroll, seed=seed)
-    state, hist = eng.run(state, it, num_meta_steps=steps, log_every=max(steps // 4, 1))
-    return state, eng
+    learner.fit(it, steps, log_every=max(steps // 4, 1))
+    return learner.state, learner
 
 
 def train_plain(model: Model, train, *, steps: int, seed: int = 0, batch: int = 32):

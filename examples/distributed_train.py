@@ -29,8 +29,9 @@ def apply_fn(theta, x):
 
 
 def main():
-    mesh = jax.make_mesh((8, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.launch.mesh import AxisType, make_mesh
+
+    mesh = make_mesh((8, 1), ("data", "model"), axis_types=(AxisType.Auto,) * 2)
     print(f"devices: {len(jax.devices())}, mesh: {dict(zip(mesh.axis_names, mesh.devices.shape))}")
 
     per_ex = problems.softmax_per_example(apply_fn)

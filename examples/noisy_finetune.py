@@ -16,8 +16,9 @@ import time
 import jax
 import numpy as np
 
-from repro import configs, data, optim
-from repro.core import Engine, EngineConfig, problems
+from repro import configs, data
+from repro.api import MetaLearner
+from repro.core import available_methods, problems
 from repro.models import Model
 
 
@@ -25,7 +26,7 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--steps", type=int, default=150)
     ap.add_argument("--full", action="store_true", help="full bert-base (needs accelerator)")
-    ap.add_argument("--method", default="sama", choices=["sama", "sama_na", "t1t2", "neumann", "cg"])
+    ap.add_argument("--method", default="sama", choices=list(available_methods()))
     ap.add_argument("--label-correct", action="store_true")
     args = ap.parse_args()
 
@@ -48,15 +49,16 @@ def main():
         jax.random.PRNGKey(1), reweight=True, correct=args.label_correct,
         num_classes=cfg.num_labels,
     )
-    engine = Engine(
-        spec, base_opt=optim.adam(1e-3), meta_opt=optim.adam(1e-3),
-        cfg=EngineConfig(method=args.method, unroll_steps=2),
+    learner = MetaLearner(
+        spec, base_opt="adam", base_lr=1e-3, meta_opt="adam", meta_lr=1e-3,
+        method=args.method, unroll_steps=2,
     )
-    state = engine.init(model.init(jax.random.PRNGKey(0)), lam)
+    learner.init(model.init(jax.random.PRNGKey(0)), lam)
 
     it = data.BatchIterator(train, dev, batch_size=32, meta_batch_size=32, unroll=2, seed=0)
     t0 = time.time()
-    state, hist = engine.run(state, it, num_meta_steps=args.steps, log_every=25)
+    hist = learner.fit(it, args.steps, log_every=25)
+    state = learner.state
     for h in hist:
         print({k: round(v, 4) for k, v in h.items()})
     print(f"meta-training took {time.time() - t0:.1f}s "

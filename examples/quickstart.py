@@ -1,4 +1,5 @@
-"""Quickstart: SAMA data reweighting in ~60 lines.
+"""Quickstart: SAMA data reweighting in ~60 lines, via the level-1 API
+(repro.api.MetaLearner — see DESIGN.md §5).
 
 40% of the training labels are flipped; a small clean meta set guides
 MetaWeightNet to downweight the noise. Runs in under a minute on CPU.
@@ -10,8 +11,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro import optim
-from repro.core import Engine, EngineConfig, problems
+from repro.api import MetaLearner
+from repro.core import problems
 from repro.core.meta_modules import apply_weight_net, weight_features
 
 # --- a tiny noisy classification problem -----------------------------------
@@ -35,13 +36,13 @@ spec = problems.make_data_optimization_spec(
 theta0 = {"w": jnp.zeros((d, 2)), "b": jnp.zeros((2,))}
 lam0 = problems.init_data_optimization_lam(jax.random.PRNGKey(3), reweight=True)
 
-engine = Engine(
+learner = MetaLearner(
     spec,
-    base_opt=optim.adam(1e-2),
-    meta_opt=optim.adam(1e-2),
-    cfg=EngineConfig(method="sama", unroll_steps=2),  # the paper's algorithm
+    base_opt="adam", base_lr=1e-2,
+    meta_opt="adam", meta_lr=1e-2,
+    method="sama", unroll_steps=2,  # the paper's algorithm
 )
-state = engine.init(theta0, lam0)
+learner.init(theta0, lam0)
 
 rng = np.random.default_rng(0)
 
@@ -51,7 +52,8 @@ def batches():
         midx = rng.integers(0, 256, 64)
         yield ({"x": X[idx], "y": y_noisy[idx]}, {"x": Xm[midx], "y": ym[midx]})
 
-state, history = engine.run(state, batches(), num_meta_steps=200, log_every=50)
+history = learner.fit(batches(), steps=200, log_every=50)
+state = learner.state
 for h in history:
     print({k: round(v, 4) for k, v in h.items()})
 

@@ -1,18 +1,19 @@
 """Checkpoint/resume round-trip for the full bilevel EngineState (both
-levels' parameters + optimizer moments + step counter).
+levels' parameters + optimizer moments + step counter), driven through the
+MetaLearner facade's integrated save/load (DESIGN.md §5).
 
     PYTHONPATH=src python examples/resume_from_checkpoint.py
 """
 
-import os
 import tempfile
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro import checkpoint, configs, data, optim
-from repro.core import Engine, EngineConfig, problems
+from repro import configs, data
+from repro.api import MetaLearner
+from repro.core import problems
 from repro.models import Model
 
 
@@ -21,9 +22,6 @@ def main():
     model = Model(cfg)
     spec = problems.make_data_optimization_spec(model.per_example, reweight=True)
     lam = problems.init_data_optimization_lam(jax.random.PRNGKey(1), reweight=True)
-    eng = Engine(spec, base_opt=optim.adam(1e-3), meta_opt=optim.adam(1e-3),
-                 cfg=EngineConfig(method="sama", unroll_steps=1))
-    state = eng.init(model.init(jax.random.PRNGKey(0)), lam)
 
     lm = data.LMStreamConfig(vocab_size=cfg.vocab_size, seq_len=32)
     rng = np.random.default_rng(0)
@@ -35,23 +33,35 @@ def main():
             yield {"tokens": jnp.asarray(b)}, {"tokens": jnp.asarray(m)}
 
     it = batches()
-    state, hist = eng.run(state, it, num_meta_steps=5, log_every=5)
-    print("before save:", hist[-1])
-
     with tempfile.TemporaryDirectory() as tmp:
-        path = os.path.join(tmp, "step_000005")
-        checkpoint.save(path, state, step=5, meta={"arch": cfg.name})
+        learner = MetaLearner(
+            spec, base_opt="adam", base_lr=1e-3, meta_opt="adam", meta_lr=1e-3,
+            method="sama", unroll_steps=1, checkpoint_dir=tmp,
+        )
+        learner.init(model.init(jax.random.PRNGKey(0)), lam)
+        hist = learner.fit(it, 5, log_every=5)
+        print("before save:", hist[-1])
+
+        path = learner.save()
         print("saved to", path)
+        state_at_save = learner.state
 
-        restored, manifest = checkpoint.restore(path, state)
-        print("restored step", manifest["step"], "meta", manifest["meta"])
+        # a second learner (fresh params) resumes from the newest
+        # checkpoint under the same directory
+        resumed = MetaLearner(
+            spec, base_opt="adam", base_lr=1e-3, meta_opt="adam", meta_lr=1e-3,
+            method="sama", unroll_steps=1, checkpoint_dir=tmp,
+        )
+        resumed.init(model.init(jax.random.PRNGKey(42)), lam)  # structure template
+        resumed.load()  # newest step_* in checkpoint_dir
 
-        for a, b in zip(jax.tree_util.tree_leaves(state), jax.tree_util.tree_leaves(restored)):
+        for a, b in zip(jax.tree_util.tree_leaves(state_at_save),
+                        jax.tree_util.tree_leaves(resumed.state)):
             np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
         print("bitwise round-trip OK; resuming training...")
 
-        state2, hist2 = eng.run(restored, it, num_meta_steps=5, log_every=5)
-        print("after resume:", hist2[-1], "step:", int(state2.step))
+        hist2 = resumed.fit(it, 5, log_every=5)
+        print("after resume:", hist2[-1], "step:", int(resumed.state.step))
 
 
 if __name__ == "__main__":

@@ -1,0 +1,223 @@
+"""The three-level public API (DESIGN.md §5), learn2learn-style.
+
+Level 1 — ``repro.api.MetaLearner``: one object that owns the bilevel
+  program end-to-end. Pick optimizers by name, a hypergradient method by
+  registry name (or hand in a ``HypergradMethod`` instance), optionally a
+  mesh + schedule, and you get ``init / step / fit / save / load`` with
+  checkpointing wired in. Users never hand-assemble
+  spec -> opt -> engine -> mesh again.
+
+Level 2 — ``repro.core.Engine`` / ``make_meta_step`` and
+  ``repro.launch.distributed.make_manual_step``: pure step-function
+  builders over the ``HypergradMethod`` protocol, for people composing
+  their own training loops or launchers.
+
+Level 3 — ``repro.core.methods`` / ``repro.core.sama`` /
+  ``repro.core.baselines``: the raw estimator math and the protocol
+  itself, for people writing new estimators (``register_method``) or
+  studying the algorithms.
+
+Typical use::
+
+    from repro import api, optim
+    from repro.core import problems
+
+    learner = api.MetaLearner(
+        spec,
+        base_opt="adam", base_lr=1e-2,
+        meta_opt="adam", meta_lr=1e-2,
+        method="sama", unroll_steps=2,
+        checkpoint_dir="out/ck",
+    )
+    learner.init(theta0, lam0)
+    history = learner.fit(batch_iter, steps=200, log_every=50)
+    learner.save()
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+from typing import Any, Dict, Iterator, List, Optional, Tuple, Union
+
+import jax
+
+from repro import checkpoint, optim
+from repro.core.bilevel import BilevelSpec
+from repro.core.engine import EngineConfig, EngineState, init_state, make_meta_step, run_loop
+from repro.core.methods import HypergradMethod
+
+PyTree = Any
+
+#: schedule choices: "auto" = single_sync when a mesh is given, else jit;
+#: "pjit" = naive-DDP Engine step (XLA places the collectives);
+#: "single_sync" = the paper's one-bucket shard_map schedule.
+SCHEDULES = ("auto", "pjit", "single_sync")
+
+_ENGINE_FIELDS = {f.name for f in dataclasses.fields(EngineConfig)}
+
+
+class MetaLearner:
+    """High-level facade over the bilevel Engine and the distributed
+    schedules. Holds the (pure) step function plus the current EngineState;
+    all mutation is confined to ``self.state``."""
+
+    def __init__(
+        self,
+        spec: BilevelSpec,
+        *,
+        base_opt: Union[str, optim.Optimizer] = "adam",
+        base_lr: float = 1e-3,
+        meta_opt: Union[str, optim.Optimizer] = "adam",
+        meta_lr: float = 1e-3,
+        method: Union[str, HypergradMethod] = "sama",
+        unroll_steps: int = 1,
+        engine_config: Optional[EngineConfig] = None,
+        mesh=None,
+        schedule: str = "auto",
+        allow_nonlinear: bool = False,
+        jit: bool = True,
+        checkpoint_dir: Optional[str] = None,
+        **method_knobs,
+    ):
+        if schedule not in SCHEDULES:
+            raise ValueError(f"schedule {schedule!r} not in {SCHEDULES}")
+        unknown = set(method_knobs) - _ENGINE_FIELDS
+        if unknown:
+            raise TypeError(f"unknown method knobs {sorted(unknown)}; "
+                            f"EngineConfig accepts {sorted(_ENGINE_FIELDS)}")
+
+        self.spec = spec
+        self.base_opt = optim.get_optimizer(base_opt, base_lr) if isinstance(base_opt, str) else base_opt
+        self.meta_opt = optim.get_optimizer(meta_opt, meta_lr) if isinstance(meta_opt, str) else meta_opt
+        if engine_config is not None:
+            if method != "sama" or unroll_steps != 1 or method_knobs:
+                raise ValueError(
+                    "pass either engine_config or method/unroll_steps/method knobs, "
+                    "not both — the explicit knobs would be silently ignored"
+                )
+            self.cfg = engine_config
+        else:
+            self.cfg = EngineConfig(method=method, unroll_steps=unroll_steps, **method_knobs)
+        self.method = self.cfg.resolve()
+        self.mesh = mesh
+        self.checkpoint_dir = checkpoint_dir
+        self.state: Optional[EngineState] = None
+
+        if schedule == "auto":
+            schedule = "single_sync" if mesh is not None else "pjit"
+        if schedule == "single_sync":
+            if mesh is None:
+                raise ValueError("schedule='single_sync' needs a mesh")
+            from repro.launch.distributed import make_manual_step
+
+            step = make_manual_step(
+                self.spec, self.base_opt, self.meta_opt, self.cfg, mesh,
+                allow_nonlinear=allow_nonlinear,
+            )
+        else:
+            step = make_meta_step(self.spec, self.base_opt, self.meta_opt, self.cfg)
+        self.schedule = schedule
+        self.step_fn = jax.jit(step) if jit else step
+
+    # -- lifecycle ---------------------------------------------------------
+
+    def init(self, theta: PyTree, lam: PyTree) -> EngineState:
+        """Build the EngineState (both levels' params + optimizer moments)."""
+        self.state = init_state(theta, lam, self.base_opt, self.meta_opt)
+        return self.state
+
+    def step(self, base_batches, meta_batch) -> Dict[str, Any]:
+        """One meta step: K base updates + one meta update. Advances
+        ``self.state`` and returns the metric dict (jax scalars)."""
+
+        if self.state is None:
+            raise RuntimeError("call init(theta, lam) or load(...) before step()")
+        if self.mesh is not None:
+            with self.mesh:
+                self.state, metrics = self.step_fn(self.state, base_batches, meta_batch)
+        else:
+            self.state, metrics = self.step_fn(self.state, base_batches, meta_batch)
+        return metrics
+
+    def fit(
+        self,
+        batch_iter: Iterator[Tuple[Any, Any]],
+        steps: int,
+        *,
+        log_every: int = 0,
+        save_every: int = 0,
+    ) -> List[Dict[str, float]]:
+        """Run ``steps`` meta steps from an iterator of
+        (base_batches[K], meta_batch). Checkpoints every ``save_every``
+        steps when a checkpoint_dir is configured."""
+
+        if save_every and self.checkpoint_dir is None:
+            raise ValueError("fit(save_every=...) needs a checkpoint_dir")
+        if self.state is None:
+            raise RuntimeError("call init(theta, lam) or load(...) before fit()")
+
+        def step_adapter(state, base_batches, meta_batch):
+            assert state is self.state
+            metrics = self.step(base_batches, meta_batch)  # advances self.state
+            return self.state, metrics
+
+        def on_step(i, state):
+            if save_every and (i + 1) % save_every == 0:
+                self.save()
+
+        _, history = run_loop(step_adapter, self.state, batch_iter, steps,
+                              log_every, on_step=on_step)
+        return history
+
+    # -- checkpointing -----------------------------------------------------
+
+    def save(self, path: Optional[str] = None, *, meta: Optional[Dict[str, Any]] = None) -> str:
+        """Checkpoint the full EngineState. Default path:
+        ``{checkpoint_dir}/step_{NNNNNN}``. ``meta`` entries are merged into
+        the manifest alongside the learner's own (method/unroll/schedule)."""
+
+        if self.state is None:
+            raise RuntimeError("nothing to save: no state")
+        step = int(self.state.step)
+        if path is None:
+            if self.checkpoint_dir is None:
+                raise ValueError("no path given and no checkpoint_dir configured")
+            path = os.path.join(self.checkpoint_dir, f"step_{step:06d}")
+        manifest_meta = {"method": self.method.name,
+                         "unroll_steps": self.cfg.unroll_steps,
+                         "schedule": self.schedule}
+        if meta:
+            manifest_meta.update(meta)
+        checkpoint.save(path, self.state, step=step, meta=manifest_meta)
+        return path
+
+    def load(self, path: Optional[str] = None) -> EngineState:
+        """Restore the EngineState saved by ``save``. With no ``path``, the
+        newest ``step_*`` under ``checkpoint_dir``. Needs a template state
+        (from ``init``) to validate structure against."""
+
+        if self.state is None:
+            raise RuntimeError("call init(theta, lam) first: restore validates "
+                               "against the live state structure")
+        if path is None:
+            if self.checkpoint_dir is None:
+                raise ValueError("no path given and no checkpoint_dir configured")
+            path = checkpoint.latest_step(self.checkpoint_dir)
+            if path is None:
+                raise FileNotFoundError(f"no step_* checkpoints under {self.checkpoint_dir}")
+        state, manifest = checkpoint.restore(path, self.state)
+        # the EngineState structure is method-independent, so a structural
+        # match alone would silently resume a different estimator's
+        # trajectory — cross-check the manifest save() wrote.
+        meta = manifest.get("meta", {})
+        for key, mine in (("method", self.method.name),
+                          ("unroll_steps", self.cfg.unroll_steps)):
+            if key in meta and meta[key] != mine:
+                raise ValueError(
+                    f"checkpoint {path} was saved with {key}={meta[key]!r} but this "
+                    f"learner uses {mine!r}; construct a matching MetaLearner "
+                    "(or restore via repro.checkpoint directly to override)"
+                )
+        self.state = state
+        return self.state

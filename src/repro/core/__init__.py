@@ -1,23 +1,41 @@
 """The paper's primary contribution: SAMA — scalable meta learning as
 bilevel optimization with (i) identity base-Jacobian approximation,
 (ii) analytic algorithmic adaptation for adaptive optimizers, and
-(iii) a single-sync distributed schedule (see launch.distributed)."""
+(iii) a single-sync distributed schedule (see launch.distributed).
+
+Hypergradient estimators are first-class objects behind the
+``repro.core.methods`` registry (DESIGN.md §2-3)."""
 
 from repro.core.bilevel import BilevelSpec
 from repro.core.engine import Engine, EngineConfig, EngineState, init_state, make_meta_step
+from repro.core.methods import (
+    HypergradMethod,
+    MethodContext,
+    ReduceContract,
+    available_methods,
+    register_method,
+    resolve_method,
+)
 from repro.core.sama import SAMAConfig, SAMAResult, sama_hypergrad
-from repro.core import baselines, meta_modules
+from repro.core import baselines, meta_modules, methods
 
 __all__ = [
     "BilevelSpec",
     "Engine",
     "EngineConfig",
     "EngineState",
+    "HypergradMethod",
+    "MethodContext",
+    "ReduceContract",
     "SAMAConfig",
     "SAMAResult",
+    "available_methods",
     "baselines",
     "init_state",
     "make_meta_step",
     "meta_modules",
+    "methods",
+    "register_method",
+    "resolve_method",
     "sama_hypergrad",
 ]

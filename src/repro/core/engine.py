@@ -1,37 +1,49 @@
 """The meta-training Engine.
 
 One ``meta_step`` = K unrolled base optimizer steps + one meta update, with
-the hypergradient algorithm selected by config ("sama", "sama_na", "t1t2",
-"neumann", "cg", "iterdiff") — this is the paper's whole ablation surface
-(Tables 8/9) behind one switch.
+the hypergradient estimator resolved through the ``repro.core.methods``
+registry — the paper's whole ablation surface (Tables 8/9) behind one
+config value, and open to third-party estimators via ``register_method``.
 
 The Engine builds a *pure* step function (state, base_batches, meta_batch) ->
 (state, metrics) so it can be jit'ed on one device (benchmarks, examples) or
 handed to the launcher which wraps it in pjit/shard_map for the production
 mesh. ``base_batches`` carries a leading unroll axis of length K.
+
+The step is method-agnostic: unroll -> ``method.local_terms`` (shard-local
+math) -> identity reduce (this is the single-device path) ->
+``method.finalize`` (hypergradient + post-update hook). The distributed
+single-sync schedule in ``launch.distributed`` drives the SAME protocol,
+inserting its one bucketed all-reduce between stages 2 and 3.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+from typing import Any, Callable, Dict, NamedTuple, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import baselines as bl
-from repro.core import sama as sama_mod
+from repro.core import methods as methods_mod
 from repro.core.bilevel import BilevelSpec
+from repro.core.methods import HypergradMethod, MethodContext
+from repro.core.sama import global_norm
 from repro.optim import Optimizer, OptState, apply_updates
 
 PyTree = Any
 
+#: The built-in estimators (kept for back-compat; the authoritative list is
+#: ``methods.available_methods()``, which also includes custom registrations).
 METHODS = ("sama", "sama_na", "t1t2", "neumann", "cg", "iterdiff")
 
 
 @dataclasses.dataclass(frozen=True)
 class EngineConfig:
-    method: str = "sama"
+    """``method`` is a registry name or a HypergradMethod instance; the
+    remaining per-method knobs feed the built-in factories."""
+
+    method: Union[str, HypergradMethod] = "sama"
     unroll_steps: int = 1
     alpha: float = 1.0  # SAMA perturbation scale
     base_nudge: bool = True
@@ -43,17 +55,13 @@ class EngineConfig:
     cg_damping: float = 1e-3
 
     def __post_init__(self):
-        if self.method not in METHODS:
-            raise ValueError(f"method {self.method!r} not in {METHODS}")
+        if isinstance(self.method, str) and self.method not in methods_mod.available_methods():
+            raise ValueError(
+                f"method {self.method!r} not registered; have {methods_mod.available_methods()}"
+            )
 
-    @property
-    def sama_cfg(self) -> sama_mod.SAMAConfig:
-        return sama_mod.SAMAConfig(
-            alpha=self.alpha,
-            adapt=(self.method == "sama"),
-            base_nudge=self.base_nudge and self.method in ("sama", "sama_na"),
-            adapt_clip=self.adapt_clip,
-        )
+    def resolve(self) -> HypergradMethod:
+        return methods_mod.resolve_method(self.method, self)
 
 
 class EngineState(NamedTuple):
@@ -93,66 +101,73 @@ def _unroll_base(spec: BilevelSpec, base_opt: Optimizer, theta, opt_state, lam, 
     return theta, opt_state, g_last, st_at_g, losses
 
 
+def make_context(
+    base_opt: Optimizer,
+    state: EngineState,
+    base_batches,
+    meta_batch,
+    *,
+    theta,
+    base_opt_state,
+    g_base,
+) -> MethodContext:
+    """Assemble the MethodContext a hypergradient method consumes. Shared by
+    the Engine step and the distributed schedule so both hand methods the
+    exact same view of the unroll."""
+
+    return MethodContext(
+        base_opt=base_opt,
+        theta0=state.theta,
+        theta=theta,
+        lam=state.lam,
+        g_base=g_base,
+        base_opt_state=base_opt_state,
+        base_batches=base_batches,
+        last_batch=jax.tree_util.tree_map(lambda x: x[-1], base_batches),
+        meta_batch=meta_batch,
+    )
+
+
+def step_metrics(method: HypergradMethod, terms, hyper, base_losses) -> Dict[str, jnp.ndarray]:
+    """The uniform metric dict. ``eps`` is kept for every method (zero when
+    the method has no step-size notion) so logs/benchmarks stay columnar."""
+
+    metrics = {
+        "base_loss": jnp.mean(base_losses),
+        "meta_loss": terms["meta_loss"],
+        "hypergrad_norm": global_norm(hyper),
+        "eps": jnp.zeros([], jnp.float32),
+    }
+    for k, v in method.metrics(terms).items():
+        metrics[k] = v
+    return metrics
+
+
 def make_meta_step(
     spec: BilevelSpec,
     base_opt: Optimizer,
     meta_opt: Optimizer,
     cfg: EngineConfig = EngineConfig(),
 ) -> Callable[[EngineState, Any, Any], Tuple[EngineState, Dict[str, jnp.ndarray]]]:
-    """Build the pure meta-step function."""
+    """Build the pure, method-agnostic meta-step function."""
+
+    method = cfg.resolve()
 
     def meta_step(state: EngineState, base_batches, meta_batch):
-        theta0 = state.theta
-
         theta, b_state, g_base, st_at_g, base_losses = _unroll_base(
             spec, base_opt, state.theta, state.base_opt_state, state.lam, base_batches
         )
-
-        last_batch = jax.tree_util.tree_map(lambda x: x[-1], base_batches)
-        eps = jnp.zeros([], jnp.float32)
-
-        if cfg.method in ("sama", "sama_na"):
-            res = sama_mod.sama_hypergrad(
-                spec, theta, state.lam, last_batch, meta_batch,
-                base_opt=base_opt, base_opt_state=st_at_g, g_base=g_base,
-                cfg=cfg.sama_cfg,
-            )
-            hyper, meta_loss, eps = res.hypergrad, res.meta_loss, res.eps
-            theta = sama_mod.apply_base_nudge(theta, res.v, res.eps, cfg.sama_cfg)
-        elif cfg.method == "t1t2":
-            meta_loss = spec.meta_scalar(theta, state.lam, meta_batch)
-            hyper = bl.t1t2_hypergrad(spec, theta, state.lam, last_batch, meta_batch)
-        elif cfg.method == "neumann":
-            meta_loss = spec.meta_scalar(theta, state.lam, meta_batch)
-            hyper = bl.neumann_hypergrad(
-                spec, theta, state.lam, last_batch, meta_batch,
-                num_terms=cfg.neumann_terms, scale=cfg.neumann_scale,
-            )
-        elif cfg.method == "cg":
-            meta_loss = spec.meta_scalar(theta, state.lam, meta_batch)
-            hyper = bl.cg_hypergrad(
-                spec, theta, state.lam, last_batch, meta_batch,
-                num_iters=cfg.cg_iters, damping=cfg.cg_damping,
-            )
-        elif cfg.method == "iterdiff":
-            # MAML-style: the hypergradient differentiates through the whole
-            # unroll from theta0 (memory ~ K backward graphs).
-            meta_loss = spec.meta_scalar(theta, state.lam, meta_batch)
-            hyper = bl.iterdiff_hypergrad(
-                spec, theta0, state.lam, base_batches, meta_batch, base_opt=base_opt
-            )
-        else:  # pragma: no cover
-            raise AssertionError(cfg.method)
+        ctx = make_context(
+            base_opt, state, base_batches, meta_batch,
+            theta=theta, base_opt_state=st_at_g, g_base=g_base,
+        )
+        terms = methods_mod.validate_terms(method, method.local_terms(spec, ctx))
+        # single-device / pjit path: identity reduce between stages 2 and 3
+        hyper, theta = method.finalize(terms, ctx)
 
         upd, m_state = meta_opt.update(hyper, state.meta_opt_state, state.lam)
         lam = apply_updates(state.lam, upd)
 
-        metrics = {
-            "base_loss": jnp.mean(base_losses),
-            "meta_loss": meta_loss,
-            "hypergrad_norm": sama_mod.global_norm(hyper),
-            "eps": eps,
-        }
         new_state = EngineState(
             theta=theta,
             base_opt_state=b_state,
@@ -160,9 +175,27 @@ def make_meta_step(
             meta_opt_state=m_state,
             step=state.step + 1,
         )
-        return new_state, metrics
+        return new_state, step_metrics(method, terms, hyper, base_losses)
 
     return meta_step
+
+
+def run_loop(step_fn, state, batch_iter, num_steps: int, log_every: int = 0, on_step=None):
+    """The shared training loop: drive ``step_fn`` over an iterator of
+    (base_batches[K], meta_batch), collecting float-cast metric history at
+    ``log_every`` cadence. Used by both Engine.run and MetaLearner.fit so
+    the logging semantics cannot diverge. ``on_step(i, state)`` runs after
+    every step (checkpoint hooks)."""
+
+    history = []
+    for i in range(num_steps):
+        base_batches, meta_batch = next(batch_iter)
+        state, metrics = step_fn(state, base_batches, meta_batch)
+        if log_every and (i % log_every == 0 or i == num_steps - 1):
+            history.append({k: float(v) for k, v in metrics.items()} | {"step": i})
+        if on_step is not None:
+            on_step(i, state)
+    return state, history
 
 
 class Engine:
@@ -182,10 +215,4 @@ class Engine:
     def run(self, state: EngineState, batch_iter, num_meta_steps: int, log_every: int = 0):
         """batch_iter yields (base_batches[K], meta_batch)."""
 
-        history = []
-        for i in range(num_meta_steps):
-            base_batches, meta_batch = next(batch_iter)
-            state, metrics = self.step_fn(state, base_batches, meta_batch)
-            if log_every and (i % log_every == 0 or i == num_meta_steps - 1):
-                history.append({k: float(v) for k, v in metrics.items()} | {"step": i})
-        return state, history
+        return run_loop(self.step_fn, state, batch_iter, num_meta_steps, log_every)

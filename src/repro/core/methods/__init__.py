@@ -1,0 +1,51 @@
+"""First-class hypergradient estimators (DESIGN.md §2-3).
+
+Importing this package registers the six built-in methods. Third-party
+estimators call ``register_method`` and then work through ``EngineConfig``
+strings, ``Engine``, ``launch.distributed.make_manual_step`` and
+``repro.api.MetaLearner`` without touching core.
+"""
+
+from repro.core.methods.base import (
+    HypergradMethod,
+    LocalTerms,
+    MethodContext,
+    ReduceContract,
+    available_methods,
+    register_method,
+    resolve_method,
+    unregister_method,
+    validate_terms,
+)
+from repro.core.methods.sama import SAMAMethod
+from repro.core.methods.baselines import (
+    CGConfig,
+    CGMethod,
+    IterDiffConfig,
+    IterDiffMethod,
+    NeumannConfig,
+    NeumannMethod,
+    T1T2Config,
+    T1T2Method,
+)
+
+__all__ = [
+    "CGConfig",
+    "CGMethod",
+    "HypergradMethod",
+    "IterDiffConfig",
+    "IterDiffMethod",
+    "LocalTerms",
+    "MethodContext",
+    "NeumannConfig",
+    "NeumannMethod",
+    "ReduceContract",
+    "SAMAMethod",
+    "T1T2Config",
+    "T1T2Method",
+    "available_methods",
+    "register_method",
+    "resolve_method",
+    "unregister_method",
+    "validate_terms",
+]

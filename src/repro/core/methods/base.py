@@ -1,0 +1,194 @@
+"""The HypergradMethod protocol and registry (DESIGN.md §2-3).
+
+A hypergradient estimator is a first-class object with a declared
+communication contract, so the Engine (single device / pjit) and the
+single-sync distributed schedule (launch.distributed) can both drive ANY
+method through the same three-stage lifecycle:
+
+    1. ``local_terms(spec, ctx)``  — strictly shard-local math. No
+       collectives may appear here; the schedule owns all communication.
+       Returns a dict of named terms; ``"hypergrad"`` and ``"meta_loss"``
+       are mandatory, anything else (e.g. SAMA's ``v``/``eps``) is method
+       state that the finalize stage needs.
+    2. reduction — owned by the CALLER. The Engine's single-device path is
+       an identity reduce; the manual schedule pmean-buckets exactly the
+       terms named by ``reduce_contract.terms`` in its ONE meta-level
+       all-reduce.
+    3. ``finalize(terms, ctx)`` — consumes (possibly reduced) terms and
+       returns ``(hypergrad, theta_post)``. Post-update hooks that must see
+       replica-consistent values live here (SAMA's base nudge).
+
+New estimators register a factory under a string name and immediately work
+everywhere an ``EngineConfig.method`` string is accepted — Engine,
+``make_manual_step``, ``repro.api.MetaLearner`` — without touching core.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.bilevel import BilevelSpec
+from repro.optim import Optimizer, OptState
+
+PyTree = Any
+
+#: A method's per-shard output: named jax values. "hypergrad" (pytree like
+#: lam) and "meta_loss" (scalar) are mandatory; extra keys are method state.
+LocalTerms = Dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class ReduceContract:
+    """What the distributed schedule is allowed to do with local terms.
+
+    ``terms``: the LocalTerms keys that ride the single bucketed all-reduce
+      (an unweighted mean over data shards). Must include "hypergrad" and
+      "meta_loss"; SAMA additionally buckets ("v", "eps") so the base nudge
+      stays replica-consistent without a second sync point.
+    ``linear``: True when the shard-mean of local terms IS the method's own
+      estimator on the global batch (up to identical-shard equality) —
+      i.e. every reduced term is an average of per-example quantities.
+      Iterative solvers (CG, Neumann) and unrolled differentiation are
+      nonlinear in the shard data, so averaging their local estimates is a
+      different (local-solve) estimator; the manual schedule refuses them
+      unless explicitly overridden.
+    """
+
+    terms: Tuple[str, ...] = ("hypergrad", "meta_loss")
+    linear: bool = True
+
+    def __post_init__(self):
+        for required in ("hypergrad", "meta_loss"):
+            if required not in self.terms:
+                raise ValueError(f"reduce contract must include {required!r}, got {self.terms}")
+
+
+@dataclasses.dataclass(frozen=True)
+class MethodContext:
+    """Everything the base-level unroll hands to a hypergradient method.
+
+    Built once per meta step by the caller (Engine or manual schedule) after
+    the K-step base unroll; all array members are traced values.
+    """
+
+    base_opt: Optimizer
+    theta0: PyTree  # base params BEFORE the unroll (iterdiff re-unrolls from here)
+    theta: PyTree  # base params AFTER the unroll (theta*)
+    lam: PyTree
+    g_base: Optional[PyTree]  # last base gradient (synced on the manual path)
+    base_opt_state: OptState  # optimizer state AT WHICH g_base was computed
+    base_batches: Any  # full unroll batches, leading axis K
+    last_batch: Any  # base_batches[-1]
+    meta_batch: Any
+
+
+class HypergradMethod:
+    """Base class for hypergradient estimators. Subclasses set ``name`` and
+    ``reduce_contract`` and implement ``local_terms``; ``finalize`` defaults
+    to the identity post-update (no theta change)."""
+
+    name: str = "abstract"
+    reduce_contract: ReduceContract = ReduceContract()
+
+    def local_terms(self, spec: BilevelSpec, ctx: MethodContext) -> LocalTerms:
+        raise NotImplementedError
+
+    def finalize(self, terms: LocalTerms, ctx: MethodContext) -> Tuple[PyTree, PyTree]:
+        return terms["hypergrad"], ctx.theta
+
+    # -- convenience -------------------------------------------------------
+    def metrics(self, terms: LocalTerms) -> Dict[str, jnp.ndarray]:
+        """Per-method scalar metrics merged into the step's metric dict.
+        Keys must be stable across steps (jit)."""
+        return {}
+
+    def __repr__(self):  # pragma: no cover - debugging nicety
+        return f"{type(self).__name__}(name={self.name!r})"
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+#: name -> factory(engine_cfg) -> HypergradMethod. The factory receives the
+#: EngineConfig so built-ins can read their knobs from it; custom factories
+#: are free to ignore it.
+MethodFactory = Callable[[Any], HypergradMethod]
+
+_REGISTRY: Dict[str, MethodFactory] = {}
+
+
+def register_method(name: str, factory: Optional[Any] = None, *, overwrite: bool = False):
+    """Register a hypergradient method under ``name``.
+
+    Usable three ways::
+
+        @register_method("mine")            # decorator on a factory(cfg)
+        def _make(cfg): return MyMethod()
+
+        register_method("mine", MyMethod()) # an instance (cfg ignored)
+        register_method("mine", _make)      # a plain factory
+
+    Returns the factory (decorator-compatible).
+    """
+
+    def _install(f: MethodFactory) -> MethodFactory:
+        if not overwrite and name in _REGISTRY:
+            raise ValueError(f"hypergrad method {name!r} already registered "
+                             "(pass overwrite=True to replace)")
+        _REGISTRY[name] = f
+        return f
+
+    if factory is None:
+        return _install
+    if isinstance(factory, HypergradMethod):
+        instance = factory
+        return _install(lambda cfg, _m=instance: _m)
+    return _install(factory)
+
+
+def unregister_method(name: str):
+    """Remove a registered method (test hygiene)."""
+    _REGISTRY.pop(name, None)
+
+
+def available_methods() -> Tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+def resolve_method(method: Any, cfg: Any = None) -> HypergradMethod:
+    """Turn an EngineConfig.method value (string name or HypergradMethod
+    instance) into a method object."""
+
+    if isinstance(method, HypergradMethod):
+        return method
+    if isinstance(method, str):
+        if method not in _REGISTRY:
+            raise ValueError(
+                f"unknown hypergrad method {method!r}; registered: {available_methods()}"
+            )
+        m = _REGISTRY[method](cfg)
+        if not isinstance(m, HypergradMethod):
+            raise TypeError(f"factory for {method!r} returned {type(m).__name__}, "
+                            "expected a HypergradMethod")
+        return m
+    raise TypeError(f"method must be a name or HypergradMethod, got {type(method).__name__}")
+
+
+def validate_terms(method: HypergradMethod, terms: LocalTerms) -> LocalTerms:
+    """Trace-time structural check: mandatory keys + contract coverage."""
+
+    for required in ("hypergrad", "meta_loss"):
+        if required not in terms:
+            raise ValueError(f"{method.name}: local_terms missing {required!r}")
+    missing = [t for t in method.reduce_contract.terms if t not in terms]
+    if missing:
+        raise ValueError(
+            f"{method.name}: reduce contract names terms {missing} that "
+            f"local_terms did not produce (got {sorted(terms)})"
+        )
+    return terms

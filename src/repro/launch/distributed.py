@@ -1,6 +1,7 @@
-"""The paper's distributed execution schedule (Fig. 2), in JAX.
+"""The paper's distributed execution schedule (Fig. 2), generalized to any
+registered HypergradMethod with a linear reduce contract.
 
-Two implementations of the same SAMA meta step:
+Two implementations of the same meta step:
 
 * ``make_pjit_step`` — "Betty-style DDP" baseline: the Engine's pure step
   under jit; XLA inserts a gradient synchronization wherever the math needs
@@ -9,39 +10,77 @@ Two implementations of the same SAMA meta step:
 
 * ``make_manual_step`` — the paper's single-sync schedule via shard_map,
   manual over the data axes, auto over "model":
-    passes 1-3 run on LOCAL shards with NO collective;
-    ONE bucketed pmean carries (hypergrad, v, eps, metrics) — the analogue
-    of PyTorch's single overlapped bucketed all-reduce. The base-level unroll
-    keeps its standard per-step DDP pmean (that sync exists in the paper's
-    base level too).
+    ``method.local_terms`` runs on LOCAL shards with NO collective;
+    ONE bucketed pmean carries exactly the terms the method's
+    ``reduce_contract`` declares (SAMA: hypergrad, v, eps, meta_loss —
+    the analogue of PyTorch's single overlapped bucketed all-reduce), plus
+    the scalar base-loss metric so no second sync is needed for logging;
+    ``method.finalize`` then consumes replica-consistent values (SAMA's
+    base nudge). The base-level unroll keeps its standard per-step DDP
+    pmean (that sync exists in the paper's base level too), so the lowered
+    module carries exactly ``unroll_steps`` base all-reduces + ONE
+    meta-level all-reduce — pinned by ``count_data_allreduces``.
 
-  Statistically, the manual path averages per-shard central differences
-  (each with its own local eps); by linearity of the mixed second derivative
-  its expectation equals the pjit estimator's. With identical per-device
-  batches the two are exactly equal — that is what tests/test_distributed.py
-  pins, along with the collective-count claim, by parsing the lowered HLO.
-
-The base nudge (theta <- theta - eps*v) must keep replicas consistent, so v
-and eps ride inside the same single pmean bucket as the hypergradient —
-still one synchronization point.
+  Statistically, the manual path averages per-shard local estimates; for a
+  method with a LINEAR reduce contract (SAMA, SAMA-NA, T1-T2) the mean of
+  mixed second-derivative terms equals the pjit estimator's expectation,
+  and with identical per-device batches the two are exactly equal — what
+  tests/test_distributed.py pins, along with the collective-count claim,
+  by parsing the lowered HLO. Methods with nonlinear contracts (CG,
+  Neumann, iterdiff solve/unroll on the shard) are refused unless
+  ``allow_nonlinear=True`` opts into the local-solve approximation.
 """
 
 from __future__ import annotations
 
-from functools import partial
-from typing import Any, Tuple
+from typing import Any
 
 import jax
+import jax.flatten_util
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro.core import sama as sama_mod
+from repro.core import methods as methods_mod
 from repro.core.bilevel import BilevelSpec
-from repro.core.engine import EngineConfig, EngineState, make_meta_step
-from repro.launch.mesh import data_axes
+from repro.core.engine import (
+    EngineConfig,
+    EngineState,
+    make_context,
+    make_meta_step,
+    step_metrics,
+)
+from repro.launch.mesh import data_axes, shard_map
 from repro.optim import Optimizer, apply_updates
 
 PyTree = Any
+
+#: What the manual schedule emits per step (static for shard_map out_specs).
+METRIC_KEYS = ("base_loss", "meta_loss", "hypergrad_norm", "eps")
+
+
+def flat_pmean(tree: PyTree, axes) -> PyTree:
+    """Mean-reduce a pytree over ``axes`` through ONE all-reduce: ravel every
+    leaf into a single flat f32 buffer (PyTorch-DDP flat bucket), pmean it,
+    and unravel. Relying on XLA's all-reduce combiner would make the paper's
+    one-sync claim backend-dependent; the flat bucket makes it structural.
+    Leaves must already share a dtype (callers cast to f32 for reduction
+    accuracy).
+
+    Only valid when no tensor-parallel auto axis is live: ravel/concat breaks
+    per-leaf "model" sharding, which would make the partitioner all-gather
+    model-sharded leaves into full-size reduce buffers. Callers pick this
+    bucket for pure-DDP meshes and ``tree_pmean`` otherwise."""
+
+    flat, unravel = jax.flatten_util.ravel_pytree(tree)
+    return unravel(jax.lax.pmean(flat, axes))
+
+
+def tree_pmean(tree: PyTree, axes) -> PyTree:
+    """Per-leaf mean-reduce: keeps each leaf's auto-axis (tensor-parallel)
+    sharding intact. Still ONE logical sync point per call — XLA may lower
+    it as several fused all-reduce ops, which its combiner can overlap."""
+
+    return jax.lax.pmean(tree, axes)
 
 
 def make_pjit_step(spec: BilevelSpec, base_opt, meta_opt, cfg: EngineConfig):
@@ -56,18 +95,44 @@ def make_manual_step(
     cfg: EngineConfig,
     mesh,
     axes=None,
+    *,
+    allow_nonlinear: bool = False,
 ):
-    """SAMA's single-sync schedule. Returns a shard_map'ed step with the same
-    signature as the Engine step: (state, base_batches[K], meta_batch).
+    """The single-sync schedule for any method whose reduce contract is
+    linear. Returns a shard_map'ed step with the same signature as the
+    Engine step: (state, base_batches[K], meta_batch).
 
     ``axes``: mesh axes to be *manual* data-parallel over (default: the
     pod/data axes, leaving "model" to the auto partitioner). Passing ALL axes
     gives pure DDP — the right configuration for models that fit per-device
-    (see §Perf pair 1)."""
+    (see §Perf pair 1).
+
+    ``allow_nonlinear``: run a method whose contract declares
+    ``linear=False`` anyway, as the average-of-local-solves approximation
+    (each shard solves/unrolls on its own data; only the results are
+    averaged). Off by default because that is a *different* estimator from
+    the method's own global-batch definition.
+    """
 
     dp = tuple(axes) if axes is not None else data_axes(mesh)
-    sama_cfg = cfg.sama_cfg
-    assert cfg.method in ("sama", "sama_na"), "manual schedule implements SAMA"
+    # the flat single-op bucket is only safe when every non-manual mesh axis
+    # is trivial (pure DDP): raveling would break "model" sharding and force
+    # all-gathers. With live tensor parallelism, reduce per leaf instead —
+    # same single logical sync point, sharding preserved.
+    auto_extent = 1
+    for a in mesh.axis_names:
+        if a not in dp:
+            auto_extent *= mesh.shape[a]
+    bucket_pmean = flat_pmean if auto_extent == 1 else tree_pmean
+    method = cfg.resolve()
+    contract = method.reduce_contract
+    if not contract.linear and not allow_nonlinear:
+        raise ValueError(
+            f"hypergrad method {method.name!r} declares a nonlinear reduce contract: "
+            "averaging its per-shard estimates is not the method's own estimator on "
+            "the global batch. Pass allow_nonlinear=True to accept the "
+            "local-solve approximation, or use the pjit path."
+        )
 
     def local_step(state: EngineState, base_batches, meta_batch):
         theta, b_state, lam = state.theta, state.base_opt_state, state.lam
@@ -78,45 +143,46 @@ def make_manual_step(
         def base_one(carry, batch):
             th, st, _, _ = carry
             loss, g_loc = jax.value_and_grad(spec.base_scalar, argnums=0)(th, lam, batch)
-            g = jax.tree_util.tree_map(
-                lambda gl: jax.lax.pmean(gl.astype(jnp.float32), dp).astype(gl.dtype), g_loc
-            )
+            g32 = bucket_pmean(jax.tree_util.tree_map(lambda gl: gl.astype(jnp.float32), g_loc), dp)
+            g = jax.tree_util.tree_map(lambda r, gl: r.astype(gl.dtype), g32, g_loc)
             upd, st_new = base_opt.update(g, st, th)
             return (apply_updates(th, upd), st_new, g, st), loss
 
         (theta, b_state, g_base, st_at_g), losses = jax.lax.scan(
             base_one, (theta, b_state, g0, b_state), base_batches
         )
-        last_batch = jax.tree_util.tree_map(lambda x: x[-1], base_batches)
 
-        # ---- SAMA passes 1-3: strictly LOCAL (no collective) ----
-        meta_loss_loc, v_loc = sama_mod.perturbation_direction(
-            spec, theta, lam, meta_batch,
-            base_opt=base_opt, base_opt_state=st_at_g, g_base=g_base, cfg=sama_cfg,
+        # ---- method stage 1: strictly LOCAL terms (no collective) ----
+        ctx = make_context(
+            base_opt, state, base_batches, meta_batch,
+            theta=theta, base_opt_state=st_at_g, g_base=g_base,
         )
-        hyper_loc, eps_loc = sama_mod.central_difference_hypergrad(
-            spec, theta, lam, last_batch, v_loc, cfg=sama_cfg
-        )
+        terms = methods_mod.validate_terms(method, method.local_terms(spec, ctx))
 
         # ---- THE single synchronization point (one bucketed all-reduce) ----
+        # Exactly the contract's terms ride the bucket, plus the scalar
+        # base-loss metric so logging costs no extra sync.
         # (f32 cast: XLA's AllReducePromotion pass crashes on bf16 variadic
         # all-reduce on the CPU backend; on TPU this cast is also what DDP
         # implementations do for reduction accuracy.)
-        bucket_in = jax.tree_util.tree_map(
-            lambda x: x.astype(jnp.float32), (hyper_loc, v_loc, eps_loc, meta_loss_loc)
-        )
-        hyper, v, eps, meta_loss = jax.lax.pmean(bucket_in, dp)
+        bucket = {k: terms[k] for k in contract.terms}
+        bucket["__base_loss__"] = jnp.mean(losses)
+        bucket = jax.tree_util.tree_map(lambda x: x.astype(jnp.float32), bucket)
+        reduced = bucket_pmean(bucket, dp)
+        base_loss = reduced.pop("__base_loss__")
+        terms = dict(terms, **reduced)
+
+        # ---- method stage 3: finalize on replica-consistent terms ----
+        hyper, theta = method.finalize(terms, ctx)
 
         upd, m_state = meta_opt.update(hyper, state.meta_opt_state, lam)
         lam = apply_updates(lam, upd)
-        theta = sama_mod.apply_base_nudge(theta, v, eps, sama_cfg)
 
-        metrics = {
-            "base_loss": jax.lax.pmean(jnp.mean(losses), dp),
-            "meta_loss": meta_loss,
-            "hypergrad_norm": sama_mod.global_norm(hyper),
-            "eps": eps,
-        }
+        metrics = step_metrics(method, terms, hyper, losses)
+        metrics["base_loss"] = base_loss
+        # the manual schedule reports the standard metric quartet only (its
+        # out_specs are static); extra per-method metrics live on the Engine path
+        metrics = {k: metrics[k] for k in METRIC_KEYS}
         new_state = EngineState(
             theta=theta, base_opt_state=b_state, lam=lam,
             meta_opt_state=m_state, step=state.step + 1,
@@ -139,11 +205,11 @@ def make_manual_step(
         )
         out_specs = (
             jax.tree_util.tree_map(lambda _: P(), state),
-            {"base_loss": P(), "meta_loss": P(), "hypergrad_norm": P(), "eps": P()},
+            {k: P() for k in METRIC_KEYS},
         )
-        fn = jax.shard_map(
-            local_step, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
-            axis_names=set(dp), check_vma=False,
+        fn = shard_map(
+            local_step, mesh, in_specs=in_specs, out_specs=out_specs,
+            axis_names=set(dp), check=False,
         )
         return fn(state, base_batches, meta_batch)
 

@@ -25,6 +25,7 @@ from repro.configs import INPUT_SHAPES
 from repro.launch import specs as specs_mod
 from repro.launch.mesh import make_production_mesh
 from repro.roofline import analyze
+from repro.roofline.analysis import cost_analysis_dict
 from repro.models import transformer as tf
 
 import jax.numpy as jnp
@@ -61,7 +62,7 @@ def run_job(arch: str, shape_name: str, *, multi_pod: bool = False, save: bool =
             t_compile = time.time() - t0 - t_lower
             mem = compiled.memory_analysis()
             print(f"[{job.name}@{mesh_name}] memory_analysis: {mem}")
-            cost = compiled.cost_analysis()
+            cost = cost_analysis_dict(compiled)
             print(f"[{job.name}@{mesh_name}] cost_analysis flops={cost.get('flops', 0):.3e} "
                   f"bytes={cost.get('bytes accessed', 0):.3e}")
 

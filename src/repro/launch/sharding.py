@@ -138,6 +138,13 @@ def _divisible(n: int, mesh, axis: str) -> bool:
     return axis in mesh.axis_names and n % mesh.shape[axis] == 0
 
 
+def _dp_entry(dp: Tuple[str, ...]):
+    """A PartitionSpec entry for the data axes: the bare axis name when there
+    is exactly one (so spec comparisons see "data", not ("data",)), the tuple
+    when batch shards over pod x data jointly."""
+    return dp[0] if len(dp) == 1 else dp
+
+
 def batch_spec(mesh, *, leading_unroll: bool = False) -> P:
     """Shard the (global) batch dim over pod x data."""
     dp = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
@@ -170,7 +177,7 @@ def cache_spec(path: str, shape: Tuple[int, ...], mesh) -> P:
         b = shape[len(lead)]
         t_axis_shardable = _divisible(shape[len(lead) + 1], mesh, "data")
         if b % dpn == 0 and b >= dpn:
-            spec = (dp, None) + ((None,) * (ndim - len(lead) - 2))
+            spec = (_dp_entry(dp), None) + ((None,) * (ndim - len(lead) - 2))
         elif t_axis_shardable:
             spec = (None, "data") + ((None,) * (ndim - len(lead) - 2))
         else:
@@ -183,8 +190,6 @@ def cache_spec(path: str, shape: Tuple[int, ...], mesh) -> P:
 
     # SSM / conv / token-shift states: shard batch if divisible, else heads
     # over model where divisible, else replicate.
-    for i, d in enumerate(shape):
-        pass
     # find batch dim: first dim after stacked-layer dims. Heuristic: states are
     # (L, B, ...) or (G, K, B, ...); shard the largest trailing dim over model
     # if divisible and batch over dp if divisible.
@@ -192,7 +197,7 @@ def cache_spec(path: str, shape: Tuple[int, ...], mesh) -> P:
     # try batch = any dim equal to a multiple of dpn among the first 3 dims
     for i in range(ndim):
         if shape[i] % dpn == 0 and shape[i] >= dpn:
-            spec[i] = dp
+            spec[i] = _dp_entry(dp)
             break
     else:
         for i in range(ndim - 1, -1, -1):

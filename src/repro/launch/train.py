@@ -1,12 +1,14 @@
-"""End-to-end SAMA training driver.
+"""End-to-end SAMA training driver, on the MetaLearner facade.
 
     PYTHONPATH=src python -m repro.launch.train --arch gemma3-1b --smoke \
         --steps 50 --method sama [--manual-collectives] [--ckpt out/ck]
 
 Wires together: config registry -> synthetic noisy LM data -> Model ->
-data-optimization BilevelSpec -> Engine (or the single-sync shard_map step)
--> checkpointing. On the CPU container use --smoke; on a TPU cluster the
-same script runs the full config on the production mesh.
+data-optimization BilevelSpec -> ``repro.api.MetaLearner`` (which owns the
+Engine or the single-sync shard_map schedule + checkpointing). On the CPU
+container use --smoke; on a TPU cluster the same script runs the full
+config on the production mesh. ``--method`` accepts any registered
+hypergradient method, including third-party registrations.
 """
 
 from __future__ import annotations
@@ -19,9 +21,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro import checkpoint, configs, data, optim
-from repro.core import EngineConfig, init_state, make_meta_step, problems
-from repro.launch import distributed as dist
+from repro import api, configs, data
+from repro.core import available_methods, problems
 from repro.launch.mesh import make_host_mesh, make_production_mesh
 from repro.models import Model
 
@@ -34,7 +35,7 @@ def main():
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=64)
     ap.add_argument("--unroll", type=int, default=2)
-    ap.add_argument("--method", default="sama", choices=["sama", "sama_na", "t1t2", "neumann", "cg", "iterdiff"])
+    ap.add_argument("--method", default="sama", choices=list(available_methods()))
     ap.add_argument("--base-lr", type=float, default=1e-3)
     ap.add_argument("--meta-lr", type=float, default=1e-3)
     ap.add_argument("--manual-collectives", action="store_true",
@@ -52,20 +53,21 @@ def main():
         model.classifier_per_example if cfg.family == "encoder" else model.per_example,
         reweight=True,
     )
-    base_opt = optim.adam(args.base_lr)
-    meta_opt = optim.adam(args.meta_lr)
-    ecfg = EngineConfig(method=args.method, unroll_steps=args.unroll)
+    learner = api.MetaLearner(
+        spec,
+        base_opt="adam", base_lr=args.base_lr,
+        meta_opt="adam", meta_lr=args.meta_lr,
+        method=args.method, unroll_steps=args.unroll,
+        mesh=mesh,
+        schedule="single_sync" if args.manual_collectives else "pjit",
+        checkpoint_dir=args.ckpt,
+    )
 
     theta = model.init(jax.random.PRNGKey(0))
     lam = problems.init_data_optimization_lam(jax.random.PRNGKey(1), reweight=True)
-    state = init_state(theta, lam, base_opt, meta_opt)
+    learner.init(theta, lam)
     print(f"arch={cfg.name} params={model.num_params(theta):,} method={args.method} "
-          f"mesh={dict(zip(mesh.axis_names, mesh.devices.shape))}")
-
-    if args.manual_collectives:
-        step = jax.jit(dist.make_manual_step(spec, base_opt, meta_opt, ecfg, mesh))
-    else:
-        step = jax.jit(make_meta_step(spec, base_opt, meta_opt, ecfg))
+          f"schedule={learner.schedule} mesh={dict(zip(mesh.axis_names, mesh.devices.shape))}")
 
     lm_cfg = data.LMStreamConfig(vocab_size=cfg.vocab_size, seq_len=args.seq)
     rng = np.random.default_rng(0)
@@ -87,20 +89,18 @@ def main():
         return out
 
     t0 = time.time()
-    with mesh:
-        for i in range(args.steps):
-            base = make_batch(args.batch, args.unroll)
-            meta = make_batch(max(args.batch // 2, 1))
-            state, metrics = step(state, base, meta)
-            if i % args.log_every == 0 or i == args.steps - 1:
-                m = {k: round(float(v), 4) for k, v in metrics.items()}
-                m.update(step=i, elapsed_s=round(time.time() - t0, 1))
-                print(json.dumps(m))
+    for i in range(args.steps):
+        base = make_batch(args.batch, args.unroll)
+        meta = make_batch(max(args.batch // 2, 1))
+        metrics = learner.step(base, meta)
+        if i % args.log_every == 0 or i == args.steps - 1:
+            m = {k: round(float(v), 4) for k, v in metrics.items()}
+            m.update(step=i, elapsed_s=round(time.time() - t0, 1))
+            print(json.dumps(m))
 
     if args.ckpt:
-        checkpoint.save(f"{args.ckpt}/step_{args.steps:06d}", state, step=args.steps,
-                        meta={"arch": cfg.name, "method": args.method})
-        print(f"checkpoint written to {args.ckpt}/step_{args.steps:06d}")
+        path = learner.save(meta={"arch": cfg.name})
+        print(f"checkpoint written to {path}")
 
 
 if __name__ == "__main__":

@@ -11,7 +11,7 @@
 Both expose a one-token ``*_decode`` with O(1) state — this is what makes the
 ``long_500k`` shape legal for rwkv6/zamba2.
 
-TPU adaptation note (DESIGN.md §2): the chunk size trades VMEM footprint of
+TPU adaptation note (DESIGN.md §7): the chunk size trades VMEM footprint of
 the (Q, Q) intra-chunk blocks against the length of the sequential
 chunk-scan; defaults are picked so a chunk's working set fits VMEM.
 """

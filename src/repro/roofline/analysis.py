@@ -227,6 +227,16 @@ class Roofline:
         return dataclasses.asdict(self)
 
 
+def cost_analysis_dict(compiled) -> Dict[str, float]:
+    """``compiled.cost_analysis()`` returns a dict on modern jax but a
+    per-partition list of dicts on 0.4.x — normalize to one dict."""
+
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return cost or {}
+
+
 def analyze(name: str, compiled, hlo_text: str, cfg, shape, kind: str,
             param_shapes, n_devices: int, cache_shapes=None) -> Roofline:
     counts = param_counts(param_shapes)
@@ -261,7 +271,7 @@ def analyze(name: str, compiled, hlo_text: str, cfg, shape, kind: str,
         useful = 2 * n_matmul * shape.global_batch
     useful_ratio = useful / flops if flops else 0.0
 
-    cost = compiled.cost_analysis() or {}
+    cost = cost_analysis_dict(compiled)
     peak_mem = None
     try:
         stats = compiled.memory_analysis()

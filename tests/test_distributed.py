@@ -30,9 +30,9 @@ import numpy as np
 from repro import optim
 from repro.core import BilevelSpec, EngineConfig, init_state, make_meta_step, problems
 from repro.launch import distributed as dist
+from repro.launch.mesh import AxisType, make_mesh
 
-mesh = jax.make_mesh((8, 1), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh = make_mesh((8, 1), ("data", "model"), axis_types=(AxisType.Auto,) * 2)
 
 def apply_fn(theta, x):
     return jnp.tanh(x @ theta["w1"]) @ theta["w2"]
@@ -149,10 +149,9 @@ def test_manual_step_finite_and_learning(result):
 
 
 def test_single_sync_schedule_collective_structure(result):
-    # K=2 base DDP pmeans + 1 meta bucket = 3 all-reduce "sync points".
-    # XLA may split one logical pmean over a pytree into a couple of fused
-    # all-reduce ops, but the manual path must stay close to the logical
-    # count and strictly below the naive pjit path.
-    assert result["manual_allreduce_count"] <= 6, result
+    # K=2 base DDP flat-bucket pmeans + 1 meta flat bucket = EXACTLY 3
+    # all-reduces. The flat bucket (distributed.flat_pmean) makes this
+    # structural rather than dependent on XLA's all-reduce combiner.
+    assert result["manual_allreduce_count"] == 3, result
     assert result["manual_allreduce_count"] < result["pjit_allreduce_count"], result
     assert result["manual_collective_bytes"] < result["pjit_collective_bytes"], result

@@ -76,8 +76,9 @@ import json
 import jax, jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.roofline import hlo_parse
+from repro.launch.mesh import AxisType, make_mesh
 
-mesh = jax.make_mesh((4, 4), ("data", "model"), axis_types=(jax.sharding.AxisType.Auto,)*2)
+mesh = make_mesh((4, 4), ("data", "model"), axis_types=(AxisType.Auto,)*2)
 L, B, D = 8, 16, 64
 def f(x, ws):
     def body(c, w):
