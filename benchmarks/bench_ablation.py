@@ -12,8 +12,9 @@ import jax.numpy as jnp
 
 from repro import data, optim
 from repro.core import EngineConfig, init_state, make_meta_step, problems
-from benchmarks.common import (accuracy, emit, mini_bert, train_meta,
-                               train_plain, wrench_task)
+from repro.dataopt import meta_train, model_accuracy, train_plain
+
+from benchmarks.common import emit, mini_bert, wrench_task
 
 METHODS = ["iterdiff", "cg", "neumann", "t1t2", "sama_na", "sama"]
 
@@ -26,13 +27,14 @@ def main(fast: bool = True):
     t0 = time.perf_counter()
     theta = train_plain(model, train, steps=steps * 2)
     emit("table8_finetune", (time.perf_counter() - t0) * 1e6 / (steps * 2),
-         f"acc={accuracy(model, theta, test):.4f}")
+         f"acc={model_accuracy(model, theta, test):.4f}")
 
     for method in METHODS:
         t0 = time.perf_counter()
-        state, eng = train_meta(model, train, meta, method=method, steps=steps)
+        learner = meta_train(model, train, meta, method=method, steps=steps,
+                             log_every=max(steps // 4, 1))
         us = (time.perf_counter() - t0) * 1e6 / steps
-        acc = accuracy(model, state.theta, test)
+        acc = model_accuracy(model, learner.state.theta, test)
 
         # compiled peak memory of one meta step
         spec = problems.make_data_optimization_spec(model.classifier_per_example, reweight=True)

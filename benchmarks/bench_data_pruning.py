@@ -1,22 +1,32 @@
-"""Paper Figure 3 + Sec 4.3: scale-agnostic data pruning.
+"""Paper Figure 3 + Sec 4.3: scale-agnostic data pruning via repro.dataopt.
 
 Meta-learn per-sample importance with MWN(loss, uncertainty) using SAMA and
 train data in BOTH levels (no extra validation — the paper's Sec. 4.3
-setup), then prune the lowest-weight fraction and retrain from scratch.
-Compared against random and EL2N pruning at several ratios, on a noisy
-classification set where heuristics that keep "hard" examples keep the label
-noise instead.
+setup), then prune the lowest-score fraction and retrain from scratch.
+Compared against EL2N and random pruning at several ratios on a noisy
+classification set where heuristics that keep "hard" examples keep the
+label noise instead.
+
+Every arm is the SAME code path — ``DataOptimizer(..., scorer=<name>)`` is
+the only thing that changes between sama / el2n / random.
 """
 
 from __future__ import annotations
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro import data
-from repro.core.meta_modules import apply_weight_net, weight_features
-from benchmarks.common import accuracy, emit, mini_bert, train_meta, train_plain
+from repro.dataopt import DataOptimizer
+
+from benchmarks.common import emit, mini_bert
+
+#: scorer name -> DataOptimizer knobs. Swapping arms is this one argument.
+SCORERS = {
+    "sama": lambda steps: dict(scorer="meta", method="sama", unroll=2,
+                               uncertainty="none", steps=steps),
+    "el2n": lambda steps: dict(scorer="el2n", train_steps=20),
+    "random": lambda steps: dict(scorer="random"),
+}
 
 
 def main(fast: bool = True):
@@ -27,43 +37,24 @@ def main(fast: bool = True):
     model = mini_bert(num_labels=ccfg.num_classes)
     steps = 60 if fast else 250
     retrain_steps = 100 if fast else 400
-
-    # --- SAMA importance weights (train data in both levels, + uncertainty) ---
-    state, _ = train_meta(model, train, train, method="sama", steps=steps,
-                          reweight=True, unroll=2)
-    pe = jax.jit(model.classifier_per_example)(
-        state.theta, {"tokens": jnp.asarray(train["tokens"]), "y": jnp.asarray(train["y"])}
-    )
-    w = np.asarray(apply_weight_net(state.lam["reweight"], weight_features(pe.loss)))
-
-    # EL2N: ||p - onehot||_2 from an early-trained model
-    theta_el2n = train_plain(model, train, steps=20)
-    pe2 = jax.jit(model.classifier_per_example)(
-        theta_el2n, {"tokens": jnp.asarray(train["tokens"]), "y": jnp.asarray(train["y"])}
-    )
-    p = jax.nn.softmax(pe2.logits, -1)
-    el2n = np.asarray(jnp.linalg.norm(p - pe2.label_onehot, axis=-1))
-
-    rng = np.random.default_rng(0)
     ratios = [0.1, 0.3] if fast else [0.1, 0.2, 0.3, 0.5]
 
-    def retrain(keep_idx, tag, ratio):
-        sub = {k: v[keep_idx] for k, v in train.items()}
-        theta = train_plain(model, sub, steps=retrain_steps)
-        acc = accuracy(model, theta, test)
-        emit(f"fig3_{tag}_r{int(ratio * 100)}", 0.0, f"acc={acc:.4f};kept={len(keep_idx)}")
-        return acc
-
-    for r in ratios:
-        keep = int(n * (1 - r))
-        retrain(np.argsort(-w)[:keep], "sama", r)  # keep highest meta-weight
-        retrain(np.argsort(el2n)[:keep], "el2n", r)  # keep easiest (low EL2N): noise-robust variant
-        retrain(rng.permutation(n)[:keep], "random", r)
-
-    # how well do the learned weights identify the corrupted samples?
-    bad = train["corrupted"]
-    emit("fig3_sama_weight_auc", 0.0,
-         f"w_clean={w[~bad].mean():.3f};w_noisy={w[bad].mean():.3f}")
+    for tag, knobs in SCORERS.items():
+        # meta split = train: the paper's no-validation Sec. 4.3 setting
+        opt = DataOptimizer(model, train, meta=train, seed=7, **knobs(steps))
+        opt.fit_scores()
+        for r in ratios:
+            _, mask = opt.prune(r)
+            theta = opt.retrain(steps=retrain_steps, mask=mask)
+            acc = opt.evaluate(theta, test)
+            emit(f"fig3_{tag}_r{int(r * 100)}", 0.0,
+                 f"acc={acc:.4f};kept={int(mask.sum())}")
+        if tag == "sama":
+            # how well do the learned weights identify the corrupted samples?
+            bad = train["corrupted"]
+            w = opt.scores
+            emit("fig3_sama_weight_auc", 0.0,
+                 f"w_clean={w[~bad].mean():.3f};w_noisy={w[bad].mean():.3f}")
 
 
 if __name__ == "__main__":

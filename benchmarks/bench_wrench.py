@@ -2,14 +2,17 @@
 
 Compares test accuracy of: plain finetuning on weak labels, SAMA-NA (+R),
 SAMA (+R), SAMA (+R&C) — the paper's claim is the ordering
-finetune < SAMA-NA < SAMA and that +C helps on top of +R.
+finetune < SAMA-NA < SAMA and that +C helps on top of +R. All training
+flows through ``repro.dataopt`` (``train_plain`` / ``meta_train``).
 """
 
 from __future__ import annotations
 
 import time
 
-from benchmarks.common import accuracy, emit, mini_bert, train_meta, train_plain, wrench_task
+from repro.dataopt import meta_train, model_accuracy, train_plain
+
+from benchmarks.common import emit, mini_bert, wrench_task
 
 
 def main(fast: bool = True):
@@ -19,7 +22,7 @@ def main(fast: bool = True):
 
     t0 = time.perf_counter()
     theta = train_plain(model, train, steps=steps * 2)
-    acc = accuracy(model, theta, test)
+    acc = model_accuracy(model, theta, test)
     emit("table1_finetune_weak", (time.perf_counter() - t0) * 1e6 / steps, f"acc={acc:.4f}")
 
     rows = [
@@ -29,9 +32,10 @@ def main(fast: bool = True):
     ]
     for name, kw in rows:
         t0 = time.perf_counter()
-        state, eng = train_meta(model, train, meta, steps=steps, **kw)
+        learner = meta_train(model, train, meta, steps=steps,
+                             log_every=max(steps // 4, 1), **kw)
         us = (time.perf_counter() - t0) * 1e6 / steps
-        acc = accuracy(model, state.theta, test)
+        acc = model_accuracy(model, learner.state.theta, test)
         emit(name, us, f"acc={acc:.4f}")
 
 

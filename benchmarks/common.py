@@ -1,27 +1,51 @@
 """Shared benchmark utilities: the WRENCH-analog synthetic task, a mini-BERT
-classifier factory, timing helpers, and CSV emission.
+classifier factory, timing helpers, and row emission.
 
-Every benchmark prints ``name,us_per_call,derived`` rows (one per paper-table
-cell it reproduces) so ``python -m benchmarks.run`` produces one CSV.
+Every benchmark emits ``name,us_per_call,derived`` rows (one per paper-table
+cell it reproduces). ``emit`` both prints the CSV row and records it in
+``ROWS`` so ``python -m benchmarks.run`` can additionally write
+machine-readable ``BENCH_*.json`` files for the perf trajectory.
+
+Training loops live in ``repro.dataopt`` (``train_plain``, ``meta_train``,
+``model_accuracy``) — benchmarks only orchestrate and time them.
 """
 
 from __future__ import annotations
 
+import re
 import time
-from typing import Callable, Dict, Tuple
+from typing import Any, Dict, List
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro import configs, data, optim
-from repro.api import MetaLearner
-from repro.core import problems
+from repro import configs, data
 from repro.models import Model
+
+#: rows emitted by the currently-running benchmark: (name, us_per_call, derived)
+ROWS: List[Dict[str, Any]] = []
+
+
+def _parse_derived(derived: str) -> Any:
+    """Parse "k1=v1;k2=v2" derived strings into a dict of floats/strings;
+    anything else passes through verbatim."""
+
+    if not derived or not re.fullmatch(r"[^=;]+=[^;]*(;[^=;]+=[^;]*)*", derived):
+        return derived
+    out: Dict[str, Any] = {}
+    for item in derived.split(";"):
+        k, v = item.split("=", 1)
+        try:
+            out[k] = float(v)
+        except ValueError:
+            out[k] = v
+    return out
 
 
 def emit(name: str, us_per_call: float, derived: str):
     print(f"{name},{us_per_call:.1f},{derived}")
+    ROWS.append({"name": name, "us_per_call": round(float(us_per_call), 1),
+                 "derived": _parse_derived(derived)})
 
 
 def time_fn(fn, *args, iters: int = 3, warmup: int = 1) -> float:
@@ -64,66 +88,3 @@ def mini_bert(num_labels: int = 4, d_model: int = 128, layers: int = 2) -> Model
         head_dim=64, d_ff=d_model * 2, remat=False,
     )
     return Model(cfg)
-
-
-def accuracy(model: Model, params, dataset, batch: int = 128) -> float:
-    n = len(dataset["tokens"])
-    correct = 0
-    fwd = jax.jit(lambda p, b: model.forward(p, b)[0])
-    for i in range(0, n, batch):
-        b = {"tokens": jnp.asarray(dataset["tokens"][i : i + batch])}
-        logits = fwd(params, b)
-        pred = np.asarray(jnp.argmax(logits, -1))
-        correct += int((pred == dataset["y_true"][i : i + batch]).sum())
-    return correct / n
-
-
-def train_meta(model: Model, train, meta, *, method: str = "sama", steps: int, seed: int = 0,
-               reweight=True, correct=False, unroll: int = 2,
-               batch: int = 32, meta_batch: int = 32) -> Tuple[Dict, MetaLearner]:
-    spec = problems.make_data_optimization_spec(
-        model.classifier_per_example, reweight=reweight, correct=correct,
-    )
-    lam = problems.init_data_optimization_lam(
-        jax.random.PRNGKey(seed + 10), reweight=reweight, correct=correct,
-        num_classes=model.cfg.num_labels,
-    )
-    theta = model.init(jax.random.PRNGKey(seed))
-    learner = MetaLearner(
-        spec, base_opt="adam", base_lr=1e-3, meta_opt="adam", meta_lr=1e-3,
-        method=method, unroll_steps=unroll,
-    )
-    learner.init(theta, lam)
-    it = data.BatchIterator(train, meta, batch_size=batch, meta_batch_size=meta_batch,
-                            unroll=unroll, seed=seed)
-    learner.fit(it, steps, log_every=max(steps // 4, 1))
-    return learner.state, learner
-
-
-def train_plain(model: Model, train, *, steps: int, seed: int = 0, batch: int = 32):
-    """No-meta-learning finetuning baseline."""
-
-    theta = model.init(jax.random.PRNGKey(seed))
-    opt = optim.adam(1e-3)
-    st = opt.init(theta)
-    rng = np.random.default_rng(seed)
-    n = len(train["tokens"])
-
-    def loss_fn(p, b):
-        pe = model.classifier_per_example(p, b)
-        return jnp.mean(pe.loss)
-
-    step = jax.jit(
-        lambda p, s, b: _sgd_step(loss_fn, opt, p, s, b)
-    )
-    for _ in range(steps):
-        idx = rng.integers(0, n, batch)
-        b = {"tokens": jnp.asarray(train["tokens"][idx]), "y": jnp.asarray(train["y"][idx])}
-        theta, st = step(theta, st, b)
-    return theta
-
-
-def _sgd_step(loss_fn, opt, p, s, b):
-    g = jax.grad(loss_fn)(p, b)
-    upd, s = opt.update(g, s, p)
-    return optim.apply_updates(p, upd), s

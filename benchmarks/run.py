@@ -1,16 +1,23 @@
 """Benchmark runner: one module per paper table/figure.
 
-    PYTHONPATH=src python -m benchmarks.run [--full] [--only NAME]
+    PYTHONPATH=src python -m benchmarks.run [--full] [--only NAME] [--json-dir DIR]
 
-Prints ``name,us_per_call,derived`` CSV rows.
+Prints ``name,us_per_call,derived`` CSV rows and writes machine-readable
+``BENCH_<name>.json`` per bench (name / us_per_call / parsed derived
+fields), plus ``BENCH_dataopt.json`` aggregating the data-optimization
+benches (wrench, data_pruning) — the rows the perf trajectory tracks.
 """
 
 from __future__ import annotations
 
 import argparse
 import importlib
+import json
+import os
 import time
 import traceback
+
+from benchmarks import common
 
 BENCHES = [
     "bench_biased_regression",  # Appendix E / Fig 5
@@ -23,26 +30,49 @@ BENCHES = [
     "bench_distributed",  # Fig 2 / Table 2 multi-GPU structure
 ]
 
+#: benches whose rows are produced by the repro.dataopt subsystem
+DATAOPT_BENCHES = ("bench_wrench", "bench_data_pruning")
+
+
+def _write_json(path: str, payload) -> None:
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1)
+    print(f"# wrote {path}")
+
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true", help="full-size (slow) runs")
     ap.add_argument("--only", default=None)
+    ap.add_argument("--json-dir", default=".", help="where BENCH_*.json land")
     args = ap.parse_args()
 
+    os.makedirs(args.json_dir, exist_ok=True)
     print("name,us_per_call,derived")
     failures = []
+    dataopt_rows = []
     for name in BENCHES:
         if args.only and args.only not in name:
             continue
         t0 = time.time()
+        common.ROWS.clear()
         try:
             mod = importlib.import_module(f"benchmarks.{name}")
             mod.main(fast=not args.full)
-            print(f"# {name} done in {time.time() - t0:.1f}s")
+            elapsed = time.time() - t0
+            print(f"# {name} done in {elapsed:.1f}s")
+            payload = {"bench": name, "fast": not args.full,
+                       "elapsed_s": round(elapsed, 1), "rows": list(common.ROWS)}
+            _write_json(os.path.join(args.json_dir, f"BENCH_{name.removeprefix('bench_')}.json"),
+                        payload)
+            if name in DATAOPT_BENCHES:
+                dataopt_rows.extend(common.ROWS)
         except Exception:
             failures.append(name)
             print(f"# {name} FAILED:\n# " + traceback.format_exc().replace("\n", "\n# "))
+    if dataopt_rows:
+        _write_json(os.path.join(args.json_dir, "BENCH_dataopt.json"),
+                    {"bench": "dataopt", "fast": not args.full, "rows": dataopt_rows})
     if failures:
         raise SystemExit(f"benchmarks failed: {failures}")
 

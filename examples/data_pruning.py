@@ -1,99 +1,59 @@
-"""Data pruning with meta-learned importance weights (paper Sec. 4.3).
+"""Data pruning with meta-learned importance weights (paper Sec. 4.3),
+through the ``repro.dataopt`` subsystem.
 
 SAMA + MetaWeightNet(loss, uncertainty) learn per-sample importance using
-train data in BOTH levels (no validation set), then the lowest-weight
+train data in BOTH levels (no validation set), then the lowest-score
 fraction is pruned and a model is retrained from scratch on the remainder.
+``--scorer`` swaps the scoring arm (meta / el2n / grand / margin / loss /
+random) with no other change — that's the point of the subsystem.
 
-    PYTHONPATH=src python examples/data_pruning.py [--ratio 0.3]
+    PYTHONPATH=src python examples/data_pruning.py [--ratio 0.3] [--scorer meta]
 """
 
 import argparse
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro import data, optim
-from repro.core import Engine, EngineConfig, problems
-from repro.core.meta_modules import apply_weight_net, weight_features
+from repro import configs, data
+from repro.dataopt import DataOptimizer, available_scorers
 from repro.models import Model
-from repro import configs
-
-
-def train_plain(model, train, steps, seed=0):
-    theta = model.init(jax.random.PRNGKey(seed))
-    opt = optim.adam(1e-3)
-    st = opt.init(theta)
-    rng = np.random.default_rng(seed)
-
-    @jax.jit
-    def step(p, s, b):
-        g = jax.grad(lambda pp: jnp.mean(model.classifier_per_example(pp, b).loss))(p)
-        upd, s = opt.update(g, s, p)
-        return optim.apply_updates(p, upd), s
-
-    for _ in range(steps):
-        idx = rng.integers(0, len(train["tokens"]), 32)
-        theta, st = step(theta, st, {"tokens": jnp.asarray(train["tokens"][idx]),
-                                     "y": jnp.asarray(train["y"][idx])})
-    return theta
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--ratio", type=float, default=0.3)
+    ap.add_argument("--scorer", default="meta", choices=list(available_scorers()))
     ap.add_argument("--meta-steps", type=int, default=80)
     ap.add_argument("--retrain-steps", type=int, default=150)
+    ap.add_argument("--class-balanced", action="store_true")
     args = ap.parse_args()
 
     ccfg = data.ClassificationConfig(num_classes=4, vocab_size=512, seq_len=32)
     train = data.make_classification_dataset(ccfg, 512, noise=0.25, seed=0)
     test = data.make_classification_dataset(ccfg, 512, noise=0.0, seed=1)
-    cfg = configs.get_smoke_config("bert-base")
-    model = Model(cfg)
+    model = Model(configs.get_smoke_config("bert-base"))
 
-    # --- meta-learn importance (uncertainty-aware MWN, train data both levels)
-    spec = problems.make_data_optimization_spec(
-        model.classifier_per_example, reweight=True, use_uncertainty=True
-    )
-    lam = problems.init_data_optimization_lam(jax.random.PRNGKey(1), reweight=True,
-                                              use_uncertainty=True)
-    eng = Engine(spec, base_opt=optim.adam(1e-3), meta_opt=optim.adam(1e-3),
-                 cfg=EngineConfig(method="sama", unroll_steps=2))
-    state = eng.init(model.init(jax.random.PRNGKey(0)), lam)
-    it = data.BatchIterator(train, train, batch_size=32, meta_batch_size=32, unroll=2)
-    state, _ = eng.run(state, it, num_meta_steps=args.meta_steps, log_every=20)
+    # the meta scorer's knobs are ignored by the heuristic scorers
+    knobs = dict(method="sama", unroll=2, uncertainty="entropy",
+                 steps=args.meta_steps, log_every=20) if args.scorer == "meta" else {}
+    opt = DataOptimizer(model, train, meta=train, scorer=args.scorer, **knobs)
 
-    pe = jax.jit(model.classifier_per_example)(
-        state.theta, {"tokens": jnp.asarray(train["tokens"]), "y": jnp.asarray(train["y"])})
-    w = np.asarray(apply_weight_net(
-        state.lam["reweight"], weight_features(pe.loss, pe.uncertainty)))
+    w = opt.fit_scores()
     bad = train["corrupted"]
-    print(f"learned weights: clean={w[~bad].mean():.3f} noisy={w[bad].mean():.3f}")
+    print(f"{args.scorer} scores: clean={w[~bad].mean():.3f} noisy={w[bad].mean():.3f}")
 
-    # --- prune & retrain ---
-    keep = np.argsort(-w)[: int(len(w) * (1 - args.ratio))]
-    pruned = {k: v[keep] for k, v in train.items()}
-    frac_noisy_kept = float(pruned["corrupted"].mean())
-    print(f"pruned {args.ratio:.0%}; noisy fraction kept: {frac_noisy_kept:.3f} "
-          f"(before: {bad.mean():.3f})")
+    pruned, mask = opt.prune(args.ratio, class_balanced=args.class_balanced)
+    print(f"pruned {args.ratio:.0%}; noisy fraction kept: "
+          f"{pruned['corrupted'].mean():.3f} (before: {bad.mean():.3f})")
 
-    def evaluate(theta):
-        fwd = jax.jit(lambda p, b: model.forward(p, b)[0])
-        preds = []
-        for i in range(0, 512, 128):
-            preds.append(np.asarray(jnp.argmax(
-                fwd(theta, {"tokens": jnp.asarray(test["tokens"][i:i+128])}), -1)))
-        return float((np.concatenate(preds) == test["y_true"]).mean())
-
-    acc_full = evaluate(train_plain(model, train, args.retrain_steps))
-    acc_pruned = evaluate(train_plain(model, pruned, args.retrain_steps))
-    rng = np.random.default_rng(0)
-    rnd = rng.permutation(len(w))[: len(keep)]
-    acc_random = evaluate(train_plain(model, {k: v[rnd] for k, v in train.items()},
-                                      args.retrain_steps))
-    print(f"test acc  full-data: {acc_full:.4f}  sama-pruned: {acc_pruned:.4f}  "
+    acc_full = opt.evaluate(opt.retrain(steps=args.retrain_steps), test)
+    acc_pruned = opt.evaluate(opt.retrain(steps=args.retrain_steps, mask=mask), test)
+    rnd = DataOptimizer(model, train, scorer="random")
+    _, rnd_mask = rnd.prune(args.ratio)
+    acc_random = opt.evaluate(opt.retrain(steps=args.retrain_steps, mask=rnd_mask), test)
+    print(f"test acc  full-data: {acc_full:.4f}  {args.scorer}-pruned: {acc_pruned:.4f}  "
           f"random-pruned: {acc_random:.4f}")
+
+    path = opt.export(f"out/scores_{args.scorer}", mask=mask)
+    print(f"scores + mask exported to {path}")
 
 
 if __name__ == "__main__":

@@ -1,6 +1,6 @@
 """End-to-end driver (paper Sec. 4.1): noisy finetuning of a BERT-style
 classifier under weak supervision, with SAMA data reweighting + label
-correction.
+correction — all through ``repro.dataopt.meta_train``.
 
 Pipeline: synthetic corpus -> 5 noisy labeling functions -> majority vote
 (WRENCH setup) -> SAMA bilevel training against a small clean dev set ->
@@ -13,12 +13,11 @@ CPU-sized) to the full bert-base config with --full.
 import argparse
 import time
 
-import jax
 import numpy as np
 
 from repro import configs, data
-from repro.api import MetaLearner
-from repro.core import available_methods, problems
+from repro.core import available_methods
+from repro.dataopt import meta_train, model_accuracy, train_plain
 from repro.models import Model
 
 
@@ -28,6 +27,7 @@ def main():
     ap.add_argument("--full", action="store_true", help="full bert-base (needs accelerator)")
     ap.add_argument("--method", default="sama", choices=list(available_methods()))
     ap.add_argument("--label-correct", action="store_true")
+    ap.add_argument("--baseline", action="store_true", help="also run plain finetuning")
     args = ap.parse_args()
 
     cfg = configs.get_config("bert-base") if args.full else configs.get_smoke_config("bert-base")
@@ -42,38 +42,22 @@ def main():
     weak_acc = float(np.mean(train["y"] == train["y_true"]))
     print(f"weak-label accuracy after majority vote: {weak_acc:.3f}")
 
-    spec = problems.make_data_optimization_spec(
-        model.classifier_per_example, reweight=True, correct=args.label_correct
-    )
-    lam = problems.init_data_optimization_lam(
-        jax.random.PRNGKey(1), reweight=True, correct=args.label_correct,
-        num_classes=cfg.num_labels,
-    )
-    learner = MetaLearner(
-        spec, base_opt="adam", base_lr=1e-3, meta_opt="adam", meta_lr=1e-3,
-        method=args.method, unroll_steps=2,
-    )
-    learner.init(model.init(jax.random.PRNGKey(0)), lam)
-
-    it = data.BatchIterator(train, dev, batch_size=32, meta_batch_size=32, unroll=2, seed=0)
     t0 = time.time()
-    hist = learner.fit(it, args.steps, log_every=25)
-    state = learner.state
-    for h in hist:
-        print({k: round(v, 4) for k, v in h.items()})
+    learner = meta_train(
+        model, train, dev,
+        method=args.method, steps=args.steps, unroll=2,
+        reweight=True, correct=args.label_correct, log_every=25,
+    )
     print(f"meta-training took {time.time() - t0:.1f}s "
           f"({args.steps * 64 / (time.time() - t0):.0f} samples/s)")
 
-    # --- evaluation ---
-    import jax.numpy as jnp
-
-    fwd = jax.jit(lambda p, b: model.forward(p, b)[0])
-    correct = 0
-    for i in range(0, len(test["tokens"]), 128):
-        logits = fwd(state.theta, {"tokens": jnp.asarray(test["tokens"][i : i + 128])})
-        correct += int((np.asarray(jnp.argmax(logits, -1)) == test["y_true"][i : i + 128]).sum())
-    print(f"{args.method} test accuracy: {correct / len(test['tokens']):.4f} "
+    acc = model_accuracy(model, learner.state.theta, test)
+    print(f"{args.method} test accuracy: {acc:.4f} "
           f"(weak-label ceiling without meta learning ~{weak_acc:.3f})")
+
+    if args.baseline:
+        theta = train_plain(model, train, steps=args.steps * 2)
+        print(f"plain-finetune test accuracy: {model_accuracy(model, theta, test):.4f}")
 
 
 if __name__ == "__main__":

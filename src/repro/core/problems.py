@@ -120,8 +120,10 @@ def make_auxiliary_spec(
 
 def softmax_per_example(apply_fn: Callable[[PyTree, jnp.ndarray], jnp.ndarray]) -> PerExampleFn:
     """Adapter for plain classifiers: batch = {'x': (B, ...), 'y': (B,) int}.
-    Uncertainty is predictive entropy (cheap stand-in for the paper's
-    EMA-disagreement; the EMA variant lives in benchmarks/data pruning)."""
+    Uncertainty is in-batch predictive entropy; the paper's cross-meta-step
+    EMA-disagreement variant is first-class in ``repro.dataopt.scores``
+    (``EMATracker`` / ``ema_disagreement``, or ``scorer="meta"`` with
+    ``uncertainty="ema"`` on the ``DataOptimizer`` facade)."""
 
     def fn(theta, batch):
         logits = apply_fn(theta, batch["x"])

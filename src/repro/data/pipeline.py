@@ -122,9 +122,12 @@ def weak_labels(y_true: np.ndarray, num_classes: int, *, num_lfs: int = 5,
 class BatchIterator:
     """Yields (base_batches[K], meta_batch) pairs for the Engine.
 
-    ``shard`` (optional NamedSharding for the batch axis) device_puts the
-    global batch so pjit consumes pre-sharded arrays — the data-parallel axis
-    of the production mesh."""
+    ``shard`` (optional NamedSharding for the batch axis of the META batch)
+    device_puts the global batch so pjit consumes pre-sharded arrays — the
+    data-parallel axes of the production mesh. Base batches carry a leading
+    unroll axis (K, B, ...), so their sharding shifts one dim right
+    (P(None, *spec)); subclasses override ``_base_idx`` to change the base
+    sampling distribution (see ``repro.dataopt.ReweightedIterator``)."""
 
     def __init__(
         self,
@@ -145,16 +148,26 @@ class BatchIterator:
         self.n = len(next(iter(self.base.values())))
         self.nm = len(next(iter(self.meta.values())))
         self.shard = shard
+        if shard is not None and hasattr(shard, "spec"):
+            from jax.sharding import NamedSharding, PartitionSpec
+
+            self.base_shard = NamedSharding(shard.mesh, PartitionSpec(None, *shard.spec))
+        else:
+            self.base_shard = shard
+
+    def _base_idx(self) -> np.ndarray:
+        """(K, B) base example indices; the uniform default."""
+        return self.rng.integers(0, self.n, size=(self.k, self.bs))
 
     def __iter__(self) -> Iterator:
         return self
 
     def __next__(self):
-        idx = self.rng.integers(0, self.n, size=(self.k, self.bs))
+        idx = self._base_idx()
         midx = self.rng.integers(0, self.nm, size=self.mbs)
         base = {k: v[idx] for k, v in self.base.items()}
         meta = {k: v[midx] for k, v in self.meta.items()}
         if self.shard is not None:
-            base = jax.tree_util.tree_map(lambda x: jax.device_put(x, self.shard), base)
+            base = jax.tree_util.tree_map(lambda x: jax.device_put(x, self.base_shard), base)
             meta = jax.tree_util.tree_map(lambda x: jax.device_put(x, self.shard), meta)
         return base, meta

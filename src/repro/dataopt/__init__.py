@@ -1,0 +1,66 @@
+"""repro.dataopt — first-class data optimization (DESIGN.md §8).
+
+The application layer the paper's Sec. 4 experiments run on: per-example
+scoring (meta-learned importance through any registered hypergradient
+method, plus EL2N / GraNd / margin / loss / random heuristics), prune
+schedules with a retrain harness, online score-proportional reweighting,
+distributed sharded full-dataset scoring, and manifest-validated score
+export — all behind the ``DataOptimizer`` facade where the scorer is one
+string argument.
+"""
+
+from repro.dataopt.distributed import batch_sharding, map_batches, score_dataset
+from repro.dataopt.export import export_scores, import_scores
+from repro.dataopt.optimizer import DataOptimizer
+from repro.dataopt.prune import (
+    accuracy,
+    apply_mask,
+    class_balanced_mask,
+    keep_mask,
+    model_accuracy,
+    retrain,
+    train_plain,
+)
+from repro.dataopt.reweight import ReweightedIterator, sampling_probs
+from repro.dataopt.scores import (
+    EMATracker,
+    ScoreContext,
+    ScoreProvider,
+    available_scorers,
+    ema_disagreement,
+    fit_meta,
+    fit_plain,
+    meta_train,
+    register_scorer,
+    resolve_scorer,
+    unregister_scorer,
+)
+
+__all__ = [
+    "DataOptimizer",
+    "EMATracker",
+    "ReweightedIterator",
+    "ScoreContext",
+    "ScoreProvider",
+    "accuracy",
+    "apply_mask",
+    "available_scorers",
+    "batch_sharding",
+    "class_balanced_mask",
+    "ema_disagreement",
+    "export_scores",
+    "fit_meta",
+    "fit_plain",
+    "import_scores",
+    "keep_mask",
+    "map_batches",
+    "meta_train",
+    "model_accuracy",
+    "register_scorer",
+    "resolve_scorer",
+    "retrain",
+    "sampling_probs",
+    "score_dataset",
+    "train_plain",
+    "unregister_scorer",
+]

@@ -1,0 +1,134 @@
+"""Sharded full-dataset scoring (DESIGN.md §8).
+
+Scoring a dataset is embarrassingly data-parallel: every score in this
+subsystem is a per-example quantity with no cross-example reduction, so the
+batch axis shards over the mesh data axes exactly like training batches do
+(``launch.sharding.batch_spec``) and the per-shard math is untouched. That
+makes sharded scoring *bitwise identical* to single-device scoring — pinned
+by tests/test_dataopt.py on a forced 1xN CPU mesh.
+
+``map_batches`` is the one primitive: drive a jit'ed batch function over a
+dataset in fixed-size batches (padding the tail so jit sees ONE shape),
+optionally device_put-ing each batch with the mesh's batch NamedSharding.
+Everything in ``dataopt.scores`` funnels through it, so every scorer —
+including third-party ``register_scorer`` providers built on it — scales
+with devices for free.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding
+
+from repro.launch.sharding import batch_spec, dp_size
+
+PyTree = Any
+
+# jax.jit's trace cache lives on the wrapper, so repeated full-dataset
+# passes over the SAME function (the EMA-tracking loop re-scores every few
+# meta steps) must reuse one wrapper or every pass recompiles. Bounded LRU,
+# not a weak map: the jit wrapper strongly references its function, so weak
+# keys would never collect; eviction caps what throwaway closures (e.g. the
+# grand scorer's per-call batch_fn) can accumulate.
+
+
+@functools.lru_cache(maxsize=64)
+def _jitted_cached(fn):
+    return jax.jit(fn)
+
+
+def _jitted(fn):
+    try:
+        return _jitted_cached(fn)
+    except TypeError:  # unhashable callable: jit without caching
+        return jax.jit(fn)
+
+
+def batch_sharding(mesh) -> Optional[NamedSharding]:
+    """NamedSharding for a (B, ...) batch over the mesh's data axes."""
+
+    if mesh is None:
+        return None
+    return NamedSharding(mesh, batch_spec(mesh))
+
+
+def _pad_to(n: int, batch_size: int, mesh) -> int:
+    """Padded dataset length: a multiple of batch_size, with batch_size a
+    multiple of the data-parallel degree so every shard is non-ragged."""
+
+    if mesh is not None and batch_size % dp_size(mesh) != 0:
+        raise ValueError(
+            f"batch_size {batch_size} must divide over the mesh data axes "
+            f"(dp={dp_size(mesh)}) for sharded scoring"
+        )
+    return ((n + batch_size - 1) // batch_size) * batch_size
+
+
+def map_batches(
+    batch_fn: Callable[..., PyTree],
+    dataset: Dict[str, np.ndarray],
+    *,
+    args: Tuple = (),
+    fields: Tuple[str, ...],
+    batch_size: int = 128,
+    mesh=None,
+) -> PyTree:
+    """Apply ``batch_fn(*args, batch)`` (batch dict -> pytree of (B, ...)
+    arrays) over the whole dataset and concatenate the results along the
+    leading axis. ``args`` carries traced leading arguments (params), so a
+    STABLE ``batch_fn`` keeps one compiled executable across calls — pass
+    changing values through ``args``, not a fresh closure.
+
+    The tail batch is padded by wrapping around to index 0 (results trimmed),
+    so one shape is compiled per (batch_fn, batch_size). With a ``mesh``,
+    each batch is device_put with the batch NamedSharding before the call
+    and the step runs under the mesh context — XLA executes it
+    data-parallel with zero collectives (per-example outputs never cross
+    shards).
+    """
+
+    n = len(next(iter(dataset.values())))
+    npad = _pad_to(n, batch_size, mesh)
+    idx = np.arange(npad) % n
+    shard = batch_sharding(mesh)
+    fn = _jitted(batch_fn)
+
+    chunks = []
+    for start in range(0, npad, batch_size):
+        rows = idx[start : start + batch_size]
+        batch = {k: jnp.asarray(dataset[k][rows]) for k in fields if k in dataset}
+        if shard is not None:
+            batch = jax.tree_util.tree_map(lambda x: jax.device_put(x, shard), batch)
+            with mesh:
+                out = fn(*args, batch)
+        else:
+            out = fn(*args, batch)
+        chunks.append(jax.tree_util.tree_map(np.asarray, out))
+    stacked = jax.tree_util.tree_map(lambda *xs: np.concatenate(xs, axis=0), *chunks)
+    return jax.tree_util.tree_map(lambda x: x[:n], stacked)
+
+
+def score_dataset(
+    per_example_fn: Callable[[PyTree, Dict[str, jnp.ndarray]], Any],
+    theta: PyTree,
+    dataset: Dict[str, np.ndarray],
+    *,
+    fields: Tuple[str, ...] = ("tokens", "y"),
+    batch_size: int = 128,
+    mesh=None,
+):
+    """Run a ``PerExample`` adapter over the full dataset (sharded when a
+    mesh is given). Returns the PerExample pytree with stacked (N, ...)
+    numpy leaves. ``per_example_fn`` is the jit-cache key — theta rides as
+    a traced argument, so repeated scoring passes (EMA tracking) compile
+    once."""
+
+    return map_batches(
+        per_example_fn, dataset, args=(theta,),
+        fields=fields, batch_size=batch_size, mesh=mesh,
+    )

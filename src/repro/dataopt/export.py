@@ -1,0 +1,102 @@
+"""Manifest-validated score/mask export + import (DESIGN.md §8).
+
+Scores are expensive (a meta-training run) and reusable (prune ratios,
+reweighting temperatures and retrains are all derived views), so they
+persist through the same npz+manifest substrate as model checkpoints
+(``repro.checkpoint``) with a dataopt-specific manifest envelope:
+
+    meta.kind    = "dataopt.scores"   (refuses foreign checkpoints)
+    meta.version = 1
+    meta.scorer  = provider name      (validated on import when expected)
+    meta.n       = dataset length     (validated against the live dataset)
+
+Import reconstructs the tree from the manifest itself — no template needed —
+and re-validates through ``checkpoint.restore`` so shape/dtype drift fails
+loudly rather than silently rescoring a different dataset.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, Optional, Tuple
+
+import numpy as np
+
+from repro import checkpoint
+from repro.checkpoint.checkpoint import MANIFEST
+
+KIND = "dataopt.scores"
+VERSION = 1
+
+
+def export_scores(
+    path: str,
+    scores: np.ndarray,
+    *,
+    scorer: str,
+    mask: Optional[np.ndarray] = None,
+    meta: Optional[Dict[str, Any]] = None,
+) -> str:
+    """Write scores (and optionally a keep mask) with a validated manifest."""
+
+    scores = np.asarray(scores, np.float32)
+    if scores.ndim != 1:
+        raise ValueError(f"scores must be 1-D, got shape {scores.shape}")
+    if not np.all(np.isfinite(scores)):
+        raise ValueError("refusing to export non-finite scores")
+    tree = {"scores": scores}
+    if mask is not None:
+        mask = np.asarray(mask, dtype=bool)
+        if mask.shape != scores.shape:
+            raise ValueError(f"mask shape {mask.shape} != scores shape {scores.shape}")
+        tree["mask"] = mask
+    manifest_meta = {"kind": KIND, "version": VERSION, "scorer": scorer,
+                     "n": int(len(scores))}
+    if meta:
+        overlap = set(meta) & set(manifest_meta)
+        if overlap:
+            raise ValueError(f"meta keys {sorted(overlap)} are reserved")
+        manifest_meta.update(meta)
+    checkpoint.save(path, tree, meta=manifest_meta)
+    return path
+
+
+def import_scores(
+    path: str,
+    *,
+    expect_n: Optional[int] = None,
+    expect_scorer: Optional[str] = None,
+) -> Tuple[np.ndarray, Optional[np.ndarray], Dict[str, Any]]:
+    """Load ``(scores, mask_or_None, manifest_meta)`` with validation."""
+
+    with open(os.path.join(path, MANIFEST)) as f:
+        manifest = json.load(f)
+    meta = manifest.get("meta", {})
+    if meta.get("kind") != KIND:
+        raise ValueError(f"{path} is not a dataopt score export "
+                         f"(manifest kind={meta.get('kind')!r})")
+    if meta.get("version") != VERSION:
+        raise ValueError(f"{path}: unsupported score-export version {meta.get('version')!r}")
+
+    # rebuild the template from the manifest so restore() can shape-check
+    like: Dict[str, np.ndarray] = {}
+    for name, shape, dtype in zip(manifest["names"], manifest["shapes"], manifest["dtypes"]):
+        key = name.strip("[]'\"")
+        if key not in ("scores", "mask"):
+            raise ValueError(f"{path}: unexpected entry {name!r} in score export")
+        like[key] = np.zeros(shape, dtype=dtype)
+    tree, _ = checkpoint.restore(path, like)
+
+    scores = np.asarray(tree["scores"])
+    mask = np.asarray(tree["mask"]) if "mask" in tree else None
+    if meta.get("n") != len(scores):
+        raise ValueError(f"{path}: manifest n={meta.get('n')} but scores have "
+                         f"length {len(scores)} — corrupt export")
+    if expect_n is not None and len(scores) != expect_n:
+        raise ValueError(f"{path}: scores are for a dataset of {len(scores)} "
+                         f"examples, caller's dataset has {expect_n}")
+    if expect_scorer is not None and meta.get("scorer") != expect_scorer:
+        raise ValueError(f"{path}: scored by {meta.get('scorer')!r}, "
+                         f"expected {expect_scorer!r}")
+    return scores, mask, meta

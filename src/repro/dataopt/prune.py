@@ -1,0 +1,161 @@
+"""Prune schedules + the retrain harness (DESIGN.md §8).
+
+Masks, not index lists, are the interchange format: a boolean ``keep`` mask
+of shape (N,) aligned with the scored dataset. Masks compose with the
+export manifest (``dataopt.export``) and make the class-balance invariant
+checkable (tests pin that the keep-ratio is honored per class).
+
+Schedules:
+* one-shot   — score once, keep the top (1 - ratio) fraction;
+* class-balanced — the same ratio applied WITHIN each label class, so
+  pruning cannot silently collapse a class (Sec. 4.3's failure mode for
+  loss-based heuristics on imbalanced noise);
+* iterative  — alternate re-scoring and pruning over several rounds
+  (driven by ``DataOptimizer.prune(rounds=...)``; each round scores only
+  the survivors, the composition of round masks is returned).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.dataopt.distributed import map_batches
+from repro.dataopt.scores import fit_plain
+
+PyTree = Any
+
+# Stable per-forward_fn / per-model prediction functions, so repeated
+# evaluations of one model hit map_batches' jit cache instead of
+# recompiling the forward per accuracy() call. Bounded LRU (the returned
+# lambda closes over its key, so a weak map would never collect).
+
+
+@functools.lru_cache(maxsize=64)
+def _argmax_pred(forward_fn):
+    return lambda p, b: jnp.argmax(forward_fn(p, b), axis=-1)
+
+
+@functools.lru_cache(maxsize=64)
+def _model_forward(model):
+    return lambda p, b: model.forward(p, b)[0]
+
+
+# ---------------------------------------------------------------------------
+# masks
+# ---------------------------------------------------------------------------
+
+
+def keep_count(n: int, ratio: float) -> int:
+    """How many examples survive pruning ``ratio`` of ``n`` (at least 1)."""
+
+    if not 0.0 <= ratio < 1.0:
+        raise ValueError(f"prune ratio must be in [0, 1), got {ratio}")
+    return max(int(round(n * (1.0 - ratio))), 1)
+
+
+def keep_mask(scores: np.ndarray, ratio: float) -> np.ndarray:
+    """Boolean mask keeping the top (1 - ratio) fraction by score (higher =
+    keep; deterministic tie-break by index)."""
+
+    scores = np.asarray(scores)
+    k = keep_count(len(scores), ratio)
+    order = np.argsort(-scores, kind="stable")
+    mask = np.zeros(len(scores), dtype=bool)
+    mask[order[:k]] = True
+    return mask
+
+
+def class_balanced_mask(scores: np.ndarray, labels: np.ndarray, ratio: float) -> np.ndarray:
+    """Apply ``keep_mask`` independently within each label class, so every
+    class keeps its own top (1 - ratio) fraction."""
+
+    scores = np.asarray(scores)
+    labels = np.asarray(labels)
+    if len(scores) != len(labels):
+        raise ValueError(f"scores ({len(scores)}) and labels ({len(labels)}) disagree")
+    mask = np.zeros(len(scores), dtype=bool)
+    for c in np.unique(labels):
+        rows = np.flatnonzero(labels == c)
+        mask[rows] = keep_mask(scores[rows], ratio)
+    return mask
+
+
+def apply_mask(dataset: Dict[str, np.ndarray], mask: np.ndarray) -> Dict[str, np.ndarray]:
+    """Subset every aligned field of the dataset by a boolean keep mask."""
+
+    mask = np.asarray(mask, dtype=bool)
+    n = len(next(iter(dataset.values())))
+    if mask.shape != (n,):
+        raise ValueError(f"mask shape {mask.shape} != dataset length ({n},)")
+    return {k: v[mask] for k, v in dataset.items()}
+
+
+# ---------------------------------------------------------------------------
+# retrain harness + evaluation
+# ---------------------------------------------------------------------------
+
+
+def retrain(
+    per_example_fn,
+    init_fn,
+    dataset: Dict[str, np.ndarray],
+    *,
+    mask: Optional[np.ndarray] = None,
+    steps: int,
+    seed: int = 0,
+    batch: int = 32,
+    lr: float = 1e-3,
+    fields: Tuple[str, ...] = ("tokens", "y"),
+) -> PyTree:
+    """Train a FRESH model (new init) on the kept subset — the paper's
+    prune-then-retrain protocol. ``mask=None`` retrains on everything (the
+    full-data baseline arm)."""
+
+    sub = dataset if mask is None else apply_mask(dataset, mask)
+    theta0 = init_fn(jax.random.PRNGKey(seed))
+    return fit_plain(per_example_fn, theta0, sub, steps=steps, seed=seed,
+                     batch=batch, lr=lr, fields=fields)
+
+
+def train_plain(model, train: Dict[str, np.ndarray], *, steps: int, seed: int = 0,
+                batch: int = 32, lr: float = 1e-3) -> PyTree:
+    """Model-object convenience over ``scores.fit_plain`` (the examples' and
+    benchmarks' no-meta finetuning baseline)."""
+
+    return fit_plain(model.classifier_per_example, model.init(jax.random.PRNGKey(seed)),
+                     train, steps=steps, seed=seed, batch=batch, lr=lr)
+
+
+def accuracy(
+    forward_fn: Callable[[PyTree, Dict[str, jnp.ndarray]], jnp.ndarray],
+    theta: PyTree,
+    dataset: Dict[str, np.ndarray],
+    *,
+    label_key: str = "y_true",
+    fields: Tuple[str, ...] = ("tokens",),
+    batch_size: int = 128,
+    mesh=None,
+) -> float:
+    """Top-1 accuracy of ``argmax forward_fn(theta, batch)`` against
+    ``dataset[label_key]`` — batched (and mesh-sharded) like scoring.
+    ``fields`` selects the batch keys the forward consumes (bare-function
+    models use e.g. ``("x",)``). The prediction function is cached per
+    ``forward_fn``, so repeated evaluations of one model compile once."""
+
+    preds = map_batches(_argmax_pred(forward_fn), dataset, args=(theta,),
+                        fields=fields, batch_size=batch_size, mesh=mesh)
+    return float(np.mean(preds == dataset[label_key]))
+
+
+def model_accuracy(model, theta, dataset, *, label_key: str = "y_true",
+                   batch_size: int = 128, mesh=None) -> float:
+    """``accuracy`` for a ``repro.models.Model`` (its forward returns
+    (logits, aux)); one compile per model across calls."""
+
+    return accuracy(_model_forward(model), theta, dataset, label_key=label_key,
+                    batch_size=batch_size, mesh=mesh)

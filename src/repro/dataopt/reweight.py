@@ -1,0 +1,99 @@
+"""Online reweighted / curriculum batch iteration (DESIGN.md §8).
+
+``ReweightedIterator`` extends ``data.BatchIterator`` — same
+``(base_batches[K], meta_batch)`` protocol, same sharding behavior — but
+draws base examples from a score-proportional distribution instead of
+uniformly (the ``_base_idx`` hook). That turns any per-example score array
+(meta-learned weights, negated EL2N, ...) into an ONLINE data optimizer:
+no retraining run needed, the sampler soft-prunes as it feeds the very
+training loop that may be refreshing the scores (``update_scores``
+between meta steps).
+
+Curriculum: the sampling sharpness follows a temperature schedule
+``T(step)``. T -> inf is uniform sampling (early: see everything), T -> 0
+is argmax-like (late: concentrate on the highest-scored data). Pass
+``temperature=(T0, T1, steps)`` for a linear anneal or a callable.
+
+Sharding: a ``mesh`` builds the production batch NamedShardings
+(``launch.sharding.batch_spec``) over its data axes; explicit ``shard=``
+(a meta-batch NamedSharding) also works, exactly as on ``BatchIterator``.
+
+The meta split stays uniformly sampled — reweighting the meta/dev set
+would bias the outer objective, not the data curation.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Dict, Tuple, Union
+
+import numpy as np
+from jax.sharding import NamedSharding
+
+from repro.data import BatchIterator
+from repro.launch.sharding import batch_spec
+
+TemperatureLike = Union[float, Tuple[float, float, int], Callable[[int], float]]
+
+
+def _temperature_fn(temperature: TemperatureLike) -> Callable[[int], float]:
+    if callable(temperature):
+        return temperature
+    if isinstance(temperature, tuple):
+        t0, t1, steps = temperature
+        if steps <= 0:
+            raise ValueError(f"curriculum steps must be positive, got {steps}")
+        return lambda i: t0 + (t1 - t0) * min(i / steps, 1.0)
+    return lambda i: float(temperature)
+
+
+def sampling_probs(scores: np.ndarray, temperature: float) -> np.ndarray:
+    """Sampling distribution at a given temperature: a softmax over scores
+    normalized to their own range, ``p_i ∝ exp((s_i - max s) / (range * T))``
+    — scale-invariant, so scores on any axis (sigmoid weights, negated EL2N)
+    behave the same. T -> inf flattens to uniform (every example keeps
+    nonzero mass), T -> 0 concentrates on the top scores."""
+
+    s = np.asarray(scores, np.float64)
+    if not np.all(np.isfinite(s)):
+        raise ValueError("scores must be finite to derive sampling probabilities")
+    span = s.max() - s.min()
+    if span <= 0.0:  # all-equal scores: uniform
+        return np.full(len(s), 1.0 / len(s))
+    z = (s - s.max()) / span  # in [-1, 0]
+    p = np.exp(z / max(temperature, 1e-6))
+    return p / p.sum()
+
+
+class ReweightedIterator(BatchIterator):
+    """``BatchIterator`` with score-weighted base sampling."""
+
+    def __init__(
+        self,
+        base_data: Dict[str, np.ndarray],
+        meta_data: Dict[str, np.ndarray],
+        scores: np.ndarray,
+        *,
+        temperature: TemperatureLike = 1.0,
+        mesh=None,
+        shard=None,
+        **kwargs,
+    ):
+        if shard is None and mesh is not None:
+            shard = NamedSharding(mesh, batch_spec(mesh))
+        super().__init__(base_data, meta_data, shard=shard, **kwargs)
+        self.temperature_fn = _temperature_fn(temperature)
+        self.step = 0
+        self.update_scores(scores)
+
+    def update_scores(self, scores: np.ndarray):
+        """Swap in fresh scores mid-stream (online reweighting)."""
+
+        scores = np.asarray(scores)
+        if scores.shape != (self.n,):
+            raise ValueError(f"scores shape {scores.shape} != ({self.n},)")
+        self.scores = scores.astype(np.float32)
+
+    def _base_idx(self) -> np.ndarray:
+        p = sampling_probs(self.scores, self.temperature_fn(self.step))
+        self.step += 1
+        return self.rng.choice(self.n, size=(self.k, self.bs), p=p)

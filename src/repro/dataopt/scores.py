@@ -1,0 +1,506 @@
+"""Score providers: one number per training example (DESIGN.md §8).
+
+The uniform contract every provider obeys:
+
+    scorer(ctx: ScoreContext) -> np.ndarray of shape (N,), float32,
+    where HIGHER score = HIGHER keep-priority.
+
+Providers register under a string name (``register_scorer``, mirroring
+``core.methods``), so swapping ``scorer="meta"`` for ``"el2n"`` or
+``"random"`` is a one-argument change everywhere — the acceptance bar for
+this subsystem. Heuristic scorers whose raw quantity measures *hardness*
+(el2n, grand, loss) default to the noise-robust orientation (keep easy,
+i.e. score = -hardness) and expose ``keep_hard=True`` for the classic
+clean-data pruning direction.
+
+Built-ins:
+
+* ``meta`` — the paper's Sec. 4.3 scorer: MetaWeightNet importance learned
+  by bilevel meta-training through ANY registered hypergradient method
+  (``method="sama"`` by default — the whole ``core.methods`` registry is a
+  knob here), with optional cross-meta-step EMA score tracking.
+* ``el2n`` — ||softmax(logits) - onehot||_2 from an early-trained model
+  (Paul et al., Deep Learning on a Data Diet).
+* ``grand`` — exact per-example gradient norm (vmap'd grad) from an
+  early-trained model.
+* ``margin`` — p_y - max_{c != y} p_c (positive = confidently correct).
+* ``loss`` — negative per-example cross-entropy.
+* ``random`` — seeded uniform scores (the control arm).
+
+This module also owns the paper's EMA machinery that used to be stranded in
+benchmark code: ``EMATracker`` (cross-meta-step exponential moving averages
+of any per-example array) and ``ema_disagreement`` (uncertainty as the
+divergence between the model's current predictive distribution and its EMA
+across meta steps — high when predictions keep flipping, the signal the
+paper feeds to MetaWeightNet next to the loss).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import optim
+from repro.api import MetaLearner
+from repro.core import problems
+from repro.core.meta_modules import apply_weight_net, weight_features
+from repro.data import BatchIterator
+from repro.dataopt.distributed import map_batches, score_dataset
+
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# EMA tracking + EMA-disagreement uncertainty
+# ---------------------------------------------------------------------------
+
+
+class EMATracker:
+    """Exponential moving average of a per-example array across meta steps.
+
+    ``decay`` close to 1 remembers long histories; the first ``update``
+    initializes the average to the observed value (no zero-bias)."""
+
+    def __init__(self, decay: float = 0.9):
+        if not 0.0 <= decay < 1.0:
+            raise ValueError(f"decay must be in [0, 1), got {decay}")
+        self.decay = decay
+        self.value: Optional[np.ndarray] = None
+        self.updates = 0
+
+    def update(self, x: np.ndarray) -> np.ndarray:
+        x = np.asarray(x, np.float32)
+        if self.value is None:
+            self.value = x.copy()
+        else:
+            if self.value.shape != x.shape:
+                raise ValueError(f"EMA shape changed: {self.value.shape} -> {x.shape}")
+            self.value = self.decay * self.value + (1.0 - self.decay) * x
+        self.updates += 1
+        return self.value
+
+
+def ema_disagreement(probs: np.ndarray, ema_probs: np.ndarray) -> np.ndarray:
+    """The paper's uncertainty signal: 1 - <p_t, p_ema> per example.
+
+    Zero when the current predictive distribution agrees with its own
+    running average (stable, confident examples); near 1 when predictions
+    keep moving across meta steps (ambiguous or mislabeled examples)."""
+
+    probs = np.asarray(probs, np.float32)
+    ema_probs = np.asarray(ema_probs, np.float32)
+    return 1.0 - np.sum(probs * ema_probs, axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# the scoring context
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class ScoreContext:
+    """Everything a scorer may need. ``per_example_fn`` maps (theta, batch)
+    -> ``problems.PerExample``; ``init_fn`` draws fresh base params. A
+    ``mesh`` makes every full-dataset pass shard over its data axes."""
+
+    per_example_fn: Callable[[PyTree, Any], problems.PerExample]
+    init_fn: Callable[[Any], PyTree]
+    train: Dict[str, np.ndarray]
+    meta: Optional[Dict[str, np.ndarray]] = None  # meta/dev split; None = train
+    fields: Tuple[str, ...] = ("tokens", "y")
+    mesh: Any = None
+    batch_size: int = 128
+    seed: int = 0
+    theta: Optional[PyTree] = None  # pre-trained params, reused when given
+    num_classes: Optional[int] = None  # needed by label correction
+
+    @property
+    def n(self) -> int:
+        return len(next(iter(self.train.values())))
+
+    @property
+    def meta_data(self) -> Dict[str, np.ndarray]:
+        return self.train if self.meta is None else self.meta
+
+    def per_example_all(self, theta) -> problems.PerExample:
+        """PerExample over the FULL train set — sharded when a mesh is set."""
+
+        return score_dataset(
+            self.per_example_fn, theta, self.train,
+            fields=self.fields, batch_size=self.batch_size, mesh=self.mesh,
+        )
+
+
+class ScoreProvider:
+    """Base class: set ``name``, implement ``__call__(ctx) -> (N,) scores``
+    (higher = keep). Plain callables work too; this class is the documented
+    protocol anchor."""
+
+    name: str = "abstract"
+
+    def __call__(self, ctx: ScoreContext) -> np.ndarray:
+        raise NotImplementedError
+
+    def __repr__(self):  # pragma: no cover - debugging nicety
+        return f"{type(self).__name__}(name={self.name!r})"
+
+
+# ---------------------------------------------------------------------------
+# registry (mirrors core.methods.register_method)
+# ---------------------------------------------------------------------------
+
+#: name -> factory(**knobs) -> scorer callable.
+ScorerFactory = Callable[..., Callable[[ScoreContext], np.ndarray]]
+
+_REGISTRY: Dict[str, ScorerFactory] = {}
+
+
+def register_scorer(name: str, factory: Optional[Any] = None, *, overwrite: bool = False):
+    """Register a score provider under ``name``.
+
+        @register_scorer("mine")                # decorator on factory(**knobs)
+        def _make(**knobs): return MyScorer(...)
+
+        register_scorer("mine", MyScorer())     # an instance (knobs must be empty)
+        register_scorer("mine", _make)          # a plain factory
+    """
+
+    def _install(f: ScorerFactory) -> ScorerFactory:
+        if not overwrite and name in _REGISTRY:
+            raise ValueError(f"scorer {name!r} already registered "
+                             "(pass overwrite=True to replace)")
+        _REGISTRY[name] = f
+        return f
+
+    if factory is None:
+        return _install
+    if isinstance(factory, ScoreProvider):
+        instance = factory
+
+        def _from_instance(**knobs):
+            if knobs:
+                raise TypeError(f"scorer {name!r} was registered as an instance "
+                                f"and takes no knobs, got {sorted(knobs)}")
+            return instance
+
+        return _install(_from_instance)
+    return _install(factory)
+
+
+def unregister_scorer(name: str):
+    """Remove a registered scorer (test hygiene)."""
+    _REGISTRY.pop(name, None)
+
+
+def available_scorers() -> Tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+def resolve_scorer(scorer: Any, **knobs) -> Callable[[ScoreContext], np.ndarray]:
+    """Turn a scorer name / provider / callable into a scorer callable."""
+
+    if isinstance(scorer, str):
+        if scorer not in _REGISTRY:
+            raise ValueError(f"unknown scorer {scorer!r}; registered: {available_scorers()}")
+        return _REGISTRY[scorer](**knobs)
+    if callable(scorer):
+        if knobs:
+            raise TypeError(f"knobs {sorted(knobs)} given with an already-built scorer")
+        return scorer
+    raise TypeError(f"scorer must be a name or callable, got {type(scorer).__name__}")
+
+
+# ---------------------------------------------------------------------------
+# plain training (shared by the heuristic scorers and the retrain harness)
+# ---------------------------------------------------------------------------
+
+
+def fit_plain(
+    per_example_fn,
+    theta0: PyTree,
+    train: Dict[str, np.ndarray],
+    *,
+    steps: int,
+    seed: int = 0,
+    batch: int = 32,
+    lr: float = 1e-3,
+    fields: Tuple[str, ...] = ("tokens", "y"),
+) -> PyTree:
+    """Minimal no-meta training loop: adam on mean per-example loss. The one
+    implementation behind every example/benchmark "plain finetune" baseline
+    and the heuristic scorers' early-trained model."""
+
+    opt = optim.adam(lr)
+    st = opt.init(theta0)
+    rng = np.random.default_rng(seed)
+    n = len(next(iter(train.values())))
+
+    @jax.jit
+    def step(p, s, b):
+        g = jax.grad(lambda pp: jnp.mean(per_example_fn(pp, b).loss))(p)
+        upd, s = opt.update(g, s, p)
+        return optim.apply_updates(p, upd), s
+
+    theta = theta0
+    for _ in range(steps):
+        idx = rng.integers(0, n, batch)
+        b = {k: jnp.asarray(train[k][idx]) for k in fields if k in train}
+        theta, st = step(theta, st, b)
+    return theta
+
+
+def _early_theta(ctx: ScoreContext, train_steps: int, lr: float) -> PyTree:
+    """The early-trained model the heuristic scorers probe (reuses
+    ``ctx.theta`` when the caller already has one)."""
+
+    if ctx.theta is not None:
+        return ctx.theta
+    theta0 = ctx.init_fn(jax.random.PRNGKey(ctx.seed))
+    return fit_plain(ctx.per_example_fn, theta0, ctx.train,
+                     steps=train_steps, seed=ctx.seed, fields=ctx.fields)
+
+
+def _oriented(hardness: np.ndarray, keep_hard: bool) -> np.ndarray:
+    """Map a raw hardness quantity onto the keep-priority axis."""
+
+    h = np.asarray(hardness, np.float32)
+    return h if keep_hard else -h
+
+
+# ---------------------------------------------------------------------------
+# heuristic providers
+# ---------------------------------------------------------------------------
+
+
+@register_scorer("el2n")
+def _make_el2n(train_steps: int = 20, keep_hard: bool = False, lr: float = 1e-3):
+    def el2n(ctx: ScoreContext) -> np.ndarray:
+        theta = _early_theta(ctx, train_steps, lr)
+        pe = ctx.per_example_all(theta)
+        p = jax.nn.softmax(jnp.asarray(pe.logits), axis=-1)
+        norm = np.asarray(jnp.linalg.norm(p - jnp.asarray(pe.label_onehot), axis=-1))
+        return _oriented(norm, keep_hard)
+
+    return el2n
+
+
+@register_scorer("grand")
+def _make_grand(train_steps: int = 20, keep_hard: bool = False, lr: float = 1e-3,
+                grad_batch: int = 16):
+    def grand(ctx: ScoreContext) -> np.ndarray:
+        theta = _early_theta(ctx, train_steps, lr)
+
+        def one_grad_norm(b_row):
+            # vmap over singleton batches: exact per-example gradient norm
+            g = jax.grad(lambda p: jnp.sum(ctx.per_example_fn(p, b_row).loss))(theta)
+            sq = sum(jnp.sum(jnp.square(x)) for x in jax.tree_util.tree_leaves(g))
+            return jnp.sqrt(sq)
+
+        def batch_fn(b):
+            singletons = jax.tree_util.tree_map(lambda x: x[:, None], b)
+            return jax.vmap(one_grad_norm)(singletons)
+
+        norm = map_batches(batch_fn, ctx.train, fields=ctx.fields,
+                           batch_size=grad_batch, mesh=ctx.mesh)
+        return _oriented(norm, keep_hard)
+
+    return grand
+
+
+@register_scorer("margin")
+def _make_margin(train_steps: int = 20, keep_hard: bool = False, lr: float = 1e-3):
+    def margin(ctx: ScoreContext) -> np.ndarray:
+        theta = _early_theta(ctx, train_steps, lr)
+        pe = ctx.per_example_all(theta)
+        p = np.asarray(jax.nn.softmax(jnp.asarray(pe.logits), axis=-1))
+        onehot = np.asarray(pe.label_onehot)
+        p_y = np.sum(p * onehot, axis=-1)
+        p_rival = np.max(np.where(onehot > 0, -np.inf, p), axis=-1)
+        m = p_y - p_rival  # positive = confidently correct (easy)
+        return _oriented(m, keep_hard=not keep_hard)  # margin is an EASINESS axis
+
+    return margin
+
+
+@register_scorer("loss")
+def _make_loss(train_steps: int = 20, keep_hard: bool = False, lr: float = 1e-3):
+    def loss(ctx: ScoreContext) -> np.ndarray:
+        theta = _early_theta(ctx, train_steps, lr)
+        pe = ctx.per_example_all(theta)
+        return _oriented(np.asarray(pe.loss), keep_hard)
+
+    return loss
+
+
+@register_scorer("random")
+def _make_random(seed: Optional[int] = None):
+    def random_scores(ctx: ScoreContext) -> np.ndarray:
+        rng = np.random.default_rng(ctx.seed if seed is None else seed)
+        return rng.random(ctx.n).astype(np.float32)
+
+    return random_scores
+
+
+# ---------------------------------------------------------------------------
+# the meta-learned provider (the paper's Sec. 4.3 scorer)
+# ---------------------------------------------------------------------------
+
+
+def fit_meta(
+    ctx: ScoreContext,
+    *,
+    method: Any = "sama",
+    steps: int = 80,
+    unroll: int = 2,
+    reweight: bool = True,
+    correct: bool = False,
+    use_uncertainty: bool = False,
+    base_lr: float = 1e-3,
+    meta_lr: float = 1e-3,
+    batch: int = 32,
+    meta_batch: int = 32,
+    log_every: int = 0,
+    ema_decay: float = 0.0,
+    score_every: int = 10,
+    schedule: str = "auto",
+    learner_kwargs: Optional[Dict[str, Any]] = None,
+) -> Tuple[MetaLearner, Optional[EMATracker], Optional[EMATracker]]:
+    """Meta-train MetaWeightNet (+ optional label corrector) on ``ctx.train``
+    against ``ctx.meta_data`` through ANY registered hypergradient method.
+
+    A ``ctx.mesh`` is forwarded to the MetaLearner (its "auto" schedule
+    picks the single-sync shard_map path), so meta-training shards exactly
+    like the scoring passes; ``learner_kwargs`` overrides it.
+
+    With ``ema_decay > 0``, every ``score_every`` meta steps the full train
+    set is re-scored (sharded when ctx.mesh is set) and two EMAs advance:
+    the MWN weight EMA (cross-meta-step score tracking) and the predictive
+    probability EMA that ``ema_disagreement`` consumes. Returns
+    ``(learner, weight_ema, prob_ema)`` — the trackers are None when EMA
+    tracking is off."""
+
+    spec = problems.make_data_optimization_spec(
+        ctx.per_example_fn, reweight=reweight, correct=correct,
+        use_uncertainty=use_uncertainty,
+    )
+    lam = problems.init_data_optimization_lam(
+        jax.random.PRNGKey(ctx.seed + 10), reweight=reweight, correct=correct,
+        use_uncertainty=use_uncertainty, num_classes=ctx.num_classes,
+    )
+    kwargs = {"mesh": ctx.mesh, **(learner_kwargs or {})}
+    learner = MetaLearner(
+        spec, base_opt="adam", base_lr=base_lr, meta_opt="adam", meta_lr=meta_lr,
+        method=method, unroll_steps=unroll, schedule=schedule,
+        **kwargs,
+    )
+    theta0 = ctx.theta if ctx.theta is not None else ctx.init_fn(jax.random.PRNGKey(ctx.seed))
+    learner.init(theta0, lam)
+    it = BatchIterator(ctx.train, ctx.meta_data, batch_size=batch,
+                       meta_batch_size=meta_batch, unroll=unroll, seed=ctx.seed,
+                       fields=ctx.fields)
+
+    def fit_chunk(n_steps):
+        # run_loop only collects history; printing it here is what makes
+        # log_every observable through the dataopt API (a stalled meta-train
+        # must be distinguishable from a healthy one)
+        for row in learner.fit(it, n_steps, log_every=log_every):
+            print({k: round(v, 4) for k, v in row.items()})
+
+    if ema_decay <= 0.0:
+        fit_chunk(steps)
+        return learner, None, None
+
+    if score_every < 1:
+        raise ValueError(f"score_every must be >= 1 with EMA tracking, got {score_every}")
+    weight_ema, prob_ema = EMATracker(ema_decay), EMATracker(ema_decay)
+    done = 0
+    while done < steps:
+        chunk = min(score_every, steps - done)
+        fit_chunk(chunk)
+        done += chunk
+        pe = ctx.per_example_all(learner.state.theta)
+        if reweight:
+            feats = weight_features(
+                jnp.asarray(pe.loss),
+                jnp.asarray(pe.uncertainty) if use_uncertainty else None,
+            )
+            weight_ema.update(np.asarray(
+                apply_weight_net(learner.state.lam["reweight"], feats)))
+        if pe.logits is not None:
+            prob_ema.update(np.asarray(jax.nn.softmax(jnp.asarray(pe.logits), -1)))
+    return learner, weight_ema, prob_ema
+
+
+def meta_train(
+    model,
+    train: Dict[str, np.ndarray],
+    meta: Optional[Dict[str, np.ndarray]] = None,
+    *,
+    seed: int = 0,
+    mesh=None,
+    batch_size: int = 128,
+    fields: Tuple[str, ...] = ("tokens", "y"),
+    **fit_knobs,
+) -> MetaLearner:
+    """Model-object convenience over ``fit_meta``: meta-train MWN (+optional
+    corrector) for a ``repro.models.Model`` and return the MetaLearner (its
+    ``.state.theta`` is the reweighting-trained base model). This is what the
+    WRENCH/ablation benchmarks' hand-rolled ``train_meta`` loops collapsed
+    into."""
+
+    ctx = ScoreContext(
+        per_example_fn=model.classifier_per_example, init_fn=model.init,
+        train=train, meta=meta, fields=fields, mesh=mesh,
+        batch_size=batch_size, seed=seed,
+        num_classes=getattr(model.cfg, "num_labels", None),
+    )
+    learner, _, _ = fit_meta(ctx, **fit_knobs)
+    return learner
+
+
+@register_scorer("meta")
+def _make_meta(uncertainty: str = "entropy", **fit_knobs):
+    """``uncertainty``: which signal rides next to the loss in the final MWN
+    scoring pass — "none", "entropy" (in-batch predictive entropy), or "ema"
+    (the paper's EMA-disagreement; forces EMA tracking on)."""
+
+    if uncertainty not in ("none", "entropy", "ema"):
+        raise ValueError(f"uncertainty must be none|entropy|ema, got {uncertainty!r}")
+
+    def meta(ctx: ScoreContext) -> np.ndarray:
+        knobs = dict(fit_knobs)
+        if knobs.get("reweight") is False:
+            raise ValueError("the meta scorer needs reweight=True — the MWN "
+                             "weight IS the score")
+        # the MWN's input width must match between training and the final
+        # scoring pass, so use_uncertainty is derived from `uncertainty`
+        # and an explicit contradiction is refused up front (it would only
+        # surface as a matmul shape error AFTER the whole training run)
+        want_unc = uncertainty != "none"
+        if knobs.setdefault("use_uncertainty", want_unc) != want_unc:
+            raise ValueError(
+                f"use_uncertainty={knobs['use_uncertainty']} contradicts "
+                f"uncertainty={uncertainty!r}; drop the use_uncertainty knob"
+            )
+        if uncertainty == "ema" and knobs.get("ema_decay", 0.0) <= 0.0:
+            knobs["ema_decay"] = 0.9
+        learner, weight_ema, prob_ema = fit_meta(ctx, **knobs)
+        pe = ctx.per_example_all(learner.state.theta)
+        if uncertainty == "ema":
+            probs = np.asarray(jax.nn.softmax(jnp.asarray(pe.logits), -1))
+            unc = jnp.asarray(ema_disagreement(probs, prob_ema.value))
+        elif uncertainty == "entropy":
+            unc = jnp.asarray(pe.uncertainty)
+        else:
+            unc = None
+        feats = weight_features(jnp.asarray(pe.loss), unc)
+        w = np.asarray(apply_weight_net(learner.state.lam["reweight"], feats))
+        if weight_ema is not None:
+            w = weight_ema.update(w)
+        return w.astype(np.float32)
+
+    return meta
