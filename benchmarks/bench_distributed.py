@@ -1,10 +1,12 @@
 """Paper Table 2 (multi-GPU rows) + Fig. 2: the single-sync distributed
 schedule vs naive DDP, audited structurally on 8 forced host devices.
 
-Reports all-reduce counts and trip-corrected collective bytes for the manual
-(shard_map) SAMA step vs the pjit step. On real hardware fewer/fatter
-collectives + overlap is the paper's 2-4x multi-GPU throughput win; on CPU
-we verify the structure that produces it.
+Reports the measured (compiled-HLO, trip-count-scaled) collective census
+of the manual (shard_map) SAMA step vs the pjit step via
+``repro.perf.collectives``, including the single-sync verdict
+(all-reduces == unroll_steps + 1). On real hardware fewer/fatter
+collectives + overlap is the paper's 2-4x multi-GPU throughput win; on
+CPU we verify the structure that produces it.
 """
 
 from __future__ import annotations
@@ -14,7 +16,9 @@ import os
 import subprocess
 import sys
 
-from benchmarks.common import emit
+from repro import perf
+
+from benchmarks.common import emit, emit_record
 
 SCRIPT = r"""
 import os
@@ -24,45 +28,40 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro import optim
+from repro import optim, perf
 from repro.core import EngineConfig, init_state, problems
 from repro.launch import distributed as dist
 from repro.launch.mesh import AxisType, make_mesh
-from repro.roofline import hlo_parse
 from benchmarks.common import mini_bert
 
+UNROLL = 2
 mesh = make_mesh((8, 1), ("data", "model"), axis_types=(AxisType.Auto,) * 2)
 model = mini_bert(num_labels=4, d_model=128)
 spec = problems.make_data_optimization_spec(model.classifier_per_example, reweight=True)
 lam = problems.init_data_optimization_lam(jax.random.PRNGKey(1), reweight=True)
 theta = model.init(jax.random.PRNGKey(0))
 base_opt, meta_opt = optim.adam(1e-3), optim.adam(1e-3)
-cfg = EngineConfig(method="sama", unroll_steps=2)
+cfg = EngineConfig(method="sama", unroll_steps=UNROLL)
 state = init_state(theta, lam, base_opt, meta_opt)
 
-K, B, S, MB = 2, 64, 32, 32
+K, B, S, MB = UNROLL, 64, 32, 32
 bb = {"tokens": jnp.zeros((K, B, S), jnp.int32), "y": jnp.zeros((K, B), jnp.int32)}
 mb = {"tokens": jnp.zeros((MB, S), jnp.int32), "y": jnp.zeros((MB,), jnp.int32)}
 
 def sds(x, spec):
     return jax.ShapeDtypeStruct(x.shape, x.dtype, sharding=NamedSharding(mesh, spec))
 
-out = {}
 with mesh:
     manual = jax.jit(dist.make_manual_step(spec, base_opt, meta_opt, cfg, mesh))
-    hlo_m = manual.lower(state, bb, mb).compile().as_text()
+    compiled_m = manual.lower(state, bb, mb).compile()
+    m = perf.verify_single_sync(compiled_m, UNROLL)
     pj = jax.jit(dist.make_pjit_step(spec, base_opt, meta_opt, cfg))
     state_sds = jax.tree_util.tree_map(lambda x: sds(x, P()), state)
     bb_sds = {"tokens": sds(bb["tokens"], P(None, "data", None)), "y": sds(bb["y"], P(None, "data"))}
     mb_sds = {"tokens": sds(mb["tokens"], P("data", None)), "y": sds(mb["y"], P("data"))}
-    hlo_p = pj.lower(state_sds, bb_sds, mb_sds).compile().as_text()
+    p = perf.census(pj.lower(state_sds, bb_sds, mb_sds).compile())
 
-m = hlo_parse.collective_stats(hlo_m)
-p = hlo_parse.collective_stats(hlo_p)
-print(json.dumps({
-    "manual_ar_count": m["all-reduce_count"], "manual_bytes": m["total_bytes"],
-    "pjit_ar_count": p["all-reduce_count"], "pjit_bytes": p["total_bytes"],
-}))
+print(json.dumps({"unroll": UNROLL, "manual": m, "pjit": p}))
 """
 
 
@@ -74,14 +73,27 @@ def main(fast: bool = True):
     out = subprocess.run([sys.executable, "-c", SCRIPT], capture_output=True, text=True,
                          env=env, cwd=root, timeout=900)
     if out.returncode != 0:
-        emit("fig2_single_sync", 0.0, f"ERROR:{out.stderr[-200:]}")
-        return
+        # raise so --strict CI fails loudly: a silently-skipped census would
+        # let the gate pass (MISSING records) while the single-sync claim
+        # stops being measured
+        raise RuntimeError(f"distributed census subprocess failed:\n{out.stderr[-2000:]}")
     r = json.loads(out.stdout.strip().splitlines()[-1])
-    ratio = r["pjit_bytes"] / max(r["manual_bytes"], 1)
+    m, p = r["manual"], r["pjit"]
+    emit_record(perf.PerfRecord(
+        name="fig2_manual_step", collectives=m,
+        extra={"schedule": "single_sync", "unroll_steps": r["unroll"],
+               "devices": 8},
+    ))
+    emit_record(perf.PerfRecord(
+        name="fig2_pjit_step", collectives=p,
+        extra={"schedule": "pjit", "unroll_steps": r["unroll"], "devices": 8},
+    ))
+    ratio = p["total_bytes"] / max(m["total_bytes"], 1)
     emit("fig2_manual_allreduces", 0.0,
-         f"count={r['manual_ar_count']};bytes={r['manual_bytes']}")
+         f"count={m['all-reduce_count']};bytes={m['total_bytes']};"
+         f"single_sync_ok={m['single_sync_ok']}")
     emit("fig2_pjit_allreduces", 0.0,
-         f"count={r['pjit_ar_count']};bytes={r['pjit_bytes']}")
+         f"count={p['all-reduce_count']};bytes={p['total_bytes']}")
     emit("fig2_collective_bytes_ratio", 0.0, f"pjit_over_manual={ratio:.2f}")
 
 

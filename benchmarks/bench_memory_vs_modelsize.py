@@ -1,6 +1,7 @@
 """Paper Figure 1 (right): GPU memory vs model size for SAMA vs second-order
 baselines. We sweep mini-RoBERTa width and report compiled peak memory of one
-meta step per algorithm — the paper's claim is SAMA's flattest growth.
+meta step per algorithm (repro.perf.memory per-device breakdown) — the
+paper's claim is SAMA's flattest growth.
 """
 
 from __future__ import annotations
@@ -8,9 +9,9 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro import data, optim
+from repro import data, optim, perf
 from repro.core import EngineConfig, init_state, make_meta_step, problems
-from benchmarks.common import emit, mini_bert, wrench_task
+from benchmarks.common import emit, emit_record, mini_bert, wrench_task
 
 METHODS = ["sama", "neumann", "cg", "iterdiff"]
 
@@ -40,11 +41,15 @@ def main(fast: bool = True):
                                   EngineConfig(method=method, unroll_steps=unroll))
             state = init_state(theta, lam, base_opt, meta_opt)
             compiled = jax.jit(step).lower(state, base_b, meta_b).compile()
-            ma = compiled.memory_analysis()
-            peak_mb = (ma.argument_size_in_bytes + ma.output_size_in_bytes
-                       + ma.temp_size_in_bytes) / 2**20
-            emit(f"fig1_mem_{method}_d{width}", 0.0,
-                 f"params={n_params};peak_mb={peak_mb:.1f}")
+            mem = perf.memory_report(compiled, example_args=(state, base_b, meta_b))
+            name = f"fig1_mem_{method}_d{width}"
+            emit_record(perf.PerfRecord(
+                name=name, memory=mem,
+                extra={"method": method, "d_model": width, "params": n_params},
+            ))
+            peak = mem["per_device"].get("peak_bytes")
+            peak_mb = peak / 2**20 if peak is not None else float("nan")
+            emit(name, 0.0, f"params={n_params};peak_mb={peak_mb:.1f}")
 
 
 if __name__ == "__main__":

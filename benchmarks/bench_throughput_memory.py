@@ -3,19 +3,21 @@ meta-gradient algorithms at fixed global batch.
 
 Throughput = meta-steps/s x samples-per-step measured on CPU (relative
 ordering is the claim); memory = compiled peak (argument+temp+output) from
-memory_analysis of each method's jitted step — the structural analogue of
-the paper's GPU MB numbers.
+the per-device memory breakdown of each method's jitted step — the
+structural analogue of the paper's GPU MB numbers. Every number flows
+through ``repro.perf`` (warmup/repeat/block timing, compile split,
+memory_analysis breakdown, collective census) and lands in the bench's
+PerfRecords as well as the CSV rows.
 """
 
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro import data, optim
+from repro import data, optim, perf
 from repro.core import EngineConfig, init_state, make_meta_step, problems
-from benchmarks.common import emit, mini_bert, time_fn, wrench_task
+from benchmarks.common import emit, emit_record, mini_bert, wrench_task
 
 METHODS = ["sama", "sama_na", "t1t2", "neumann", "cg", "iterdiff"]
 
@@ -41,18 +43,16 @@ def main(fast: bool = True):
         step = make_meta_step(spec, base_opt, meta_opt,
                               EngineConfig(method=method, unroll_steps=unroll))
         state = init_state(theta, lam, base_opt, meta_opt)
-        jstep = jax.jit(step)
-        us = time_fn(lambda: jstep(state, base_b, meta_b), iters=3)
-        throughput = batch * unroll / (us / 1e6)
-
-        compiled = jax.jit(step).lower(state, base_b, meta_b).compile()
-        try:
-            ma = compiled.memory_analysis()
-            peak_mb = (ma.argument_size_in_bytes + ma.output_size_in_bytes
-                       + ma.temp_size_in_bytes) / 2**20
-        except Exception:
-            peak_mb = float("nan")
-        emit(f"table2_{method}", us, f"samples_per_s={throughput:.1f};peak_mb={peak_mb:.1f}")
+        rec = perf.profile_step(
+            f"table2_{method}", jax.jit(step), state, base_b, meta_b,
+            samples_per_step=batch * unroll, warmup=1, repeats=3,
+            extra={"method": method, "batch": batch, "unroll": unroll},
+        )
+        emit_record(rec)
+        peak = (rec.memory or {}).get("per_device", {}).get("peak_bytes")
+        peak_mb = peak / 2**20 if peak is not None else float("nan")
+        emit(f"table2_{method}", rec.timing.median_us,
+             f"samples_per_s={rec.samples_per_s:.1f};peak_mb={peak_mb:.1f}")
 
 
 if __name__ == "__main__":

@@ -13,17 +13,17 @@ Training loops live in ``repro.dataopt`` (``train_plain``, ``meta_train``,
 from __future__ import annotations
 
 import re
-import time
 from typing import Any, Dict, List
 
-import jax
-import numpy as np
-
-from repro import configs, data
+from repro import configs, data, perf
 from repro.models import Model
 
 #: rows emitted by the currently-running benchmark: (name, us_per_call, derived)
 ROWS: List[Dict[str, Any]] = []
+
+#: perf.PerfRecord objects emitted by the currently-running benchmark —
+#: ``python -m benchmarks.run`` bundles them into BENCH_<name>.json
+RECORDS: List[perf.PerfRecord] = []
 
 
 def _parse_derived(derived: str) -> Any:
@@ -48,17 +48,19 @@ def emit(name: str, us_per_call: float, derived: str):
                  "derived": _parse_derived(derived)})
 
 
-def time_fn(fn, *args, iters: int = 3, warmup: int = 1) -> float:
-    """Median wall-time per call in microseconds (blocks on jax outputs)."""
+def emit_record(record: perf.PerfRecord):
+    """Record a measured PerfRecord for the bench runner's BENCH_*.json."""
+    errors = perf.validate_record(record.as_dict())
+    if errors:
+        raise ValueError(f"invalid PerfRecord {record.name!r}: " + "; ".join(errors))
+    RECORDS.append(record)
 
-    for _ in range(warmup):
-        jax.block_until_ready(fn(*args))
-    ts = []
-    for _ in range(iters):
-        t0 = time.perf_counter()
-        jax.block_until_ready(fn(*args))
-        ts.append(time.perf_counter() - t0)
-    return float(np.median(ts) * 1e6)
+
+def time_fn(fn, *args, iters: int = 3, warmup: int = 1) -> float:
+    """Median wall-time per call in microseconds (blocks on jax outputs).
+    Thin wrapper over the repro.perf warmup/repeat/block protocol."""
+
+    return perf.time_callable(fn, *args, warmup=warmup, repeats=iters).median_us
 
 
 # ---------------------------------------------------------------------------

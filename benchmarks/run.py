@@ -1,21 +1,27 @@
 """Benchmark runner: one module per paper table/figure.
 
-    PYTHONPATH=src python -m benchmarks.run [--full] [--only NAME] [--json-dir DIR]
+    PYTHONPATH=src python -m benchmarks.run [--full] [--only NAME] \
+        [--json-dir DIR] [--strict]
 
-Prints ``name,us_per_call,derived`` CSV rows and writes machine-readable
-``BENCH_<name>.json`` per bench (name / us_per_call / parsed derived
-fields), plus ``BENCH_dataopt.json`` aggregating the data-optimization
-benches (wrench, data_pruning) — the rows the perf trajectory tracks.
+Prints ``name,us_per_call,derived`` CSV rows and writes schema-validated
+``BENCH_<name>.json`` per bench (repro.perf.record: rows + measured
+PerfRecords + env provenance), plus ``BENCH_dataopt.json`` aggregating
+the data-optimization benches (wrench, data_pruning). ``--json-dir``
+defaults to the repo root — where the perf trajectory tracker reads —
+and all writes are atomic (tmp file + rename). ``--strict`` (the CI
+mode) exits non-zero on the first bench failure instead of printing the
+traceback and continuing.
 """
 
 from __future__ import annotations
 
 import argparse
 import importlib
-import json
 import os
 import time
 import traceback
+
+from repro import perf
 
 from benchmarks import common
 
@@ -33,46 +39,64 @@ BENCHES = [
 #: benches whose rows are produced by the repro.dataopt subsystem
 DATAOPT_BENCHES = ("bench_wrench", "bench_data_pruning")
 
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
-def _write_json(path: str, payload) -> None:
-    with open(path, "w") as f:
-        json.dump(payload, f, indent=1)
+
+def _write_bench(path: str, payload) -> None:
+    perf.write_bench(path, payload)
     print(f"# wrote {path}")
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true", help="full-size (slow) runs")
-    ap.add_argument("--only", default=None)
-    ap.add_argument("--json-dir", default=".", help="where BENCH_*.json land")
+    ap.add_argument("--only", default=None,
+                    help="substring filter; comma-separated alternatives OK "
+                         "(e.g. --only wrench,data_pruning)")
+    ap.add_argument("--json-dir", default=REPO_ROOT,
+                    help="where BENCH_*.json land (default: repo root, where "
+                         "the perf trajectory reads)")
+    ap.add_argument("--strict", action="store_true",
+                    help="exit non-zero on the first bench failure (CI mode)")
     args = ap.parse_args()
 
     os.makedirs(args.json_dir, exist_ok=True)
     print("name,us_per_call,derived")
     failures = []
     dataopt_rows = []
+    dataopt_records = []
     for name in BENCHES:
-        if args.only and args.only not in name:
+        only = [t for t in (args.only or "").split(",") if t]
+        if only and not any(tok in name for tok in only):
             continue
         t0 = time.time()
         common.ROWS.clear()
+        common.RECORDS.clear()
         try:
             mod = importlib.import_module(f"benchmarks.{name}")
             mod.main(fast=not args.full)
             elapsed = time.time() - t0
             print(f"# {name} done in {elapsed:.1f}s")
-            payload = {"bench": name, "fast": not args.full,
-                       "elapsed_s": round(elapsed, 1), "rows": list(common.ROWS)}
-            _write_json(os.path.join(args.json_dir, f"BENCH_{name.removeprefix('bench_')}.json"),
-                        payload)
+            payload = perf.bench_payload(
+                name, fast=not args.full, elapsed_s=elapsed,
+                rows=list(common.ROWS), records=list(common.RECORDS),
+            )
+            _write_bench(os.path.join(args.json_dir,
+                                      f"BENCH_{name.removeprefix('bench_')}.json"),
+                         payload)
             if name in DATAOPT_BENCHES:
                 dataopt_rows.extend(common.ROWS)
+                dataopt_records.extend(common.RECORDS)
         except Exception:
             failures.append(name)
+            if args.strict:
+                traceback.print_exc()
+                raise SystemExit(f"benchmark {name} failed (--strict)")
             print(f"# {name} FAILED:\n# " + traceback.format_exc().replace("\n", "\n# "))
     if dataopt_rows:
-        _write_json(os.path.join(args.json_dir, "BENCH_dataopt.json"),
-                    {"bench": "dataopt", "fast": not args.full, "rows": dataopt_rows})
+        _write_bench(os.path.join(args.json_dir, "BENCH_dataopt.json"),
+                     perf.bench_payload("dataopt", fast=not args.full, elapsed_s=0.0,
+                                        rows=dataopt_rows, records=dataopt_records))
     if failures:
         raise SystemExit(f"benchmarks failed: {failures}")
 

@@ -57,6 +57,14 @@ state = learner.state
 for h in history:
     print({k: round(v, 4) for k, v in h.items()})
 
+# --- measured telemetry of the step we just trained with -------------------
+rec = learner.profile(*next(batches()), warmup=1, repeats=3)
+peak = (rec.memory or {}).get("per_device", {}).get("peak_bytes")
+peak_mib = f"{peak / 2**20:.1f}" if peak is not None else "n/a"
+compile_s = f"{rec.compile_s:.2f}" if rec.compile_s is not None else "n/a"
+print(f"measured: {rec.timing.median_us:.0f} us/step (compile {compile_s}s), "
+      f"peak {peak_mib} MiB/device")
+
 # --- inspect what the meta learner decided ---------------------------------
 logits = apply_fn(state.theta, X)
 loss_i = -jnp.take_along_axis(jax.nn.log_softmax(logits, -1), y_noisy[:, None], 1)[:, 0]

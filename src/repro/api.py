@@ -170,6 +170,37 @@ class MetaLearner:
                               log_every, on_step=on_step)
         return history
 
+    # -- telemetry ---------------------------------------------------------
+
+    def profile(self, base_batches, meta_batch, *, warmup: int = 2,
+                repeats: int = 5, name: Optional[str] = None):
+        """Measure this learner's step on example batches through
+        ``repro.perf``: warmup/repeat/block run timing with the compile
+        split, per-device memory breakdown, and the trip-scaled collective
+        census of the compiled step. Returns a ``perf.PerfRecord``.
+
+        Always profiles the JIT-COMPILED step (memory/collective accounting
+        needs the compiled executable) — for a ``jit=False`` learner these
+        are the numbers ``fit`` would see after ``jax.jit``, not its eager
+        per-call overhead. State advances are discarded: the probe operates
+        on a snapshot of ``self.state``."""
+
+        from repro import perf
+
+        if self.state is None:
+            raise RuntimeError("call init(theta, lam) or load(...) before profile()")
+        fn = self.step_fn if hasattr(self.step_fn, "lower") else jax.jit(self.step_fn)
+        args = (self.state, base_batches, meta_batch)
+        rec_name = name or f"{self.method.name}_{self.schedule}"
+        extra = {"method": self.method.name, "schedule": self.schedule,
+                 "unroll_steps": self.cfg.unroll_steps}
+        if self.mesh is not None:
+            with self.mesh:
+                return perf.profile_step(rec_name, fn, *args, warmup=warmup,
+                                         repeats=repeats, extra=extra)
+        return perf.profile_step(rec_name, fn, *args, warmup=warmup,
+                                 repeats=repeats, extra=extra)
+
     # -- checkpointing -----------------------------------------------------
 
     def save(self, path: Optional[str] = None, *, meta: Optional[Dict[str, Any]] = None) -> str:

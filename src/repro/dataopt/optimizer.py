@@ -130,7 +130,7 @@ class DataOptimizer:
                     per_example_fn=self.ctx.per_example_fn, init_fn=self.ctx.init_fn,
                     num_classes=self.ctx.num_classes, fields=self.ctx.fields,
                     mesh=self.ctx.mesh, batch_size=self.ctx.batch_size,
-                    seed=self.ctx.seed + r,
+                    seed=self.ctx.seed + r, theta=self.ctx.theta,
                 )
                 scores = sub_opt.fit_scores()
             # the fraction of CURRENT survivors to drop so the kept count

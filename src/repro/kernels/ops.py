@@ -9,6 +9,7 @@ ground truth either way.
 
 from __future__ import annotations
 
+import math
 import os
 
 import jax
@@ -26,7 +27,7 @@ def cross_entropy(logits: jnp.ndarray, targets: jnp.ndarray) -> jnp.ndarray:
     blockwise-vocab Pallas kernel (differentiable)."""
 
     shape = targets.shape
-    r = int(jnp.prod(jnp.asarray(shape))) if shape else 1
+    r = math.prod(shape)  # static shapes never round-trip through a device array
     logits2 = logits.reshape(r, logits.shape[-1])
     targets1 = targets.reshape(r)
     ce = _wce.cross_entropy(logits2, targets1, INTERPRET)

@@ -3,30 +3,35 @@ with the per-family KV cache / recurrent state.
 
     PYTHONPATH=src python -m repro.launch.serve --arch rwkv6-1.6b --smoke \
         --batch 4 --prompt-len 16 --gen 16
+
+Timing flows through ``repro.perf``: the generate loop is measured with
+the warmup/repeat/block protocol (the old ad-hoc ``time.time()`` around
+an async dispatch under-reported), and the jitted decode step gets the
+compile split + per-device memory breakdown. The emitted JSON embeds the
+full PerfRecord next to the human-readable tokens/s.
 """
 
 from __future__ import annotations
 
 import argparse
 import json
-import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro import configs
+from repro import configs, perf
 from repro.models import Model
 
 
-def greedy_generate(model: Model, params, prompt: jnp.ndarray, gen: int, cache_len: int):
+def greedy_generate(model: Model, params, prompt: jnp.ndarray, gen: int, cache_len: int,
+                    step=None):
     """prompt: (B, P) int32. Prefill = teacher-forced decode over the prompt
     (exercises the same serve_step the dry-run lowers), then greedy decode."""
 
-    cfg = model.cfg
     B, P = prompt.shape
     cache = model.init_cache(B, cache_len, dtype=jnp.float32)
-    step = jax.jit(model.decode_step)
+    step = step if step is not None else jax.jit(model.decode_step)
 
     logits = None
     for t in range(P):
@@ -45,6 +50,8 @@ def main():
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--repeats", type=int, default=3,
+                    help="timed generate-loop repeats (median reported)")
     args = ap.parse_args()
 
     cfg = configs.get_smoke_config(args.arch) if args.smoke else configs.get_config(args.arch)
@@ -57,15 +64,39 @@ def main():
     prompt = jnp.asarray(rng.integers(0, cfg.vocab_size, size=(args.batch, args.prompt_len)), jnp.int32)
 
     cache_len = args.prompt_len + args.gen
-    t0 = time.time()
-    out = greedy_generate(model, params, prompt, args.gen, cache_len)
-    dt = time.time() - t0
+    step = jax.jit(model.decode_step)
+
+    # compile split + memory breakdown of the decode step itself
+    cache0 = model.init_cache(args.batch, cache_len, dtype=jnp.float32)
+    step_args = (params, cache0, prompt[:, :1], jnp.asarray(0, jnp.int32))
+    lower_s, compile_s, compiled = perf.compile_split(step, *step_args)
+    mem = perf.memory_report(compiled, example_args=step_args)
+
+    # the generate loop: warmup run (absorbs tracing), then timed repeats
+    out = greedy_generate(model, params, prompt, args.gen, cache_len, step=step)
+    timing = perf.time_callable(
+        greedy_generate, model, params, prompt, args.gen, cache_len,
+        step=step, warmup=0, repeats=args.repeats,
+    )
+    tokens_per_s = args.batch * args.gen / (timing.median_us / 1e6)
+
+    record = perf.PerfRecord(
+        name=f"serve_{cfg.name}",
+        us_per_step=timing.as_dict(),
+        samples_per_s=tokens_per_s,
+        compile_s=compile_s,
+        lower_s=lower_s,
+        memory=mem,
+        extra={"batch": args.batch, "prompt_len": args.prompt_len, "gen": args.gen,
+               "us_per_generate_loop": timing.median_us},
+    )
     print(json.dumps({
         "arch": cfg.name,
         "batch": args.batch,
         "generated_shape": list(out.shape),
-        "tokens_per_s": round(args.batch * args.gen / dt, 1),
+        "tokens_per_s": round(tokens_per_s, 1),
         "sample": out[0].tolist(),
+        "perf": record.as_dict(),
     }))
 
 

@@ -44,8 +44,8 @@ def token_cross_entropy(
     return -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
 
 
-@dataclasses.dataclass
-class Model:
+@dataclasses.dataclass(eq=False)  # identity hash/eq: Model instances key
+class Model:                      # per-model jit caches (dataopt.prune)
     cfg: Any
     use_ce_kernel: bool = False
 

@@ -1,0 +1,128 @@
+"""Measured wall-time protocol: warmup / repeat / block, compile-vs-run split.
+
+Every timing number this repo reports flows through ``measure`` (or the
+lighter ``time_callable``): warmup calls absorb tracing + first-touch
+effects, every timed call ends in ``jax.block_until_ready`` so async
+dispatch cannot hide work, and the reported statistic is the median with
+an IQR spread — the robust pair for noisy shared machines (CI runners,
+CPU containers). The compile phase is timed separately via
+``lower().compile()`` so "it got slower" can always be attributed to
+compile vs run.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, Optional, Sequence
+
+import jax
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class TimingStats:
+    """Robust run-phase statistics over ``repeats`` blocked calls (us)."""
+
+    median_us: float
+    iqr_us: float
+    min_us: float
+    max_us: float
+    mean_us: float
+    repeats: int
+    warmup: int
+
+    def as_dict(self) -> Dict[str, Any]:
+        return dataclasses.asdict(self)
+
+    @staticmethod
+    def from_samples(samples_s: Sequence[float], warmup: int) -> "TimingStats":
+        us = np.asarray(samples_s, dtype=np.float64) * 1e6
+        q1, q3 = np.percentile(us, [25, 75])
+        return TimingStats(
+            median_us=float(np.median(us)),
+            iqr_us=float(q3 - q1),
+            min_us=float(us.min()),
+            max_us=float(us.max()),
+            mean_us=float(us.mean()),
+            repeats=int(us.size),
+            warmup=int(warmup),
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class StepMeasurement:
+    """One measured step function: run stats + the compile split + the
+    compiled executable (reusable for memory / collective accounting)."""
+
+    timing: TimingStats
+    lower_s: Optional[float]
+    compile_s: Optional[float]
+    compiled: Optional[Any]  # jax.stages.Compiled when the split ran
+
+    @property
+    def us_per_step(self) -> float:
+        return self.timing.median_us
+
+    def samples_per_s(self, samples_per_step: float) -> float:
+        return samples_per_step / (self.timing.median_us / 1e6)
+
+
+def time_callable(fn: Callable, *args, warmup: int = 1, repeats: int = 5,
+                  **kwargs) -> TimingStats:
+    """Time ``fn(*args, **kwargs)`` with the warmup/repeat/block protocol.
+
+    Works for any callable whose outputs are jax arrays (or pytrees of
+    them) — no lowering required, so loops and host-side drivers can be
+    timed with the same protocol as single jitted steps.
+    """
+
+    if repeats < 1:
+        raise ValueError("repeats must be >= 1")
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args, **kwargs))
+    samples = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args, **kwargs))
+        samples.append(time.perf_counter() - t0)
+    return TimingStats.from_samples(samples, warmup)
+
+
+def compile_split(fn: Callable, *args, **kwargs):
+    """Lower + compile ``fn`` on example args, timing each phase.
+
+    Returns ``(lower_s, compile_s, compiled)``. ``fn`` may be already
+    jitted (jax.jit caches are shared, so a later ``fn(*args)`` call
+    reuses this executable) or a plain traceable callable.
+    """
+
+    jitted = fn if hasattr(fn, "lower") else jax.jit(fn)
+    t0 = time.perf_counter()
+    lowered = jitted.lower(*args, **kwargs)
+    t1 = time.perf_counter()
+    compiled = lowered.compile()
+    t2 = time.perf_counter()
+    return t1 - t0, t2 - t1, compiled
+
+
+def measure(fn: Callable, *args, warmup: int = 2, repeats: int = 5,
+            split_compile: bool = True, **kwargs) -> StepMeasurement:
+    """The full protocol: (optionally) timed lower/compile, then
+    warmup/repeat/block run timing. A plain traceable callable is timed
+    through the jit wrapper whose compile was measured — never op-by-op
+    eager; non-loweable callables (host loops, python drivers) still get
+    run-phase stats, compile attribution is simply unavailable."""
+
+    timed_fn = fn
+    lower_s = comp_s = compiled = None
+    if split_compile:
+        jitted = fn if hasattr(fn, "lower") else jax.jit(fn)
+        try:
+            lower_s, comp_s, compiled = compile_split(jitted, *args, **kwargs)
+            timed_fn = jitted
+        except Exception:
+            lower_s = comp_s = compiled = None
+    timing = time_callable(timed_fn, *args, warmup=warmup, repeats=repeats, **kwargs)
+    return StepMeasurement(timing=timing, lower_s=lower_s, compile_s=comp_s,
+                           compiled=compiled)

@@ -192,6 +192,28 @@ def test_prune_and_iterative_prune(dataset):
     assert len(apply_mask(dataset, mask2)["x"]) == mask2.sum()
 
 
+def test_iterative_prune_forwards_theta_every_round(dataset, theta):
+    """rounds > 1 re-scores via per-round sub-optimizers; a user-supplied
+    pre-trained theta must reach EVERY round, not just the first."""
+
+    seen = []
+
+    @register_scorer("test_theta_probe")
+    def _make():
+        def score(ctx):
+            seen.append(ctx.theta)
+            return np.linspace(0.0, 1.0, ctx.n, dtype=np.float32)
+        return score
+
+    try:
+        opt = _optimizer(dataset, "test_theta_probe", theta=theta)
+        opt.prune(0.5, rounds=2)
+    finally:
+        unregister_scorer("test_theta_probe")
+    assert len(seen) == 2
+    assert all(t is theta for t in seen), "a round dropped the supplied theta"
+
+
 def test_retrain_improves_over_init(dataset):
     theta0 = _init_fn(jax.random.PRNGKey(0))
     theta = fit_plain(PER_EX, theta0, dataset, steps=60, fields=("x", "y"))
