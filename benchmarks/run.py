@@ -34,6 +34,7 @@ BENCHES = [
     "bench_data_pruning",  # Fig 3
     "bench_ablation",  # Tables 8/9
     "bench_distributed",  # Fig 2 / Table 2 multi-GPU structure
+    "bench_kernels",  # fused dispatch kernels vs naive jnp chains
 ]
 
 #: benches whose rows are produced by the repro.dataopt subsystem

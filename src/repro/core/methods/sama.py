@@ -32,13 +32,14 @@ class SAMAMethod(HypergradMethod):
     reduce_contract = ReduceContract(terms=("hypergrad", "v", "eps", "meta_loss"), linear=True)
 
     def local_terms(self, spec, ctx: MethodContext) -> LocalTerms:
-        meta_loss, v = sama_mod.perturbation_direction(
+        meta_loss, v, v_sumsq = sama_mod.perturbation_direction(
             spec, ctx.theta, ctx.lam, ctx.meta_batch,
             base_opt=ctx.base_opt, base_opt_state=ctx.base_opt_state,
             g_base=ctx.g_base, cfg=self.cfg,
         )
         hyper, eps = sama_mod.central_difference_hypergrad(
-            spec, ctx.theta, ctx.lam, ctx.last_batch, v, cfg=self.cfg
+            spec, ctx.theta, ctx.lam, ctx.last_batch, v, cfg=self.cfg,
+            v_sumsq=v_sumsq,
         )
         return {"hypergrad": hyper, "meta_loss": meta_loss, "v": v, "eps": eps}
 

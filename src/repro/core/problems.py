@@ -21,6 +21,8 @@ import jax.numpy as jnp
 
 from repro.core.bilevel import BilevelSpec
 from repro.core import meta_modules as mm
+from repro.kernels import dispatch as kdispatch
+from repro.kernels import ops as kops
 
 PyTree = Any
 
@@ -123,14 +125,27 @@ def softmax_per_example(apply_fn: Callable[[PyTree, jnp.ndarray], jnp.ndarray]) 
     Uncertainty is in-batch predictive entropy; the paper's cross-meta-step
     EMA-disagreement variant is first-class in ``repro.dataopt.scores``
     (``EMATracker`` / ``ema_disagreement``, or ``scorer="meta"`` with
-    ``uncertainty="ema"`` on the ``DataOptimizer`` facade)."""
+    ``uncertainty="ema"`` on the ``DataOptimizer`` facade).
+
+    At ``kernels.CE_VOCAB_THRESHOLD`` classes and above the per-sample CE —
+    the quantity the reweighting base loss scales per sample — routes
+    through the dispatched blockwise ``weighted_ce`` kernel (its custom VJP
+    streams the vocabulary once per pass on Pallas backends; docs/
+    kernels.md), and comes back f32 regardless of logits dtype (the
+    kernels compute in f32). Known trade-off: the entropy feature still
+    materializes the full log-prob tensor, so the kernel route buys the
+    fused weighted backward here, not the forward memory win — a fused
+    entropy emission is the natural follow-up kernel."""
 
     def fn(theta, batch):
         logits = apply_fn(theta, batch["x"])
         num_classes = logits.shape[-1]
         onehot = jax.nn.one_hot(batch["y"], num_classes, dtype=logits.dtype)
         logp = jax.nn.log_softmax(logits, axis=-1)
-        loss = -jnp.sum(onehot * logp, axis=-1)
+        if num_classes >= kdispatch.CE_VOCAB_THRESHOLD:
+            loss = kops.cross_entropy(logits, batch["y"])
+        else:
+            loss = -jnp.sum(onehot * logp, axis=-1)
         p = jnp.exp(logp)
         entropy = -jnp.sum(p * logp, axis=-1)
         return PerExample(loss=loss, logits=logits, label_onehot=onehot, uncertainty=entropy)

@@ -16,10 +16,14 @@ Only *first-order* backward passes appear:
 
 The adaptation diagonal du/dg is analytic (repro.optim.Optimizer.adaptation)
 and reuses the base gradient stored from the most recent unroll step — no
-extra backward pass (paper footnote 2). The single gradient synchronization
-point of the distributed schedule lives in ``launch.distributed``, not here:
-this module is purely local math so that it composes with pjit and shard_map
-alike.
+extra backward pass (paper footnote 2). When the base optimizer exposes a
+fused ``adapt_product`` (adam/adamw/lion/adafactor do — the kernel-dispatch
+fast path, DESIGN.md §10), the adaptation product AND the sum of squares
+that ``eps = alpha/||v||`` needs come out of one pass over the data: the
+separate ``global_norm(v)`` sweep is dropped. The single gradient
+synchronization point of the distributed schedule lives in
+``launch.distributed``, not here: this module is purely local math so that
+it composes with pjit and shard_map alike.
 """
 
 from __future__ import annotations
@@ -77,19 +81,29 @@ def perturbation_direction(
     g_base: Optional[PyTree],
     cfg: SAMAConfig,
 ):
-    """Backward pass 1 + the (analytic, backprop-free) adaptation product."""
+    """Backward pass 1 + the (analytic, backprop-free) adaptation product.
+
+    Returns ``(meta_loss, v, v_sumsq)``. ``v_sumsq`` is ``sum(v^2)`` when it
+    came for free from the fused kernel path (``Optimizer.adapt_product``,
+    DESIGN.md §10) and ``None`` otherwise — callers fall back to
+    ``global_norm(v)``. The fused path is skipped under ``adapt_clip``
+    (clipping applies to the raw diagonal, which the fused kernels never
+    materialize) and for optimizers without a registered kernel."""
 
     meta_loss, g_meta = jax.value_and_grad(spec.meta_scalar, argnums=0)(theta, lam, meta_batch)
     if cfg.adapt:
         if g_base is None:
             raise ValueError("algorithmic adaptation needs the last base gradient g_base")
+        if base_opt.adapt_product is not None and not cfg.adapt_clip:
+            v, v_sumsq = base_opt.adapt_product(g_base, base_opt_state, theta, g_meta)
+            return meta_loss, v, v_sumsq
         a = base_opt.adaptation(g_base, base_opt_state, theta)
         if cfg.adapt_clip:
             a = _tmap(lambda ai: jnp.clip(ai, -cfg.adapt_clip, cfg.adapt_clip), a)
         v = _tmap(lambda ai, gi: ai * gi, a, g_meta)
     else:
         v = g_meta
-    return meta_loss, v
+    return meta_loss, v, None
 
 
 def central_difference_hypergrad(
@@ -100,14 +114,19 @@ def central_difference_hypergrad(
     v: PyTree,
     *,
     cfg: SAMAConfig,
+    v_sumsq: Optional[jnp.ndarray] = None,
 ):
     """Backward passes 2+3: the finite-difference mixed second derivative
 
         d^2 L_base / dlam dtheta . v
             ~= (grad_lam L_base(theta + eps v) - grad_lam L_base(theta - eps v)) / (2 eps)
+
+    ``v_sumsq`` (sum of squares of v, from the fused adaptation kernel)
+    skips the separate ``global_norm`` pass over v when provided.
     """
 
-    eps = cfg.alpha / jnp.maximum(global_norm(v), cfg.eps_floor)
+    norm = jnp.sqrt(v_sumsq) if v_sumsq is not None else global_norm(v)
+    eps = cfg.alpha / jnp.maximum(norm, cfg.eps_floor)
     theta_p = _tmap(lambda t, vi: t + eps * vi.astype(t.dtype), theta, v)
     theta_m = _tmap(lambda t, vi: t - eps * vi.astype(t.dtype), theta, v)
     gl_p = jax.grad(spec.base_scalar, argnums=1)(theta_p, lam, base_batch)
@@ -130,11 +149,13 @@ def sama_hypergrad(
 ) -> SAMAResult:
     """The full (single-device / local-shard) SAMA meta gradient."""
 
-    meta_loss, v = perturbation_direction(
+    meta_loss, v, v_sumsq = perturbation_direction(
         spec, theta, lam, meta_batch,
         base_opt=base_opt, base_opt_state=base_opt_state, g_base=g_base, cfg=cfg,
     )
-    hyper, eps = central_difference_hypergrad(spec, theta, lam, base_batch, v, cfg=cfg)
+    hyper, eps = central_difference_hypergrad(
+        spec, theta, lam, base_batch, v, cfg=cfg, v_sumsq=v_sumsq
+    )
     return SAMAResult(hypergrad=hyper, v=v, eps=eps, meta_loss=meta_loss)
 
 

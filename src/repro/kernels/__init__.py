@@ -1,3 +1,65 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Fused Pallas kernels for the SAMA hot path, behind a backend-dispatch
+registry.
+
+The paper's throughput/memory wins come from computing the adaptive-optimizer
+adaptation product as cheap first-order elementwise work (Eq. 4 / App. C);
+this package is where that work stops being a ~12-op jnp chain and becomes
+one fused pass:
+
+* ``adam_adapt`` / ``lion_adapt`` / ``adafactor_adapt`` — the fused
+  adaptation-diagonal x meta-gradient product, emitting per-tile partial
+  sums of squares so SAMA's ``eps = alpha/||v||`` needs no second pass;
+* ``weighted_ce`` — blockwise (flash-style) cross-entropy over very large
+  vocabularies, forward and backward, each logit read exactly once.
+
+Every kernel name resolves through ``dispatch.get_kernel`` to one of three
+registered implementations — ``pallas-tpu`` (compiled), ``pallas-interpret``
+(the kernel body under the Pallas interpreter; any backend), or ``ref``
+(pure jnp, always eligible) — selected per call from an explicit
+``backend=`` argument, the ``REPRO_KERNEL_BACKEND`` environment variable,
+or the platform default (TPU prefers compiled Pallas, CPU/GPU prefer
+``ref``). Shapes a backend cannot tile fall back down that order; ragged
+tails are padded inside the flat kernels. See docs/kernels.md for the
+support matrix, tiling rules and how to add a kernel, and ``ref.py`` for
+the jnp oracles every implementation is tested against
+(tests/test_kernel_dispatch.py).
+
+Consumers in the hot path: ``optim.adam/adamw/lion/adafactor`` route their
+``adaptation`` / fused ``adapt_product`` through the registry, SAMA's
+perturbation-direction build consumes the fused product + norm, and the CE
+losses in ``core.problems`` / ``models.model`` route through
+``weighted_ce`` at ``dispatch.CE_VOCAB_THRESHOLD`` and above.
+"""
+
+from repro.kernels import ops, ref
+from repro.kernels.dispatch import (
+    BACKENDS,
+    CE_VOCAB_THRESHOLD,
+    ENV_VAR,
+    KernelImpl,
+    available_kernels,
+    backend_order,
+    clear_dispatch_log,
+    dispatch_log,
+    get_kernel,
+    kernel_backends,
+    register_kernel,
+    unregister_kernel,
+)
+
+__all__ = [
+    "BACKENDS",
+    "CE_VOCAB_THRESHOLD",
+    "ENV_VAR",
+    "KernelImpl",
+    "available_kernels",
+    "backend_order",
+    "clear_dispatch_log",
+    "dispatch_log",
+    "get_kernel",
+    "kernel_backends",
+    "ops",
+    "ref",
+    "register_kernel",
+    "unregister_kernel",
+]

@@ -1,0 +1,78 @@
+"""Pallas TPU kernel: fused SAMA Adafactor-adaptation product.
+
+Adafactor's factored second moment couples every element of a row/column, so
+its exact du/dg is not diagonal; the repo's Adafactor optimizer declares the
+frozen-statistics diagonal ``lr / (sqrt(vhat) + eps)`` (see
+``optim.adafactor``'s docstring — exact in the b2 -> 1 limit where the
+factored statistics move slowly). The factored reconstruction
+``vhat = rhat cx chat / mean(rhat)`` is a cheap rank-1 outer product computed
+by the caller; this kernel fuses the remaining elementwise chain — rsqrt,
+scale, product against ``g_meta``, and the per-tile partial sum of squares
+for eps = alpha/||v|| — into one pass over (vhat, g_meta).
+
+Same layout contract as ``adam_adapt``: 1-D grid over (BLK,)-tiles of the
+flattened tensor, the traced lr rides a scalar input block.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _adafactor_kernel(sched_ref, vhat_ref, gm_ref, out_ref, ss_ref, *, eps):
+    lr = sched_ref[0]
+    vhat = vhat_ref[...].astype(jnp.float32)
+    gm = gm_ref[...].astype(jnp.float32)
+
+    diag = lr / (jnp.sqrt(vhat) + eps)
+    out = diag * gm
+    out_ref[...] = out
+    ss_ref[0] = jnp.sum(out * out)
+
+
+def adafactor_adapt_product(
+    vhat: jnp.ndarray,
+    g_meta: jnp.ndarray,
+    *,
+    lr=1.0,
+    eps: float = 1e-8,
+    block: int = 8 * 1024,
+    interpret: bool = True,
+):
+    """Flat f32 arrays (N,). ``vhat`` must be the bias-corrected second
+    moment (non-negative). Returns (v_out (N,) f32, sumsq scalar f32)."""
+
+    (n,) = vhat.shape
+    blk = min(block, n)
+    pad = (-n) % blk
+    if pad:
+        # pad vhat with ones (not zeros): 1/(sqrt(0)+eps) would be huge and,
+        # multiplied by the zero-padded g_meta, still contributes exact zeros
+        # — but ones keep the intermediate finite for any eps.
+        vhat = jnp.concatenate([vhat, jnp.ones((pad,), vhat.dtype)])
+        g_meta = jnp.concatenate([g_meta, jnp.zeros((pad,), g_meta.dtype)])
+    n_pad = n + pad
+    grid = (n_pad // blk,)
+
+    sched = jnp.asarray(lr, jnp.float32).reshape(1)
+    kern = functools.partial(_adafactor_kernel, eps=float(eps))
+    out, partial_ss = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[pl.BlockSpec((1,), lambda i: (0,))]
+        + [pl.BlockSpec((blk,), lambda i: (i,))] * 2,
+        out_specs=[
+            pl.BlockSpec((blk,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_pad,), jnp.float32),
+            jax.ShapeDtypeStruct((grid[0],), jnp.float32),
+        ],
+        interpret=interpret,
+    )(sched, vhat, g_meta)
+    return out[:n], jnp.sum(partial_ss)

@@ -10,6 +10,12 @@ the norm needs no second pass over the data.
 
 1-D grid over tiles of the flattened parameter tensor; BLK = 8 * 128 * k to
 match f32 (sublane, lane) tiling.
+
+The step index ``t`` and learning rate ``lr`` ride a (2,) scalar input
+(every grid step maps to the same block) rather than being baked in as
+static kernel params: in the hot path both are traced values
+(``state.count`` under jit, scheduled lr), and a static bake would force a
+retrace per step.
 """
 
 from __future__ import annotations
@@ -21,7 +27,9 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
-def _adapt_kernel(g_ref, m_ref, v_ref, gm_ref, out_ref, ss_ref, *, t, b1, b2, eps, lr):
+def _adapt_kernel(sched_ref, g_ref, m_ref, v_ref, gm_ref, out_ref, ss_ref, *, b1, b2, eps):
+    t = sched_ref[0]
+    lr = sched_ref[1]
     g = g_ref[...].astype(jnp.float32)
     m = m_ref[...].astype(jnp.float32)
     v = v_ref[...].astype(jnp.float32)
@@ -49,15 +57,18 @@ def adam_adapt_product(
     v: jnp.ndarray,
     g_meta: jnp.ndarray,
     *,
-    t: int,
+    t,
     b1: float = 0.9,
     b2: float = 0.999,
     eps: float = 1e-8,
-    lr: float = 1.0,
+    lr=1.0,
     block: int = 8 * 1024,
     interpret: bool = True,
 ):
-    """Flat f32 arrays (N,). Returns (v_out (N,) f32, sumsq scalar f32)."""
+    """Flat f32 arrays (N,). Returns (v_out (N,) f32, sumsq scalar f32).
+
+    ``t`` and ``lr`` may be python numbers or traced scalars (they are fed
+    to the kernel as a (2,) input array, not static params)."""
 
     (n,) = g.shape
     blk = min(block, n)
@@ -68,13 +79,13 @@ def adam_adapt_product(
     n_pad = n + pad
     grid = (n_pad // blk,)
 
-    kern = functools.partial(
-        _adapt_kernel, t=float(t), b1=float(b1), b2=float(b2), eps=float(eps), lr=float(lr)
-    )
+    sched = jnp.stack([jnp.asarray(t, jnp.float32), jnp.asarray(lr, jnp.float32)])
+    kern = functools.partial(_adapt_kernel, b1=float(b1), b2=float(b2), eps=float(eps))
     out, partial_ss = pl.pallas_call(
         kern,
         grid=grid,
-        in_specs=[pl.BlockSpec((blk,), lambda i: (i,))] * 4,
+        in_specs=[pl.BlockSpec((2,), lambda i: (0,))]
+        + [pl.BlockSpec((blk,), lambda i: (i,))] * 4,
         out_specs=[
             pl.BlockSpec((blk,), lambda i: (i,)),
             pl.BlockSpec((1,), lambda i: (i,)),
@@ -84,5 +95,5 @@ def adam_adapt_product(
             jax.ShapeDtypeStruct((grid[0],), jnp.float32),
         ],
         interpret=interpret,
-    )(g, m, v, g_meta)
+    )(sched, g, m, v, g_meta)
     return out[:n], jnp.sum(partial_ss)

@@ -1,44 +1,79 @@
-"""Jit'd public wrappers around the Pallas kernels.
+"""Jit'd public wrappers around the dispatched kernels.
 
-On this CPU container the kernels execute in ``interpret=True`` mode (the
-kernel body runs as traced jnp ops); on a TPU runtime set
-``repro.kernels.ops.INTERPRET = False`` (or export REPRO_PALLAS_COMPILE=1) to
-compile them for real. The jnp oracles in ``ref.py`` stay the numerical
-ground truth either way.
+These helpers add the shape plumbing (flattening token axes, reshaping
+back) on top of ``kernels.dispatch``: which implementation actually runs —
+compiled Pallas on TPU, the Pallas interpreter, or the pure-jnp ``ref``
+fallback — is the registry's decision (platform default, overridable per
+call via ``backend=`` or globally via ``REPRO_KERNEL_BACKEND``). The jnp
+oracles in ``ref.py`` stay the numerical ground truth either way.
+
+``INTERPRET`` / ``REPRO_PALLAS_COMPILE`` are the pre-dispatch interface,
+kept for back-compat: they are superseded by ``REPRO_KERNEL_BACKEND``
+(``pallas-tpu`` means compiled, everything else interprets or skips Pallas
+entirely) and are no longer consulted here.
 """
 
 from __future__ import annotations
 
 import math
 import os
+import warnings
 
 import jax
 import jax.numpy as jnp
 
-from repro.kernels import adam_adapt as _adam
-from repro.kernels import weighted_ce as _wce
-from repro.kernels import ref
+from repro.kernels import dispatch, ref
 
-INTERPRET = os.environ.get("REPRO_PALLAS_COMPILE", "0") != "1"
+INTERPRET = os.environ.get("REPRO_PALLAS_COMPILE", "0") != "1"  # legacy knob
+if not INTERPRET:  # pragma: no cover - legacy-env warning only
+    warnings.warn(
+        "REPRO_PALLAS_COMPILE is no longer consulted; use "
+        "REPRO_KERNEL_BACKEND=pallas-tpu (see repro.kernels.dispatch)",
+        DeprecationWarning, stacklevel=2,
+    )
 
 
-def cross_entropy(logits: jnp.ndarray, targets: jnp.ndarray) -> jnp.ndarray:
+def cross_entropy(logits: jnp.ndarray, targets: jnp.ndarray, *, backend=None) -> jnp.ndarray:
     """Per-token CE for (..., V) logits and (...,) int targets, via the
-    blockwise-vocab Pallas kernel (differentiable)."""
+    dispatched ``weighted_ce`` kernel (differentiable on every backend)."""
 
     shape = targets.shape
     r = math.prod(shape)  # static shapes never round-trip through a device array
     logits2 = logits.reshape(r, logits.shape[-1])
     targets1 = targets.reshape(r)
-    ce = _wce.cross_entropy(logits2, targets1, INTERPRET)
+    ce = dispatch.get_kernel("weighted_ce", backend=backend)(logits2, targets1)
     return ce.reshape(shape)
 
 
-def adam_adapt_product(g, m, v, g_meta, *, t, b1=0.9, b2=0.999, eps=1e-8, lr=1.0):
+def adam_adapt_product(g, m, v, g_meta, *, t, b1=0.9, b2=0.999, eps=1e-8, lr=1.0,
+                       backend=None):
     """Fused SAMA adaptation product over a flat array."""
-    return _adam.adam_adapt_product(
-        g, m, v, g_meta, t=t, b1=b1, b2=b2, eps=eps, lr=lr, interpret=INTERPRET
+    return dispatch.get_kernel("adam_adapt", backend=backend)(
+        g, m, v, g_meta, t=t, b1=b1, b2=b2, eps=eps, lr=lr
     )
 
 
-__all__ = ["INTERPRET", "adam_adapt_product", "cross_entropy", "ref"]
+def lion_adapt_product(g, m, g_meta, *, lr=1.0, b1=0.9, delta=1e-3, backend=None):
+    """Fused SAMA Lion (surrogate-sign) adaptation product over a flat array."""
+    return dispatch.get_kernel("lion_adapt", backend=backend)(
+        g, m, g_meta, lr=lr, b1=b1, delta=delta
+    )
+
+
+def adafactor_adapt_product(vhat, g_meta, *, lr=1.0, eps=1e-8, backend=None):
+    """Fused SAMA Adafactor (frozen-statistics) adaptation product over a
+    flat array of bias-corrected second moments."""
+    return dispatch.get_kernel("adafactor_adapt", backend=backend)(
+        vhat, g_meta, lr=lr, eps=eps
+    )
+
+
+# NB: INTERPRET stays importable for back-compat but is deliberately NOT in
+# __all__ — it is a dead knob superseded by REPRO_KERNEL_BACKEND.
+__all__ = [
+    "adafactor_adapt_product",
+    "adam_adapt_product",
+    "cross_entropy",
+    "lion_adapt_product",
+    "ref",
+]

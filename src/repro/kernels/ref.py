@@ -1,5 +1,15 @@
 """Pure-jnp oracles for every Pallas kernel. Tests assert_allclose the
 kernels (interpret mode on CPU) against these across shape/dtype sweeps.
+
+Two layers:
+
+* ``*_math`` helpers compute in the inputs' native dtype (x64-safe). They
+  are the single source of truth for the adaptation expressions — the
+  ``ref`` backend registered in ``kernels.dispatch`` and the f32 oracles
+  below both call them, so the dispatcher's pure-jnp fallback can never
+  drift from the test oracle.
+* the public oracles mirror the kernels' f32 compute (cast inputs to f32
+  first), which is what the parity tests compare against.
 """
 
 from __future__ import annotations
@@ -24,16 +34,30 @@ def cross_entropy_grad(logits, targets, g):
     return ((p - onehot) * g[:, None]).astype(logits.dtype)
 
 
-def adam_adapt_product(g, m, v, g_meta, *, t, b1, b2, eps, lr):
-    """SAMA perturbation direction for Adam (paper Appendix C, exact):
-    out = (du_adam/dg)|_(g, m, v, t) * g_meta, elementwise. All f32.
-    Also returns sum(out^2) for the eps = alpha/||v|| step size."""
+# ---------------------------------------------------------------------------
+# native-dtype adaptation math (shared with kernels.dispatch's ref backend)
+# ---------------------------------------------------------------------------
 
-    g = g.astype(jnp.float32)
-    m = m.astype(jnp.float32)
-    v = v.astype(jnp.float32)
-    g_meta = g_meta.astype(jnp.float32)
 
+def _sumsq32(out):
+    """Sum of squares accumulated in f32 — mirroring ``sama.global_norm``'s
+    f32 upcast, so the fused eps = alpha/||v|| agrees with the unfused
+    global-norm pass for low-precision trees too (the Pallas kernels
+    already accumulate in f32)."""
+
+    out32 = out.astype(jnp.float32)
+    return jnp.sum(out32 * out32)
+
+
+def adam_adapt_math(g, m, v, g_meta, *, t, b1, b2, eps, lr):
+    """Native-dtype SAMA Adam perturbation direction (paper Appendix C,
+    exact): out = (du_adam/dg)|_(g, m, v, t) * g_meta, elementwise, plus
+    sum(out^2) for the eps = alpha/||v|| step size. This is the single
+    source of truth for the Adam adaptation expression — ``optim.adam``'s
+    ``adaptation``/``adapt_product`` reach it through the dispatch
+    registry's ``ref`` backend."""
+
+    t = jnp.asarray(t).astype(g.dtype)
     bc1 = 1.0 - b1**t
     bc2 = 1.0 - b2**t
     m1 = b1 * m + (1.0 - b1) * g
@@ -46,4 +70,56 @@ def adam_adapt_product(g, m, v, g_meta, *, t, b1, b2, eps, lr):
     safe_sqrt = jnp.maximum(jnp.sqrt(vhat), 1e-15)
     diag = lr * (a / denom - mhat * b * g / (safe_sqrt * denom * denom))
     out = diag * g_meta
-    return out, jnp.sum(out * out)
+    return out, _sumsq32(out)
+
+
+def lion_adapt_math(g, m, g_meta, *, lr, b1, delta):
+    """Native-dtype Lion surrogate adaptation product (see
+    ``kernels.lion_adapt``): diag = lr*(1-b1)*delta/(|c|+delta)^2 with
+    c = b1*m + (1-b1)*g."""
+
+    c = b1 * m + (1.0 - b1) * g
+    ad = jnp.abs(c) + delta
+    diag = lr * (1.0 - b1) * delta / (ad * ad)
+    out = diag * g_meta
+    return out, _sumsq32(out)
+
+
+def adafactor_adapt_math(vhat, g_meta, *, lr, eps):
+    """Native-dtype Adafactor frozen-statistics adaptation product:
+    diag = lr / (sqrt(vhat) + eps)."""
+
+    out = (lr / (jnp.sqrt(vhat) + eps)) * g_meta
+    return out, _sumsq32(out)
+
+
+# ---------------------------------------------------------------------------
+# f32 oracles (what the Pallas kernels are tested against)
+# ---------------------------------------------------------------------------
+
+
+def _f32(*xs):
+    return tuple(x.astype(jnp.float32) for x in xs)
+
+
+def adam_adapt_product(g, m, v, g_meta, *, t, b1, b2, eps, lr):
+    """SAMA perturbation direction for Adam (paper Appendix C, exact):
+    out = (du_adam/dg)|_(g, m, v, t) * g_meta, elementwise. All f32.
+    Also returns sum(out^2) for the eps = alpha/||v|| step size."""
+
+    g, m, v, g_meta = _f32(g, m, v, g_meta)
+    return adam_adapt_math(g, m, v, g_meta, t=t, b1=b1, b2=b2, eps=eps, lr=lr)
+
+
+def lion_adapt_product(g, m, g_meta, *, lr=1.0, b1=0.9, delta=1e-3):
+    """Lion surrogate adaptation product. All f32."""
+
+    g, m, g_meta = _f32(g, m, g_meta)
+    return lion_adapt_math(g, m, g_meta, lr=lr, b1=b1, delta=delta)
+
+
+def adafactor_adapt_product(vhat, g_meta, *, lr=1.0, eps=1e-8):
+    """Adafactor frozen-statistics adaptation product. All f32."""
+
+    vhat, g_meta = _f32(vhat, g_meta)
+    return adafactor_adapt_math(vhat, g_meta, lr=lr, eps=eps)

@@ -16,6 +16,7 @@ import jax.numpy as jnp
 
 from repro.core.problems import PerExample
 from repro.models import transformer as tf
+from repro.kernels import dispatch as kdispatch
 from repro.kernels import ops as kops
 
 PyTree = Any
@@ -30,16 +31,24 @@ def token_cross_entropy(
     (SPMD lowers the V-axis reductions to (token,)-sized psums) and the target
     logit via a compare-select reduction instead of take_along_axis, whose
     gather over a vocab-sharded axis all-gathers the full logits tensor.
+
+    Unsharded large vocabularies (V >= ``kernels.CE_VOCAB_THRESHOLD``) route
+    through the dispatched blockwise ``weighted_ce`` kernel automatically;
+    ``use_kernel=True`` forces that route for any size (which backend then
+    runs — compiled Pallas, interpreter, or jnp ref — is the dispatch
+    registry's call, docs/kernels.md). The kernel route returns f32 CE
+    regardless of logits dtype (the kernels compute in f32); the small-vocab
+    path keeps logits dtype.
     """
 
-    if use_kernel:
-        return kops.cross_entropy(logits, targets)
     if sharded:
         m = jnp.max(logits, axis=-1, keepdims=True)
         lse = jnp.log(jnp.sum(jnp.exp(logits - m), axis=-1)) + m[..., 0]
         ids = jax.lax.broadcasted_iota(jnp.int32, logits.shape, logits.ndim - 1)
         tgt = jnp.sum(jnp.where(ids == targets[..., None], logits, 0.0), axis=-1)
         return lse - tgt
+    if use_kernel or logits.shape[-1] >= kdispatch.CE_VOCAB_THRESHOLD:
+        return kops.cross_entropy(logits, targets)
     logp = jax.nn.log_softmax(logits, axis=-1)
     return -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
 
@@ -85,11 +94,16 @@ class Model:                      # per-model jit caches (dataopt.prune)
         return PerExample(loss=loss, uncertainty=entropy)
 
     def classifier_per_example(self, params, batch) -> PerExample:
-        """family == 'encoder': batch = {tokens (B,S), y (B,)}."""
+        """family == 'encoder': batch = {tokens (B,S), y (B,)}. Label spaces
+        at ``kernels.CE_VOCAB_THRESHOLD``+ route the per-sample CE through
+        the dispatched ``weighted_ce`` kernel (docs/kernels.md)."""
         logits, _ = self.forward(params, batch)
         onehot = jax.nn.one_hot(batch["y"], logits.shape[-1], dtype=logits.dtype)
         logp = jax.nn.log_softmax(logits, axis=-1)
-        loss = -jnp.sum(onehot * logp, axis=-1)
+        if logits.shape[-1] >= kdispatch.CE_VOCAB_THRESHOLD:
+            loss = kops.cross_entropy(logits, batch["y"])
+        else:
+            loss = -jnp.sum(onehot * logp, axis=-1)
         p = jnp.exp(logp)
         entropy = -jnp.sum(p * logp, axis=-1)
         return PerExample(loss=loss, logits=logits, label_onehot=onehot, uncertainty=entropy)

@@ -3,10 +3,12 @@
 from repro.optim.optimizers import (
     OptState,
     Optimizer,
+    adafactor,
     adam,
     adamw,
     apply_updates,
     get_optimizer,
+    lion,
     momentum,
     rmsprop,
     sgd,
@@ -16,10 +18,12 @@ from repro.optim import schedules
 __all__ = [
     "OptState",
     "Optimizer",
+    "adafactor",
     "adam",
     "adamw",
     "apply_updates",
     "get_optimizer",
+    "lion",
     "momentum",
     "rmsprop",
     "sgd",

@@ -5,14 +5,22 @@ The update convention follows the paper (Sec. 2, Eq. 2):
     theta_t = theta_{t-1} - u(g_t; state)
 
 ``Optimizer.update`` returns the *step* ``u`` (to be subtracted) plus new
-state. ``Optimizer.adaptation`` returns the diagonal of ``du/dg`` evaluated at
-the same (g, state) point — the "algorithmic adaptation" matrix of SAMA
-(paper Sec. 3.2 / Appendix C). Because every supported optimizer is
-elementwise, the adaptation matrix is diagonal and costs O(n) (a pytree of
-the same structure as the params).
+state. ``Optimizer.adaptation`` returns the diagonal of ``du/dg`` evaluated
+at the same (g, state) point — the "algorithmic adaptation" matrix of SAMA
+(paper Sec. 3.2 / Appendix C). For the elementwise optimizers (sgd,
+momentum, adam, adamw, rmsprop) that diagonal is jacfwd-exact and pinned by
+tests; lion and adafactor document principled surrogates in their
+docstrings (sign smoothing, frozen factored statistics) because their exact
+derivatives are degenerate or non-diagonal.
 
-Correctness of each ``adaptation`` is pinned by tests that compare against
-``jax.jacfwd`` of the scalarized update rule.
+``Optimizer.adapt_product`` is the fused fast path SAMA's hot loop consumes
+(docs/kernels.md): ``(grads, state, params, g_meta) -> (v, sum(v^2))`` with
+``v = diag(du/dg) .* g_meta`` computed per leaf through the kernel dispatch
+registry (``repro.kernels.get_kernel``) — compiled Pallas on TPU, pure-jnp
+``ref`` elsewhere — emitting the sum of squares alongside so the
+``eps = alpha/||v||`` step size needs no second pass over the data.
+Optimizers without a fused kernel leave it ``None`` and SAMA falls back to
+``adaptation`` + elementwise product + a separate norm pass.
 """
 
 from __future__ import annotations
@@ -23,9 +31,14 @@ from typing import Any, Callable, NamedTuple, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import dispatch as kdispatch
 from repro.optim import schedules
 
 PyTree = Any
+
+#: type of the fused adaptation-product hook:
+#: (grads, state, params, g_meta) -> (v pytree, sum(v^2) scalar)
+AdaptProduct = Callable[[PyTree, "OptState", PyTree, PyTree], Tuple[PyTree, jnp.ndarray]]
 
 
 def _tmap(fn, *trees):
@@ -35,12 +48,17 @@ def _tmap(fn, *trees):
 class OptState(NamedTuple):
     count: jnp.ndarray  # scalar int32 step counter (post-increment convention)
     mu: Optional[PyTree] = None  # first moment / momentum
-    nu: Optional[PyTree] = None  # second moment
+    nu: Optional[PyTree] = None  # second moment (adafactor: factored dicts)
 
 
 @dataclasses.dataclass(frozen=True)
 class Optimizer:
-    """A base-level iterative solver ``u`` with its analytic ``du/dg``."""
+    """A base-level iterative solver ``u`` with its analytic ``du/dg``.
+
+    ``adaptation`` returns the du/dg diagonal as a pytree shaped like the
+    params; ``adapt_product`` (optional) is the fused kernel-dispatched
+    ``diag .* g_meta`` + sum-of-squares — see the module docstring and
+    docs/kernels.md for the contract each built-in declares."""
 
     name: str
     init: Callable[[PyTree], OptState]
@@ -48,6 +66,8 @@ class Optimizer:
     update: Callable[[PyTree, OptState, PyTree], Tuple[PyTree, OptState]]
     # (grads, state, params) -> diagonal of du/dg, same structure as params
     adaptation: Callable[[PyTree, OptState, PyTree], PyTree]
+    # optional fused (diag .* g_meta, sumsq) fast path (kernel-dispatched)
+    adapt_product: Optional[AdaptProduct] = None
 
 
 def apply_updates(params: PyTree, step: PyTree) -> PyTree:
@@ -59,13 +79,37 @@ def _zeros_like(params):
     return _tmap(jnp.zeros_like, params)
 
 
+def _fused_product(kernel_call, grads, *stat_trees):
+    """Run a flat fused-product kernel leaf by leaf, accumulating the
+    per-leaf sums of squares into one scalar. ``kernel_call(g_flat,
+    *stats_flat) -> (out_flat, sumsq)``; returns (tree like grads, total)."""
+
+    sumsqs = []
+
+    def one(g, *stats):
+        out, ss = kernel_call(g.reshape(-1), *(s.reshape(-1) for s in stats))
+        sumsqs.append(ss)
+        return out.reshape(g.shape)
+
+    tree = _tmap(one, grads, *stat_trees)
+    total = sumsqs[0]
+    for ss in sumsqs[1:]:
+        total = total + ss
+    return tree, total
+
+
 # ---------------------------------------------------------------------------
 # SGD family
 # ---------------------------------------------------------------------------
 
 
 def sgd(lr: schedules.ScalarOrSchedule, weight_decay: float = 0.0) -> Optimizer:
-    """u = lr * (g + wd * theta).  du/dg = lr * I."""
+    """u = lr * (g + wd * theta).
+
+    Adaptation contract: du/dg = lr * I exactly (the wd term has no g
+    dependence), for any state — sgd is stateless beyond the step count.
+    No fused kernel: a constant diagonal gains nothing from fusion
+    (docs/kernels.md)."""
 
     lr_fn = schedules.resolve(lr)
 
@@ -91,7 +135,11 @@ def sgd(lr: schedules.ScalarOrSchedule, weight_decay: float = 0.0) -> Optimizer:
 def momentum(
     lr: schedules.ScalarOrSchedule, beta: float = 0.9, weight_decay: float = 0.0
 ) -> Optimizer:
-    """Heavy-ball: m' = beta*m + g_eff; u = lr*m'.  du/dg = lr * I."""
+    """Heavy-ball: m' = beta*m + g_eff; u = lr*m'.
+
+    Adaptation contract: du/dg = lr * I exactly — the incoming gradient
+    enters m' with unit coefficient, so the diagonal is lr at every state.
+    No fused kernel (constant diagonal, docs/kernels.md)."""
 
     lr_fn = schedules.resolve(lr)
 
@@ -122,29 +170,10 @@ def momentum(
 # ---------------------------------------------------------------------------
 
 
-def _adam_math(g, m, v, count, b1, b2, eps, step_lr, wd, p):
-    """Shared Adam step + exact diagonal du/dg (Appendix C, without the
-    eps<<1 approximation — we keep the exact expression)."""
-
-    t = count + 1  # bias-correction uses the post-increment step index
-    m1 = b1 * m + (1.0 - b1) * g
-    v1 = b2 * v + (1.0 - b2) * g * g
-    bc1 = 1.0 - jnp.power(b1, t.astype(g.dtype))
-    bc2 = 1.0 - jnp.power(b2, t.astype(g.dtype))
-    mhat = m1 / bc1
-    vhat = v1 / bc2
-    denom = jnp.sqrt(vhat) + eps
-    step = step_lr * mhat / denom
-    if wd:
-        step = step + step_lr * wd * p
-
-    # d mhat / dg = (1-b1)/bc1 ; d vhat / dg = 2 (1-b2) g / bc2
-    a = (1.0 - b1) / bc1
-    b = (1.0 - b2) / bc2
-    sqrt_vhat = jnp.sqrt(vhat)
-    safe_sqrt = jnp.maximum(sqrt_vhat, 1e-15)
-    dstep = step_lr * (a / denom - mhat * b * g / (safe_sqrt * denom * denom))
-    return step, m1, v1, dstep
+# The exact Adam du/dg diagonal (Appendix C, no eps<<1 approximation) lives
+# in kernels/ref.py::adam_adapt_math — the dispatch registry's ref backend —
+# so the update rule below and the adaptation expression have exactly one
+# home each.
 
 
 def adam(
@@ -155,7 +184,19 @@ def adam(
     weight_decay: float = 0.0,
 ) -> Optimizer:
     """Adam [32]; ``weight_decay`` here is *decoupled* (AdamW-style) so the
-    adaptation matrix is unaffected by it (the wd term has no g dependence)."""
+    adaptation matrix is unaffected by it (the wd term has no g dependence).
+
+    Adaptation contract: the EXACT elementwise diagonal of du/dg at
+    (g, mu, nu, count) — the state at which the last base gradient was
+    computed — per paper Appendix C without the eps<<1 approximation:
+
+        du/dg = lr * [ a/denom - mhat * b * g / (sqrt(vhat) * denom^2) ],
+        a = (1-b1)/bc1,  b = (1-b2)/bc2,  denom = sqrt(vhat) + eps.
+
+    Both ``adaptation`` and the fused ``adapt_product`` route through the
+    ``adam_adapt`` kernel in the dispatch registry (docs/kernels.md):
+    compiled Pallas on TPU, dtype-preserving jnp ``ref`` elsewhere — the
+    jacfwd pin in tests/test_optim.py holds on the ref path."""
 
     lr_fn = schedules.resolve(lr)
 
@@ -183,18 +224,32 @@ def adam(
         step = _tmap(one, mu, nu, grads, params)
         return step, OptState(count=state.count + 1, mu=mu, nu=nu)
 
-    def adaptation(grads, state, params):
+    def _kernel_call(state):
+        kern = kdispatch.get_kernel("adam_adapt")
         step_lr = lr_fn(state.count)
+        t = state.count + 1
 
-        def one(g, m, v, p):
-            _, _, _, dstep = _adam_math(
-                g, m, v, state.count, b1, b2, eps, step_lr, weight_decay, p
-            )
-            return dstep
+        def call(g, m, v, gm):
+            return kern(g, m, v, gm, t=t, b1=b1, b2=b2, eps=eps, lr=step_lr)
 
-        return _tmap(one, grads, state.mu, state.nu, params)
+        return call
 
-    return Optimizer("adam", init, update, adaptation)
+    def adaptation(grads, state, params):
+        del params  # decoupled wd: no g dependence
+        call = _kernel_call(state)
+
+        def one(g, m, v):
+            out, _ = call(g.reshape(-1), m.reshape(-1), v.reshape(-1),
+                          jnp.ones_like(g.reshape(-1)))
+            return out.reshape(g.shape)
+
+        return _tmap(one, grads, state.mu, state.nu)
+
+    def adapt_product(grads, state, params, g_meta):
+        del params
+        return _fused_product(_kernel_call(state), grads, state.mu, state.nu, g_meta)
+
+    return Optimizer("adam", init, update, adaptation, adapt_product)
 
 
 def adamw(
@@ -204,6 +259,10 @@ def adamw(
     eps: float = 1e-8,
     weight_decay: float = 0.01,
 ) -> Optimizer:
+    """AdamW = Adam with decoupled weight decay on by default. Identical
+    adaptation contract (and fused ``adam_adapt`` kernel route) to ``adam``:
+    the decay term has no gradient dependence, so du/dg is untouched."""
+
     opt = adam(lr, b1=b1, b2=b2, eps=eps, weight_decay=weight_decay)
     return dataclasses.replace(opt, name="adamw")
 
@@ -213,7 +272,16 @@ def rmsprop(
     rho: float = 0.99,
     eps: float = 1e-8,
 ) -> Optimizer:
-    """v' = rho*v + (1-rho) g^2 ; u = lr * g / (sqrt(v') + eps)."""
+    """v' = rho*v + (1-rho) g^2 ; u = lr * g / (sqrt(v') + eps).
+
+    Adaptation contract: the EXACT elementwise diagonal at (g, nu):
+
+        du/dg = lr * [ 1/denom - g^2 (1-rho) / (sqrt(v') * denom^2) ],
+        denom = sqrt(v') + eps.
+
+    No fused kernel registered yet — the pure-jnp expression below is the
+    reference; add one via ``register_kernel`` per docs/kernels.md if
+    rmsprop ever lands in a hot path."""
 
     lr_fn = schedules.resolve(lr)
 
@@ -244,6 +312,213 @@ def rmsprop(
 
 
 # ---------------------------------------------------------------------------
+# Lion (sign-momentum) — surrogate adaptation
+# ---------------------------------------------------------------------------
+
+
+def lion(
+    lr: schedules.ScalarOrSchedule,
+    b1: float = 0.9,
+    b2: float = 0.99,
+    weight_decay: float = 0.0,
+    adapt_delta: float = 1e-3,
+) -> Optimizer:
+    """Lion (Chen et al., Symbolic Discovery of Optimization Algorithms):
+
+        c  = b1*m + (1-b1)*g          (update interpolation)
+        u  = lr * (sign(c) + wd*p)    (decoupled decay)
+        m' = b2*m + (1-b2)*g
+
+    Adaptation contract: the exact derivative of ``sign`` is zero almost
+    everywhere, which would silently turn SAMA into its no-adaptation
+    ablation (SAMA-NA). ``adaptation`` therefore declares the smoothed
+    surrogate ``sign_d(c) = c/(|c|+delta)`` and returns ITS elementwise
+    diagonal,
+
+        du/dg = lr * (1-b1) * delta / (|c| + delta)^2,
+
+    evaluated at (g, mu) with ``delta = adapt_delta`` (sharp sign as
+    delta -> 0; mass concentrates on coordinates where the momentum vote is
+    contested, |c| ~ 0, which is exactly where a gradient nudge can flip the
+    sign). It is NOT the a.e.-zero jacfwd diagonal of the hard-sign update
+    — tests pin it against the surrogate's jacfwd instead. Both
+    ``adaptation`` and the fused ``adapt_product`` route through the
+    ``lion_adapt`` kernel in the dispatch registry (docs/kernels.md)."""
+
+    lr_fn = schedules.resolve(lr)
+
+    def init(params):
+        return OptState(count=jnp.zeros([], jnp.int32), mu=_zeros_like(params))
+
+    def update(grads, state, params):
+        step_lr = lr_fn(state.count)
+
+        def one(m, g, p):
+            c = b1 * m + (1.0 - b1) * g
+            step = step_lr * jnp.sign(c)
+            if weight_decay:
+                step = step + step_lr * weight_decay * p
+            return step
+
+        step = _tmap(one, state.mu, grads, params)
+        mu = _tmap(lambda m, g: b2 * m + (1.0 - b2) * g, state.mu, grads)
+        return step, OptState(count=state.count + 1, mu=mu)
+
+    def _kernel_call(state):
+        kern = kdispatch.get_kernel("lion_adapt")
+        step_lr = lr_fn(state.count)
+
+        def call(g, m, gm):
+            return kern(g, m, gm, lr=step_lr, b1=b1, delta=adapt_delta)
+
+        return call
+
+    def adaptation(grads, state, params):
+        del params
+        call = _kernel_call(state)
+
+        def one(g, m):
+            out, _ = call(g.reshape(-1), m.reshape(-1), jnp.ones_like(g.reshape(-1)))
+            return out.reshape(g.shape)
+
+        return _tmap(one, grads, state.mu)
+
+    def adapt_product(grads, state, params, g_meta):
+        del params
+        return _fused_product(_kernel_call(state), grads, state.mu, g_meta)
+
+    return Optimizer("lion", init, update, adaptation, adapt_product)
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (factored second moment) — frozen-statistics adaptation
+# ---------------------------------------------------------------------------
+
+
+def _adafactor_stats(g, nu_leaf, t, b2, eps1):
+    """Advance one leaf's (factored) second-moment statistics and return
+    (new_nu_leaf, bias-corrected vhat). 2-D leaves factor into row/col
+    means (O(r+c) state); everything else keeps the full moment."""
+
+    g2 = g * g + eps1
+    bc2 = 1.0 - jnp.power(b2, t)
+    if "r" in nu_leaf:
+        r1 = b2 * nu_leaf["r"] + (1.0 - b2) * jnp.mean(g2, axis=1)
+        c1 = b2 * nu_leaf["c"] + (1.0 - b2) * jnp.mean(g2, axis=0)
+        rhat = r1 / bc2
+        chat = c1 / bc2
+        vhat = rhat[:, None] * chat[None, :] / jnp.mean(rhat)
+        return {"r": r1, "c": c1}, vhat
+    v1 = b2 * nu_leaf["v"] + (1.0 - b2) * g2
+    return {"v": v1}, v1 / bc2
+
+
+def _adafactor_map(fn, grads, nu):
+    """tree_map over (grads, nu) where nu's leaves are the per-param stat
+    dicts (one level deeper than the grads tree)."""
+
+    leaves, treedef = jax.tree_util.tree_flatten(grads)
+    nu_leaves = treedef.flatten_up_to(nu)
+    out = [fn(g, n) for g, n in zip(leaves, nu_leaves)]
+    return treedef, out
+
+
+def adafactor(
+    lr: schedules.ScalarOrSchedule,
+    b2: float = 0.999,
+    eps: float = 1e-8,
+    eps1: float = 1e-30,
+    weight_decay: float = 0.0,
+) -> Optimizer:
+    """Adafactor (Shazeer & Stern), simplified to its memory-factored core:
+    2-D parameters keep row/col mean second-moment statistics (O(r+c)
+    state instead of O(rc)), reconstructed as the rank-1
+    ``vhat = rhat (x) chat / mean(rhat)``; other shapes keep the full
+    moment. This variant uses Adam-style bias correction and a fixed
+    ``b2`` in place of the original's relative step sizes and update
+    clipping, so it composes with the repo's schedule/adaptation machinery.
+
+        u = lr * g / (sqrt(vhat) + eps)   (+ lr*wd*p, decoupled)
+
+    Adaptation contract: the factored statistics couple every element of a
+    row/column, so the exact du/dg is NOT diagonal. ``adaptation`` declares
+    the frozen-statistics diagonal
+
+        du/dg = lr / (sqrt(vhat) + eps)
+
+    — the derivative holding vhat fixed at its post-update value, exact in
+    the b2 -> 1 limit where the statistics move slowly (and the analogue of
+    the paper's Appendix C treatment of AdaGrad-family denominators). Both
+    ``adaptation`` and the fused ``adapt_product`` route the elementwise
+    tail through the ``adafactor_adapt`` kernel in the dispatch registry
+    after the cheap rank-1 vhat reconstruction (docs/kernels.md)."""
+
+    lr_fn = schedules.resolve(lr)
+
+    def init(params):
+        def one(p):
+            if p.ndim == 2:
+                return {"r": jnp.zeros((p.shape[0],), p.dtype),
+                        "c": jnp.zeros((p.shape[1],), p.dtype)}
+            return {"v": jnp.zeros_like(p)}
+
+        return OptState(count=jnp.zeros([], jnp.int32), nu=_tmap(one, params))
+
+    def update(grads, state, params):
+        step_lr = lr_fn(state.count)
+        p_leaves = jax.tree_util.tree_leaves(params)
+
+        def one(g, nu_leaf):
+            t = (state.count + 1).astype(g.dtype)
+            return _adafactor_stats(g, nu_leaf, t, b2, eps1)
+
+        treedef, pairs = _adafactor_map(one, grads, state.nu)
+        nu = jax.tree_util.tree_unflatten(treedef, [n for n, _ in pairs])
+        steps = []
+        for (_, vhat), g, p in zip(pairs, jax.tree_util.tree_leaves(grads), p_leaves):
+            step = step_lr * g / (jnp.sqrt(vhat) + eps)
+            if weight_decay:
+                step = step + step_lr * weight_decay * p
+            steps.append(step)
+        step_tree = jax.tree_util.tree_unflatten(treedef, steps)
+        return step_tree, OptState(count=state.count + 1, nu=nu)
+
+    def _vhat_leaves(grads, state):
+        def one(g, nu_leaf):
+            t = (state.count + 1).astype(g.dtype)
+            _, vhat = _adafactor_stats(g, nu_leaf, t, b2, eps1)
+            return vhat
+
+        return _adafactor_map(one, grads, state.nu)
+
+    def adaptation(grads, state, params):
+        del params
+        kern = kdispatch.get_kernel("adafactor_adapt")
+        step_lr = lr_fn(state.count)
+        treedef, vhats = _vhat_leaves(grads, state)
+        outs = []
+        for vhat in vhats:
+            out, _ = kern(vhat.reshape(-1), jnp.ones_like(vhat.reshape(-1)),
+                          lr=step_lr, eps=eps)
+            outs.append(out.reshape(vhat.shape))
+        return jax.tree_util.tree_unflatten(treedef, outs)
+
+    def adapt_product(grads, state, params, g_meta):
+        del params
+        kern = kdispatch.get_kernel("adafactor_adapt")
+        step_lr = lr_fn(state.count)
+        treedef, vhats = _vhat_leaves(grads, state)
+        outs, total = [], None
+        for vhat, gm in zip(vhats, jax.tree_util.tree_leaves(g_meta)):
+            out, ss = kern(vhat.reshape(-1), gm.reshape(-1), lr=step_lr, eps=eps)
+            outs.append(out.reshape(vhat.shape))
+            total = ss if total is None else total + ss
+        return jax.tree_util.tree_unflatten(treedef, outs), total
+
+    return Optimizer("adafactor", init, update, adaptation, adapt_product)
+
+
+# ---------------------------------------------------------------------------
 # registry
 # ---------------------------------------------------------------------------
 
@@ -253,6 +528,8 @@ _FACTORIES = {
     "adam": adam,
     "adamw": adamw,
     "rmsprop": rmsprop,
+    "lion": lion,
+    "adafactor": adafactor,
 }
 
 

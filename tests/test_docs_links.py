@@ -1,0 +1,44 @@
+"""Docs link hygiene: every repo-relative path and internal anchor in the
+markdown docs must resolve (tools/check_links.py — the same checker the CI
+``docs`` job runs, so a dangling link fails locally before it fails there).
+"""
+
+import pathlib
+import sys
+
+import pytest
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(ROOT / "tools"))
+
+import check_links  # noqa: E402
+
+DOC_FILES = ["README.md", "DESIGN.md", "ROADMAP.md"] + sorted(
+    str(p.relative_to(ROOT)) for p in (ROOT / "docs").glob("*.md"))
+
+
+def test_docs_exist():
+    assert (ROOT / "docs" / "kernels.md").exists()
+    assert (ROOT / "docs" / "api.md").exists()
+
+
+@pytest.mark.parametrize("name", DOC_FILES)
+def test_no_dangling_links(name):
+    problems = check_links.check_file(ROOT / name)
+    assert problems == [], f"{name}: {problems}"
+
+
+def test_checker_catches_dangling(tmp_path):
+    bad = tmp_path / "bad.md"
+    bad.write_text("[a](missing.md) and [b](#ghost)\n# Only Heading\n")
+    problems = check_links.check_file(bad)
+    assert len(problems) == 2
+
+
+def test_slugger_matches_github_conventions():
+    seen = {}
+    assert check_links.github_slug("§10 The kernel dispatch registry", seen) \
+        == "10-the-kernel-dispatch-registry"
+    assert check_links.github_slug("register_method", seen) == "register_method"
+    assert check_links.github_slug("Dup", seen) == "dup"
+    assert check_links.github_slug("Dup", seen) == "dup-1"

@@ -114,3 +114,113 @@ def test_adam_first_step_matches_reference():
     step, _ = opt.update(g, state, params)
     expect = 1e-2 * np.asarray([1.0, -2.0, 0.5]) / (np.abs([1.0, -2.0, 0.5]) + 1e-8)
     np.testing.assert_allclose(np.asarray(step["w"]), expect, rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# lion / adafactor: the "broad range of adaptive optimizers" extensions.
+# Their adaptation contracts are surrogates (see the optimizer docstrings),
+# so they are pinned against the declared surrogate's jacfwd / formula
+# rather than the raw update rule.
+# ---------------------------------------------------------------------------
+
+
+def test_lion_update_is_sign_momentum():
+    opt = optim.lion(0.1, b1=0.9, b2=0.99)
+    params = {"w": jnp.zeros((4,), jnp.float64)}
+    state = opt.init(params)
+    g = {"w": jnp.asarray([1.0, -2.0, 0.5, -0.1], jnp.float64)}
+    step, state2 = opt.update(g, state, params)
+    # cold momentum: c = (1-b1) g, so the step is lr * sign(g)
+    np.testing.assert_allclose(np.asarray(step["w"]), 0.1 * np.sign([1.0, -2.0, 0.5, -0.1]))
+    # momentum advances with b2 (not b1)
+    np.testing.assert_allclose(np.asarray(state2.mu["w"]),
+                               0.01 * np.asarray([1.0, -2.0, 0.5, -0.1]), rtol=1e-12)
+
+
+def test_lion_adaptation_matches_surrogate_jacfwd():
+    """adaptation == jacfwd of the DECLARED smoothed-sign surrogate
+    u = lr * c/(|c|+delta) — not of the a.e.-zero hard sign."""
+
+    lr, b1, delta = 0.05, 0.9, 1e-2
+    opt = optim.lion(lr, b1=b1, adapt_delta=delta)
+    params = _rand_params(jax.random.PRNGKey(0), shapes=((5,),))
+    state = opt.init(params)
+    for i in range(2):
+        _, state = opt.update(_rand_params(jax.random.PRNGKey(i + 1), shapes=((5,),)),
+                              state, params)
+    grads = _rand_params(jax.random.PRNGKey(7), shapes=((5,),))
+
+    step_lr = optim.schedules.resolve(lr)(state.count)  # f32, as the optimizer sees it
+
+    def surrogate(g):
+        c = b1 * state.mu["w0"] + (1.0 - b1) * g
+        return step_lr * c / (jnp.abs(c) + delta)
+
+    jac = jax.jacfwd(surrogate)(grads["w0"])
+    ad = opt.adaptation(grads, state, params)
+    # rtol 1e-6, not 1e-9: the f32 schedule constant rounds the
+    # lr*(1-b1)*delta product differently on the two sides (~3e-8)
+    np.testing.assert_allclose(np.asarray(jnp.diag(jac)), np.asarray(ad["w0"]),
+                               rtol=1e-6, atol=1e-12)
+
+
+def test_adafactor_state_is_factored():
+    opt = optim.adafactor(1e-3)
+    params = {"mat": jnp.zeros((6, 4)), "vec": jnp.zeros((5,))}
+    state = opt.init(params)
+    assert set(state.nu["mat"]) == {"r", "c"}
+    assert state.nu["mat"]["r"].shape == (6,)
+    assert state.nu["mat"]["c"].shape == (4,)
+    assert set(state.nu["vec"]) == {"v"}
+    assert state.nu["vec"]["v"].shape == (5,)
+
+
+def test_adafactor_adaptation_matches_frozen_statistics_diagonal():
+    """adaptation == lr/(sqrt(vhat)+eps) with vhat the factored,
+    bias-corrected reconstruction at the post-update statistics — the
+    frozen-statistics contract the docstring declares."""
+
+    lr, b2, eps, eps1 = 1e-2, 0.999, 1e-8, 1e-30
+    opt = optim.adafactor(lr, b2=b2, eps=eps, eps1=eps1)
+    params = {"w": jax.random.normal(jax.random.PRNGKey(0), (4, 3), jnp.float64)}
+    state = opt.init(params)
+    for i in range(3):
+        g = {"w": jax.random.normal(jax.random.PRNGKey(i + 1), (4, 3), jnp.float64)}
+        _, state = opt.update(g, state, params)
+    g = {"w": jax.random.normal(jax.random.PRNGKey(9), (4, 3), jnp.float64)}
+
+    t = 4.0
+    g2 = g["w"] ** 2 + eps1
+    bc2 = 1.0 - b2**t
+    r1 = b2 * state.nu["w"]["r"] + (1 - b2) * jnp.mean(g2, axis=1)
+    c1 = b2 * state.nu["w"]["c"] + (1 - b2) * jnp.mean(g2, axis=0)
+    rhat, chat = r1 / bc2, c1 / bc2
+    vhat = rhat[:, None] * chat[None, :] / jnp.mean(rhat)
+    want = lr / (jnp.sqrt(vhat) + eps)
+
+    ad = opt.adaptation(g, state, params)
+    np.testing.assert_allclose(np.asarray(ad["w"]), np.asarray(want), rtol=1e-6)
+
+    # and the update uses the same vhat: u = lr * g / (sqrt(vhat) + eps)
+    step, _ = opt.update(g, state, params)
+    np.testing.assert_allclose(np.asarray(step["w"]),
+                               np.asarray(lr * g["w"] / (jnp.sqrt(vhat) + eps)),
+                               rtol=1e-6)
+
+
+@pytest.mark.parametrize("name", ["lion", "adafactor"])
+def test_new_optimizers_registered_with_fused_product(name):
+    opt = optim.get_optimizer(name, 1e-3)
+    assert opt.name == name
+    assert opt.adapt_product is not None
+    params = {"w": jnp.ones((3, 2)), "b": jnp.zeros((2,))}
+    state = opt.init(params)
+    g = jax.tree_util.tree_map(jnp.ones_like, params)
+    gm = jax.tree_util.tree_map(lambda p: jnp.full_like(p, 0.5), params)
+    v, ss = opt.adapt_product(g, state, params, gm)
+    diag = opt.adaptation(g, state, params)
+    want = jax.tree_util.tree_map(lambda d, m: d * m, diag, gm)
+    for a, b in zip(jax.tree_util.tree_leaves(v), jax.tree_util.tree_leaves(want)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6)
+    total = sum(float(jnp.sum(x * x)) for x in jax.tree_util.tree_leaves(v))
+    np.testing.assert_allclose(float(ss), total, rtol=1e-6)

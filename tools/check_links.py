@@ -1,0 +1,117 @@
+#!/usr/bin/env python
+"""Markdown link checker for the repo docs (CI `docs` job + tier-1 test).
+
+Checks every ``[text](target)`` in the given markdown files:
+
+* repo-relative paths must exist (relative to the file containing the link);
+* ``#anchor`` fragments — standalone or on a path — must match a heading in
+  the target file, using GitHub's slugger (lowercase; spaces -> ``-``;
+  punctuation stripped; duplicate slugs suffixed ``-1``, ``-2``, ...);
+* ``http(s)://`` / ``mailto:`` links are NOT fetched (CI must not depend on
+  the network) — only recorded.
+
+Exit status: number of dangling links (0 = clean).
+
+    python tools/check_links.py README.md DESIGN.md docs/*.md
+"""
+
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+from typing import Dict, List, Tuple
+
+# [text](target) — skips images' leading ! via the lookbehind-free group
+LINK_RE = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+HEADING_RE = re.compile(r"^(#{1,6})\s+(.*?)\s*#*\s*$")
+CODE_FENCE_RE = re.compile(r"^(```|~~~)")
+
+
+def github_slug(heading: str, seen: Dict[str, int]) -> str:
+    """GitHub's anchor slugger: strip markdown emphasis/code/links, lowercase,
+    drop everything but word chars/spaces/hyphens, spaces -> hyphens,
+    deduplicate with -N suffixes."""
+
+    # strip * and ` formatting + inline links; keep _ (mid-word underscores
+    # are not emphasis to GitHub's parser and survive into the slug)
+    text = re.sub(r"[*`]|\[([^\]]*)\]\([^)]*\)", r"\1", heading)
+    slug = re.sub(r"[^\w\- ]", "", text.lower(), flags=re.UNICODE)
+    slug = slug.replace(" ", "-")
+    n = seen.get(slug, 0)
+    seen[slug] = n + 1
+    return slug if n == 0 else f"{slug}-{n}"
+
+
+def anchors_of(path: Path) -> List[str]:
+    seen: Dict[str, int] = {}
+    out = []
+    in_fence = False
+    for line in path.read_text(encoding="utf-8").splitlines():
+        if CODE_FENCE_RE.match(line):
+            in_fence = not in_fence
+            continue
+        if in_fence:
+            continue
+        m = HEADING_RE.match(line)
+        if m:
+            out.append(github_slug(m.group(2), seen))
+    return out
+
+
+def links_of(path: Path) -> List[str]:
+    out = []
+    in_fence = False
+    for line in path.read_text(encoding="utf-8").splitlines():
+        if CODE_FENCE_RE.match(line):
+            in_fence = not in_fence
+            continue
+        if in_fence:
+            continue
+        out.extend(LINK_RE.findall(line))
+    return out
+
+
+def check_file(md: Path) -> List[Tuple[str, str]]:
+    """(link, problem) pairs for one markdown file."""
+
+    problems: List[Tuple[str, str]] = []
+    for link in links_of(md):
+        if re.match(r"^[a-z][a-z0-9+.-]*:", link):  # http:, https:, mailto:
+            continue
+        target, _, frag = link.partition("#")
+        target_path = md if not target else (md.parent / target).resolve()
+        if target and not target_path.exists():
+            problems.append((link, f"missing path {target_path}"))
+            continue
+        if frag:
+            if target_path.is_dir() or target_path.suffix.lower() not in (".md", ".markdown"):
+                continue  # anchors only checked inside markdown
+            if frag not in anchors_of(target_path):
+                problems.append((link, f"no anchor #{frag} in {target_path.name}"))
+    return problems
+
+
+def main(argv: List[str]) -> int:
+    if not argv:
+        print("usage: check_links.py FILE.md [FILE.md ...]", file=sys.stderr)
+        return 2
+    total = 0
+    for name in argv:
+        md = Path(name)
+        if not md.exists():
+            print(f"{name}: file not found", file=sys.stderr)
+            total += 1
+            continue
+        for link, why in check_file(md):
+            print(f"{name}: DANGLING [{link}] — {why}")
+            total += 1
+    if total:
+        print(f"check_links: {total} dangling link(s)")
+    else:
+        print(f"check_links: OK ({len(argv)} files)")
+    return min(total, 125)
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))
