@@ -10,9 +10,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro import optim
+from repro import optim, perf
 from repro.core import BilevelSpec, SAMAConfig, baselines, sama_hypergrad
-from benchmarks.common import emit, time_fn
+
+from benchmarks.common import emit
 
 
 def _problem(key, n=100, n_meta=80, d=20, beta=0.1):
@@ -69,7 +70,7 @@ def main(fast: bool = True):
     }
     for name, fn in algos.items():
         g = fn()
-        us = time_fn(lambda: fn(), iters=3)
+        us = perf.time_callable(lambda: fn(), warmup=1, repeats=3).median_us
         emit(f"fig5_cosine_{name}", us, f"cos={_cos(g, gt):.4f}")
 
     # convergence panel

@@ -1,13 +1,19 @@
-"""Shared benchmark utilities: the WRENCH-analog synthetic task, a mini-BERT
-classifier factory, timing helpers, and row emission.
+"""Shared benchmark utilities: the WRENCH-analog synthetic task, a
+mini-BERT classifier factory, and row/record emission.
 
-Every benchmark emits ``name,us_per_call,derived`` rows (one per paper-table
-cell it reproduces). ``emit`` both prints the CSV row and records it in
-``ROWS`` so ``python -m benchmarks.run`` can additionally write
-machine-readable ``BENCH_*.json`` files for the perf trajectory.
+Every benchmark emits ``name,us_per_call,derived`` rows (one per
+paper-table cell it reproduces) via ``emit``, which both prints the CSV
+row and records it in ``ROWS``; measured probes additionally emit
+validated ``perf.PerfRecord`` objects into ``RECORDS`` via
+``emit_record``. ``python -m benchmarks.run`` bundles both into
+machine-readable ``BENCH_*.json`` files for the perf trajectory and the
+CI regression gate.
 
 Training loops live in ``repro.dataopt`` (``train_plain``, ``meta_train``,
-``model_accuracy``) — benchmarks only orchestrate and time them.
+``model_accuracy``) and ALL timing/memory/census measurement in
+``repro.perf`` (``time_callable``, ``profile_step``) — benchmarks only
+orchestrate. The CSV-era local timing helpers this module once carried
+were superseded by those subsystems and have been removed.
 """
 
 from __future__ import annotations
@@ -54,13 +60,6 @@ def emit_record(record: perf.PerfRecord):
     if errors:
         raise ValueError(f"invalid PerfRecord {record.name!r}: " + "; ".join(errors))
     RECORDS.append(record)
-
-
-def time_fn(fn, *args, iters: int = 3, warmup: int = 1) -> float:
-    """Median wall-time per call in microseconds (blocks on jax outputs).
-    Thin wrapper over the repro.perf warmup/repeat/block protocol."""
-
-    return perf.time_callable(fn, *args, warmup=warmup, repeats=iters).median_us
 
 
 # ---------------------------------------------------------------------------

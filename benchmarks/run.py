@@ -35,6 +35,7 @@ BENCHES = [
     "bench_ablation",  # Tables 8/9
     "bench_distributed",  # Fig 2 / Table 2 multi-GPU structure
     "bench_kernels",  # fused dispatch kernels vs naive jnp chains
+    "bench_scale",  # repro.scale: memory vs microbatch M + census under accumulation
 ]
 
 #: benches whose rows are produced by the repro.dataopt subsystem

@@ -19,7 +19,7 @@ Level 3 — ``repro.core.methods`` / ``repro.core.sama`` /
 
 Typical use::
 
-    from repro import api, optim
+    from repro import api, optim, scale
     from repro.core import problems
 
     learner = api.MetaLearner(
@@ -27,6 +27,7 @@ Typical use::
         base_opt="adam", base_lr=1e-2,
         meta_opt="adam", meta_lr=1e-2,
         method="sama", unroll_steps=2,
+        scale=scale.ScaleConfig(policy="bf16", microbatch=4),  # repro.scale
         checkpoint_dir="out/ck",
     )
     learner.init(theta0, lam0)
@@ -123,8 +124,11 @@ class MetaLearner:
     # -- lifecycle ---------------------------------------------------------
 
     def init(self, theta: PyTree, lam: PyTree) -> EngineState:
-        """Build the EngineState (both levels' params + optimizer moments)."""
-        self.state = init_state(theta, lam, self.base_opt, self.meta_opt)
+        """Build the EngineState (both levels' params + optimizer moments;
+        a loss-scaling precision policy additionally seeds its
+        LossScaleState from ``cfg.scale``)."""
+        self.state = init_state(theta, lam, self.base_opt, self.meta_opt,
+                                scale=self.cfg.scale)
         return self.state
 
     def step(self, base_batches, meta_batch) -> Dict[str, Any]:
@@ -193,7 +197,9 @@ class MetaLearner:
         args = (self.state, base_batches, meta_batch)
         rec_name = name or f"{self.method.name}_{self.schedule}"
         extra = {"method": self.method.name, "schedule": self.schedule,
-                 "unroll_steps": self.cfg.unroll_steps}
+                 "unroll_steps": self.cfg.unroll_steps,
+                 "microbatch": self.cfg.scale.microbatch,
+                 "policy": self.cfg.scale.resolve().name}
         if self.mesh is not None:
             with self.mesh:
                 return perf.profile_step(rec_name, fn, *args, warmup=warmup,

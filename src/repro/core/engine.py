@@ -20,7 +20,7 @@ inserting its one bucketed all-reduce between stages 2 and 3.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, NamedTuple, Tuple, Union
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -30,6 +30,9 @@ from repro.core.bilevel import BilevelSpec
 from repro.core.methods import HypergradMethod, MethodContext
 from repro.core.sama import global_norm
 from repro.optim import Optimizer, OptState, apply_updates
+from repro.scale import accum as accum_mod
+from repro.scale import policy as policy_mod
+from repro.scale.policy import LossScaleState, ScaleConfig
 
 PyTree = Any
 
@@ -41,7 +44,10 @@ METHODS = ("sama", "sama_na", "t1t2", "neumann", "cg", "iterdiff")
 @dataclasses.dataclass(frozen=True)
 class EngineConfig:
     """``method`` is a registry name or a HypergradMethod instance; the
-    remaining per-method knobs feed the built-in factories."""
+    remaining per-method knobs feed the built-in factories. ``scale``
+    carries the repro.scale knobs (precision policy + microbatch count,
+    DESIGN.md §11) — the default is the identity (f32, no microbatching),
+    i.e. the paper-exact step."""
 
     method: Union[str, HypergradMethod] = "sama"
     unroll_steps: int = 1
@@ -53,6 +59,8 @@ class EngineConfig:
     neumann_scale: float = 0.1
     cg_iters: int = 5
     cg_damping: float = 1e-3
+    # precision policy + microbatch accumulation (repro.scale)
+    scale: ScaleConfig = ScaleConfig()
 
     def __post_init__(self):
         if isinstance(self.method, str) and self.method not in methods_mod.available_methods():
@@ -70,35 +78,94 @@ class EngineState(NamedTuple):
     lam: PyTree
     meta_opt_state: OptState
     step: jnp.ndarray
+    #: dynamic loss-scale automaton (repro.scale); None (an empty subtree,
+    #: so old checkpoints keep restoring) unless the policy scales losses.
+    scale: Optional[LossScaleState] = None
 
 
-def init_state(theta: PyTree, lam: PyTree, base_opt: Optimizer, meta_opt: Optimizer) -> EngineState:
+def init_state(theta: PyTree, lam: PyTree, base_opt: Optimizer, meta_opt: Optimizer,
+               *, scale: Optional[ScaleConfig] = None) -> EngineState:
+    """``scale``: the EngineConfig's ScaleConfig — needed so a
+    loss-scaling policy (f16) gets its LossScaleState seeded; omitting it
+    keeps the f32/bf16 default (no scale state)."""
+
+    policy = (scale or ScaleConfig()).resolve()
     return EngineState(
         theta=theta,
         base_opt_state=base_opt.init(theta),
         lam=lam,
         meta_opt_state=meta_opt.init(lam),
         step=jnp.zeros([], jnp.int32),
+        scale=policy_mod.init_scale_state(policy),
     )
 
 
-def _unroll_base(spec: BilevelSpec, base_opt: Optimizer, theta, opt_state, lam, base_batches):
+def _unroll_base(spec: BilevelSpec, base_opt: Optimizer, theta, opt_state, lam,
+                 base_batches, *, scale_cfg: Optional[ScaleConfig] = None,
+                 scale_state: Optional[LossScaleState] = None, grad_reduce=None):
     """K base optimizer steps via lax.scan. Carries the last base gradient and
     the optimizer state *at which it was computed* — SAMA's adaptation matrix
-    is evaluated there (paper footnote 2: no extra backward pass)."""
+    is evaluated there (paper footnote 2: no extra backward pass).
 
+    repro.scale hooks (all default to the paper-exact path):
+    ``scale_cfg.microbatch`` splits each base batch into M accumulated
+    microbatches (collective-free inner scan); ``scale_state`` (with a
+    loss-scaling policy) multiplies each microbatch loss by the live scale
+    before its backward pass and SKIPS the update on a non-finite gradient
+    (params, moments, and the carried (g, state-at-g) pair all keep their
+    previous values) while the scale automaton backs off; ``grad_reduce``
+    is the distributed schedule's per-step DDP pmean — it runs on the
+    ACCUMULATED gradient, so the all-reduce count per base step stays one
+    for every M.
+
+    Returns ``(theta, opt_state, g_last, st_at_g, losses, scale_state,
+    any_finite)`` — ``any_finite`` (scalar bool, always True without
+    scaling) says whether ANY base step of this unroll applied; when every
+    step skipped, ``g_last`` is still the zero init and the meta level
+    must not consume it (SAMA's adaptation diagonal at a zero gradient and
+    cold moments is the lr/eps pathology — finite but garbage), so the
+    caller's meta-update guard ANDs this flag in.
+    """
+
+    cfg = scale_cfg or ScaleConfig()
+    policy = cfg.resolve()
+    if policy.dynamic_scaling and scale_state is None:
+        raise ValueError(
+            f"policy {policy.name!r} scales losses but the state carries no "
+            "LossScaleState — build the state with "
+            "init_state(..., scale=engine_cfg.scale)"
+        )
     g0 = jax.tree_util.tree_map(jnp.zeros_like, theta)
 
     def step(carry, batch):
-        th, st, _, _ = carry
-        loss, g = jax.value_and_grad(spec.base_scalar, argnums=0)(th, lam, batch)
-        upd, st_new = base_opt.update(g, st, th)
-        th_new = apply_updates(th, upd)
-        return (th_new, st_new, g, st), loss
+        th, st, g_prev, st_prev, ss, ok_prev = carry
+        loss, g = accum_mod.microbatch_value_and_grad(
+            spec.base_scalar, th, lam, batch, cfg.microbatch, policy.accum_jnp,
+            scale=ss,
+        )
+        if grad_reduce is not None:
+            g = grad_reduce(g)
+        if ss is None:
+            upd, st_new = base_opt.update(g, st, th)
+            return (apply_updates(th, upd), st_new, g, st, ss, ok_prev), loss
+        finite = policy_mod.all_finite(g)
+        g_safe = jax.tree_util.tree_map(
+            lambda x: jnp.where(finite, x, jnp.zeros_like(x)), g)
+        upd, st_new = base_opt.update(g_safe, st, th)
+        th_new = policy_mod.select_tree(finite, apply_updates(th, upd), th)
+        st_new = policy_mod.select_tree(finite, st_new, st)
+        # a skipped step contributes no usable gradient: keep the previous
+        # (g, state-at-g) pair so SAMA's adaptation stays finite
+        g_keep = policy_mod.select_tree(finite, g, g_prev)
+        st_at_g = policy_mod.select_tree(finite, st, st_prev)
+        ss = policy_mod.update_scale(ss, finite, policy)
+        return (th_new, st_new, g_keep, st_at_g, ss, jnp.logical_or(ok_prev, finite)), loss
 
-    init = (theta, opt_state, g0, opt_state)
-    (theta, opt_state, g_last, st_at_g), losses = jax.lax.scan(step, init, base_batches)
-    return theta, opt_state, g_last, st_at_g, losses
+    any0 = jnp.asarray(scale_state is None)  # no scaling: vacuously True
+    init = (theta, opt_state, g0, opt_state, scale_state, any0)
+    (theta, opt_state, g_last, st_at_g, scale_state, any_finite), losses = jax.lax.scan(
+        step, init, base_batches)
+    return theta, opt_state, g_last, st_at_g, losses, scale_state, any_finite
 
 
 def make_context(
@@ -110,10 +177,13 @@ def make_context(
     theta,
     base_opt_state,
     g_base,
+    loss_scale=None,
 ) -> MethodContext:
     """Assemble the MethodContext a hypergradient method consumes. Shared by
     the Engine step and the distributed schedule so both hand methods the
-    exact same view of the unroll."""
+    exact same view of the unroll. ``loss_scale`` (the POST-unroll dynamic
+    scale under an f16 policy) lets methods protect their own backward
+    passes — see MethodContext.loss_scale."""
 
     return MethodContext(
         base_opt=base_opt,
@@ -125,6 +195,7 @@ def make_context(
         base_batches=base_batches,
         last_batch=jax.tree_util.tree_map(lambda x: x[-1], base_batches),
         meta_batch=meta_batch,
+        loss_scale=loss_scale,
     )
 
 
@@ -143,37 +214,86 @@ def step_metrics(method: HypergradMethod, terms, hyper, base_losses) -> Dict[str
     return metrics
 
 
+def guarded_meta_update(meta_opt: Optimizer, hyper, theta_post, state: EngineState,
+                        *, theta_pre, guard: bool, base_ok=None):
+    """The meta-level update, optionally gated on finiteness: under a
+    loss-scaling policy the hypergradient path (low-precision CD passes)
+    can overflow, and a single non-finite meta step would poison lam and
+    the nudged theta permanently. With ``guard`` the whole meta update
+    (lam, meta moments, AND the finalize post-update of theta) is skipped
+    for that step — the meta-level analogue of the base unroll's
+    skip-on-nonfinite. ``base_ok`` (the unroll's any-finite flag) is ANDed
+    in: when EVERY base step skipped, g_base is the zero init and the
+    hypergradient is finite garbage. Shared by the Engine step and the
+    manual schedule so the semantics cannot diverge.
+
+    Returns ``(lam, m_state, theta_post, finite)``; ``finite`` is None
+    when unguarded, else the gate — callers feed it to
+    ``policy.backoff_on`` so the loss-scale automaton OBSERVES
+    hypergradient overflow (otherwise a persistently-overflowing meta
+    path would skip forever with no backoff)."""
+
+    upd, m_state = meta_opt.update(hyper, state.meta_opt_state, state.lam)
+    lam = apply_updates(state.lam, upd)
+    if not guard:
+        return lam, m_state, theta_post, None
+    finite = policy_mod.all_finite({"hyper": hyper, "theta": theta_post})
+    if base_ok is not None:
+        finite = jnp.logical_and(finite, base_ok)
+    lam = policy_mod.select_tree(finite, lam, state.lam)
+    m_state = policy_mod.select_tree(finite, m_state, state.meta_opt_state)
+    theta_post = policy_mod.select_tree(finite, theta_post, theta_pre)
+    return lam, m_state, theta_post, finite
+
+
 def make_meta_step(
     spec: BilevelSpec,
     base_opt: Optimizer,
     meta_opt: Optimizer,
     cfg: EngineConfig = EngineConfig(),
 ) -> Callable[[EngineState, Any, Any], Tuple[EngineState, Dict[str, jnp.ndarray]]]:
-    """Build the pure, method-agnostic meta-step function."""
+    """Build the pure, method-agnostic meta-step function. ``cfg.scale``
+    applies the precision policy's cast boundary to BOTH levels (the spec
+    is wrapped once, so the unroll and the hypergradient path see the same
+    boundary) and microbatch accumulation to every batch-sized backward
+    pass (repro.scale.accum)."""
 
     method = cfg.resolve()
+    policy = cfg.scale.resolve()
+    spec = policy_mod.apply_to_spec(spec, policy)
+    micro = cfg.scale.microbatch
 
     def meta_step(state: EngineState, base_batches, meta_batch):
-        theta, b_state, g_base, st_at_g, base_losses = _unroll_base(
-            spec, base_opt, state.theta, state.base_opt_state, state.lam, base_batches
+        (theta, b_state, g_base, st_at_g, base_losses, scale_state,
+         base_ok) = _unroll_base(
+            spec, base_opt, state.theta, state.base_opt_state, state.lam,
+            base_batches, scale_cfg=cfg.scale, scale_state=state.scale,
         )
         ctx = make_context(
             base_opt, state, base_batches, meta_batch,
             theta=theta, base_opt_state=st_at_g, g_base=g_base,
+            loss_scale=scale_state.scale if scale_state is not None else None,
         )
-        terms = methods_mod.validate_terms(method, method.local_terms(spec, ctx))
+        terms = methods_mod.validate_terms(
+            method, accum_mod.microbatch_local_terms(method, spec, ctx, micro,
+                                                     policy.accum_jnp))
         # single-device / pjit path: identity reduce between stages 2 and 3
-        hyper, theta = method.finalize(terms, ctx)
+        hyper, theta_post = method.finalize(terms, ctx)
 
-        upd, m_state = meta_opt.update(hyper, state.meta_opt_state, state.lam)
-        lam = apply_updates(state.lam, upd)
+        lam, m_state, theta_post, meta_ok = guarded_meta_update(
+            meta_opt, hyper, theta_post, state,
+            theta_pre=theta, guard=policy.dynamic_scaling, base_ok=base_ok,
+        )
+        if meta_ok is not None:  # hypergrad overflow must back the scale off
+            scale_state = policy_mod.backoff_on(scale_state, meta_ok, policy)
 
         new_state = EngineState(
-            theta=theta,
+            theta=theta_post,
             base_opt_state=b_state,
             lam=lam,
             meta_opt_state=m_state,
             step=state.step + 1,
+            scale=scale_state,
         )
         return new_state, step_metrics(method, terms, hyper, base_losses)
 
@@ -210,7 +330,8 @@ class Engine:
         self.step_fn = jax.jit(step) if jit else step
 
     def init(self, theta, lam) -> EngineState:
-        return init_state(theta, lam, self.base_opt, self.meta_opt)
+        return init_state(theta, lam, self.base_opt, self.meta_opt,
+                          scale=self.cfg.scale)
 
     def run(self, state: EngineState, batch_iter, num_meta_steps: int, log_every: int = 0):
         """batch_iter yields (base_batches[K], meta_batch)."""

@@ -84,6 +84,12 @@ class MethodContext:
     base_batches: Any  # full unroll batches, leading axis K
     last_batch: Any  # base_batches[-1]
     meta_batch: Any
+    #: live dynamic loss scale (scalar) under an f16 policy, else None.
+    #: Methods that differentiate through the low-precision spec SHOULD
+    #: scale their losses by it before the backward pass and unscale the
+    #: results (SAMA does, both plain and microbatched) so cotangents stay
+    #: representable in the compute dtype — see repro.scale.policy.
+    loss_scale: Optional[Any] = None
 
 
 class HypergradMethod:

@@ -12,6 +12,8 @@ from __future__ import annotations
 
 import dataclasses
 
+import jax
+
 from repro.core import sama as sama_mod
 from repro.core.methods.base import (
     HypergradMethod,
@@ -35,11 +37,11 @@ class SAMAMethod(HypergradMethod):
         meta_loss, v, v_sumsq = sama_mod.perturbation_direction(
             spec, ctx.theta, ctx.lam, ctx.meta_batch,
             base_opt=ctx.base_opt, base_opt_state=ctx.base_opt_state,
-            g_base=ctx.g_base, cfg=self.cfg,
+            g_base=ctx.g_base, cfg=self.cfg, loss_scale=ctx.loss_scale,
         )
         hyper, eps = sama_mod.central_difference_hypergrad(
             spec, ctx.theta, ctx.lam, ctx.last_batch, v, cfg=self.cfg,
-            v_sumsq=v_sumsq,
+            v_sumsq=v_sumsq, loss_scale=ctx.loss_scale,
         )
         return {"hypergrad": hyper, "meta_loss": meta_loss, "v": v, "eps": eps}
 
@@ -49,6 +51,62 @@ class SAMAMethod(HypergradMethod):
 
     def metrics(self, terms: LocalTerms):
         return {"eps": terms["eps"]}
+
+    def micro_local_terms(self, spec, ctx: MethodContext, m: int, accum_dtype) -> LocalTerms:
+        """The EXACT M-way microbatched SAMA stage 1 (repro.scale.accum
+        calls this instead of the generic virtual-shard average).
+
+        Every nonlinearity in SAMA's local terms sits BETWEEN two
+        batch-linear passes, so staging the accumulation around it
+        reproduces the full-batch estimator exactly (up to f32 reduction
+        order — pinned by tests/test_scale.py):
+
+        stage A (linear): accumulate ``(meta_loss, g_meta)`` over M meta
+          microbatches — mean of equal-slice gradients == full-batch
+          gradient;
+        stage B (local):  ``v = du/dg .* g_meta`` and ``eps = alpha/||v||``
+          once, from the ACCUMULATED g_meta (this is where the
+          virtual-shard average would differ: it takes a per-microbatch
+          eps);
+        stage C (linear): accumulate the central-difference delta
+          ``grad_lam L(theta+) - grad_lam L(theta-)`` over M last-batch
+          microbatches at the ONE (theta+, theta-) pair from stage B.
+
+        Peak memory: every model-sized backward pass (meta pass and both
+        CD passes) now sees a batch/M slice."""
+
+        from repro.scale import accum  # scale sits above core; import here
+
+        meta_split = accum.split_batch(ctx.meta_batch, m)
+        vg = sama_mod.scaled_value_and_grad(spec.meta_scalar, 0, ctx.loss_scale)
+
+        def meta_term(mb):
+            loss, g = vg(ctx.theta, ctx.lam, mb)
+            return {"meta_loss": loss, "g_meta": g}
+
+        acc = accum.accumulate_mean(meta_term, meta_split, m, accum_dtype)
+        meta_loss, g_meta = acc["meta_loss"], acc["g_meta"]
+        # master params may be lower-precision in exotic setups; the
+        # adaptation kernels expect g_meta in the gradient dtype
+        g_meta = jax.tree_util.tree_map(
+            lambda g, t: g.astype(t.dtype), g_meta, ctx.theta)
+
+        v, v_sumsq = sama_mod.adaptation_product(
+            ctx.base_opt, ctx.base_opt_state, ctx.theta, ctx.g_base, g_meta,
+            self.cfg)
+        eps = sama_mod.step_size(v, v_sumsq, self.cfg)
+        theta_p, theta_m = sama_mod.perturbed_params(ctx.theta, v, eps)
+
+        last_split = accum.split_batch(ctx.last_batch, m)
+
+        def cd_term(mb):
+            return sama_mod.central_difference_delta(
+                spec, theta_p, theta_m, ctx.lam, mb,
+                loss_scale=ctx.loss_scale)
+
+        delta = accum.accumulate_mean(cd_term, last_split, m, accum_dtype)
+        hyper = jax.tree_util.tree_map(lambda d: -d / (2.0 * eps), delta)
+        return {"hypergrad": hyper, "meta_loss": meta_loss, "v": v, "eps": eps}
 
 
 @register_method("sama")

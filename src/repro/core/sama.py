@@ -70,6 +70,47 @@ def global_norm(tree: PyTree) -> jnp.ndarray:
     return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves))
 
 
+def adaptation_product(
+    base_opt: Optimizer,
+    base_opt_state: OptState,
+    theta: PyTree,
+    g_base: Optional[PyTree],
+    g_meta: PyTree,
+    cfg: SAMAConfig,
+):
+    """The (analytic, backprop-free) adaptation product ``v = du/dg .*
+    g_meta`` from an ALREADY-COMPUTED meta gradient — the piece of
+    ``perturbation_direction`` that is independent of how g_meta was
+    obtained (one meta pass, or microbatch-accumulated by
+    ``repro.scale.accum``).
+
+    Returns ``(v, v_sumsq)``. ``v_sumsq`` is ``sum(v^2)`` when it came for
+    free from the fused kernel path (``Optimizer.adapt_product``, DESIGN.md
+    §10) and ``None`` otherwise — callers fall back to ``global_norm(v)``.
+    The fused path is skipped under ``adapt_clip`` (clipping applies to the
+    raw diagonal, which the fused kernels never materialize) and for
+    optimizers without a registered kernel."""
+
+    if not cfg.adapt:
+        return g_meta, None
+    if g_base is None:
+        raise ValueError("algorithmic adaptation needs the last base gradient g_base")
+    if base_opt.adapt_product is not None and not cfg.adapt_clip:
+        return base_opt.adapt_product(g_base, base_opt_state, theta, g_meta)
+    a = base_opt.adaptation(g_base, base_opt_state, theta)
+    if cfg.adapt_clip:
+        a = _tmap(lambda ai: jnp.clip(ai, -cfg.adapt_clip, cfg.adapt_clip), a)
+    return _tmap(lambda ai, gi: ai * gi, a, g_meta), None
+
+
+def step_size(v: PyTree, v_sumsq: Optional[jnp.ndarray], cfg: SAMAConfig) -> jnp.ndarray:
+    """eps = alpha / ||v|| (DARTS-style), floored. ``v_sumsq`` (from the
+    fused adaptation kernel) skips the separate global_norm pass."""
+
+    norm = jnp.sqrt(v_sumsq) if v_sumsq is not None else global_norm(v)
+    return cfg.alpha / jnp.maximum(norm, cfg.eps_floor)
+
+
 def perturbation_direction(
     spec: BilevelSpec,
     theta: PyTree,
@@ -80,30 +121,37 @@ def perturbation_direction(
     base_opt_state: OptState,
     g_base: Optional[PyTree],
     cfg: SAMAConfig,
+    loss_scale: Optional[jnp.ndarray] = None,
 ):
-    """Backward pass 1 + the (analytic, backprop-free) adaptation product.
+    """Backward pass 1 + ``adaptation_product``. Returns
+    ``(meta_loss, v, v_sumsq)`` — see ``adaptation_product`` for the
+    v_sumsq contract. ``loss_scale`` (under an f16 policy) multiplies the
+    meta loss before its backward pass so low-precision cotangents stay
+    representable; the returned loss and gradient are unscaled."""
 
-    Returns ``(meta_loss, v, v_sumsq)``. ``v_sumsq`` is ``sum(v^2)`` when it
-    came for free from the fused kernel path (``Optimizer.adapt_product``,
-    DESIGN.md §10) and ``None`` otherwise — callers fall back to
-    ``global_norm(v)``. The fused path is skipped under ``adapt_clip``
-    (clipping applies to the raw diagonal, which the fused kernels never
-    materialize) and for optimizers without a registered kernel."""
+    meta_loss, g_meta = scaled_value_and_grad(spec.meta_scalar, 0, loss_scale)(
+        theta, lam, meta_batch)
+    v, v_sumsq = adaptation_product(base_opt, base_opt_state, theta, g_base, g_meta, cfg)
+    return meta_loss, v, v_sumsq
 
-    meta_loss, g_meta = jax.value_and_grad(spec.meta_scalar, argnums=0)(theta, lam, meta_batch)
-    if cfg.adapt:
-        if g_base is None:
-            raise ValueError("algorithmic adaptation needs the last base gradient g_base")
-        if base_opt.adapt_product is not None and not cfg.adapt_clip:
-            v, v_sumsq = base_opt.adapt_product(g_base, base_opt_state, theta, g_meta)
-            return meta_loss, v, v_sumsq
-        a = base_opt.adaptation(g_base, base_opt_state, theta)
-        if cfg.adapt_clip:
-            a = _tmap(lambda ai: jnp.clip(ai, -cfg.adapt_clip, cfg.adapt_clip), a)
-        v = _tmap(lambda ai, gi: ai * gi, a, g_meta)
-    else:
-        v = g_meta
-    return meta_loss, v, None
+
+def scaled_value_and_grad(loss_fn, argnums: int, loss_scale: Optional[jnp.ndarray]):
+    """``value_and_grad`` with the dynamic loss scale applied INSIDE the
+    differentiated function (so every cotangent in the low-precision
+    region carries the scale) and divided back out of both results.
+    Identity wrapper when ``loss_scale`` is None."""
+
+    if loss_scale is None:
+        return jax.value_and_grad(loss_fn, argnums=argnums)
+
+    def scaled(*args):
+        return loss_fn(*args) * loss_scale
+
+    def call(*args):
+        loss, g = jax.value_and_grad(scaled, argnums=argnums)(*args)
+        return loss / loss_scale, _tmap(lambda x: x / loss_scale, g)
+
+    return call
 
 
 def central_difference_hypergrad(
@@ -115,6 +163,7 @@ def central_difference_hypergrad(
     *,
     cfg: SAMAConfig,
     v_sumsq: Optional[jnp.ndarray] = None,
+    loss_scale: Optional[jnp.ndarray] = None,
 ):
     """Backward passes 2+3: the finite-difference mixed second derivative
 
@@ -125,14 +174,44 @@ def central_difference_hypergrad(
     skips the separate ``global_norm`` pass over v when provided.
     """
 
-    norm = jnp.sqrt(v_sumsq) if v_sumsq is not None else global_norm(v)
-    eps = cfg.alpha / jnp.maximum(norm, cfg.eps_floor)
+    eps = step_size(v, v_sumsq, cfg)
+    theta_p, theta_m = perturbed_params(theta, v, eps)
+    delta = central_difference_delta(spec, theta_p, theta_m, lam, base_batch,
+                                     loss_scale=loss_scale)
+    hyper = _tmap(lambda d: -d / (2.0 * eps), delta)
+    return hyper, eps
+
+
+def perturbed_params(theta: PyTree, v: PyTree, eps: jnp.ndarray):
+    """(theta + eps v, theta - eps v), cast per leaf to theta's dtype."""
+
     theta_p = _tmap(lambda t, vi: t + eps * vi.astype(t.dtype), theta, v)
     theta_m = _tmap(lambda t, vi: t - eps * vi.astype(t.dtype), theta, v)
-    gl_p = jax.grad(spec.base_scalar, argnums=1)(theta_p, lam, base_batch)
-    gl_m = jax.grad(spec.base_scalar, argnums=1)(theta_m, lam, base_batch)
-    hyper = _tmap(lambda p, m: -(p - m) / (2.0 * eps), gl_p, gl_m)
-    return hyper, eps
+    return theta_p, theta_m
+
+
+def central_difference_delta(spec: BilevelSpec, theta_p, theta_m, lam, base_batch,
+                             *, loss_scale: Optional[jnp.ndarray] = None):
+    """``grad_lam L_base(theta+) - grad_lam L_base(theta-)`` on ONE batch —
+    backward passes 2+3. Linear in the batch mean, so microbatch
+    accumulation of this delta (repro.scale.accum) reproduces the
+    full-batch value exactly; the 1/(2 eps) scaling happens once in the
+    caller. ``loss_scale`` scales both backward passes (f16 cotangent
+    protection) and is divided back out of the returned delta — which
+    lands in the f32 lam-gradient domain, so the unscale is exact."""
+
+    if loss_scale is None:
+        scalar = spec.base_scalar
+    else:
+        def scalar(th, la, b):
+            return spec.base_scalar(th, la, b) * loss_scale
+
+    gl_p = jax.grad(scalar, argnums=1)(theta_p, lam, base_batch)
+    gl_m = jax.grad(scalar, argnums=1)(theta_m, lam, base_batch)
+    delta = _tmap(lambda p, m: p - m, gl_p, gl_m)
+    if loss_scale is not None:
+        delta = _tmap(lambda d: d / loss_scale, delta)
+    return delta
 
 
 def sama_hypergrad(

@@ -367,6 +367,7 @@ def fit_meta(
     ema_decay: float = 0.0,
     score_every: int = 10,
     schedule: str = "auto",
+    scale: Optional[Any] = None,  # repro.scale.ScaleConfig
     learner_kwargs: Optional[Dict[str, Any]] = None,
 ) -> Tuple[MetaLearner, Optional[EMATracker], Optional[EMATracker]]:
     """Meta-train MetaWeightNet (+ optional label corrector) on ``ctx.train``
@@ -374,7 +375,11 @@ def fit_meta(
 
     A ``ctx.mesh`` is forwarded to the MetaLearner (its "auto" schedule
     picks the single-sync shard_map path), so meta-training shards exactly
-    like the scoring passes; ``learner_kwargs`` overrides it.
+    like the scoring passes; ``learner_kwargs`` overrides it. ``scale``
+    (a ``repro.scale.ScaleConfig``) applies a precision policy and/or
+    microbatch accumulation to the scoring meta-train — the way to fit a
+    big scorer model into a device: scores don't change (SAMA's
+    microbatched estimator is exact in f32) but peak memory drops ~M-fold.
 
     With ``ema_decay > 0``, every ``score_every`` meta steps the full train
     set is re-scored (sharded when ctx.mesh is set) and two EMAs advance:
@@ -392,6 +397,8 @@ def fit_meta(
         use_uncertainty=use_uncertainty, num_classes=ctx.num_classes,
     )
     kwargs = {"mesh": ctx.mesh, **(learner_kwargs or {})}
+    if scale is not None:  # repro.scale knobs for the scoring meta-train
+        kwargs.setdefault("scale", scale)
     learner = MetaLearner(
         spec, base_opt="adam", base_lr=base_lr, meta_opt="adam", meta_lr=meta_lr,
         method=method, unroll_steps=unroll, schedule=schedule,

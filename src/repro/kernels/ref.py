@@ -57,9 +57,12 @@ def adam_adapt_math(g, m, v, g_meta, *, t, b1, b2, eps, lr):
     ``adaptation``/``adapt_product`` reach it through the dispatch
     registry's ``ref`` backend."""
 
-    t = jnp.asarray(t).astype(g.dtype)
-    bc1 = 1.0 - b1**t
-    bc2 = 1.0 - b2**t
+    # bias corrections in at-least-f32 (same fix as optim.adam.update):
+    # 1 - 0.999^t rounds to 0.0 in bf16, poisoning vhat/b with inf on
+    # sub-f32 trees; f32/f64 paths are bit-identical to computing in g.dtype
+    t = jnp.asarray(t).astype(jnp.promote_types(g.dtype, jnp.float32))
+    bc1 = (1.0 - b1**t).astype(g.dtype)
+    bc2 = (1.0 - b2**t).astype(g.dtype)
     m1 = b1 * m + (1.0 - b1) * g
     v1 = b2 * v + (1.0 - b2) * g * g
     mhat = m1 / bc1

@@ -45,12 +45,16 @@ from repro.core.bilevel import BilevelSpec
 from repro.core.engine import (
     EngineConfig,
     EngineState,
+    _unroll_base,
+    guarded_meta_update,
     make_context,
     make_meta_step,
     step_metrics,
 )
 from repro.launch.mesh import data_axes, shard_map
-from repro.optim import Optimizer, apply_updates
+from repro.optim import Optimizer
+from repro.scale import accum as accum_mod
+from repro.scale import policy as policy_mod
 
 PyTree = Any
 
@@ -81,6 +85,30 @@ def tree_pmean(tree: PyTree, axes) -> PyTree:
     it as several fused all-reduce ops, which its combiner can overlap."""
 
     return jax.lax.pmean(tree, axes)
+
+
+def cast_for_reduce(tree: PyTree) -> PyTree:
+    """Promote ONLY sub-f32 float leaves (bf16/f16) to f32 before an
+    all-reduce; f32/f64 and integer leaves pass through untouched (f32
+    identity leaves keep their object identity — pinned by tests).
+
+    Two reasons, both pinned by tests/test_scale_distributed.py:
+    1. XLA's AllReducePromotion pass crashes on bf16 VARIADIC all-reduce
+       on the CPU backend — a sub-f32 leaf in the reduce bucket must not
+       reach the collective at its narrow dtype;
+    2. reduction accuracy: accumulating a cross-replica mean in bf16 loses
+       the benefit of the f32 master params (this is also what PyTorch DDP
+       does for low-precision buckets).
+
+    Callers cast the reduced result back per leaf where the consumer is
+    dtype-sensitive."""
+
+    def one(x):
+        if jnp.issubdtype(x.dtype, jnp.inexact) and x.dtype.itemsize < 4:
+            return x.astype(jnp.float32)
+        return x
+
+    return jax.tree_util.tree_map(one, tree)
 
 
 def make_pjit_step(spec: BilevelSpec, base_opt, meta_opt, cfg: EngineConfig):
@@ -125,6 +153,9 @@ def make_manual_step(
             auto_extent *= mesh.shape[a]
     bucket_pmean = flat_pmean if auto_extent == 1 else tree_pmean
     method = cfg.resolve()
+    policy = cfg.scale.resolve()
+    spec = policy_mod.apply_to_spec(spec, policy)
+    micro = cfg.scale.microbatch
     contract = method.reduce_contract
     if not contract.linear and not allow_nonlinear:
         raise ValueError(
@@ -134,49 +165,57 @@ def make_manual_step(
             "local-solve approximation, or use the pjit path."
         )
 
+    def ddp_grad_reduce(g_loc):
+        """The per-base-step DDP sync: one bucketed pmean over the data
+        axes, sub-f32 leaves promoted for the collective and restored
+        after. With microbatch accumulation this runs on the ACCUMULATED
+        gradient — one all-reduce per base step for every M."""
+
+        g_red = bucket_pmean(cast_for_reduce(g_loc), dp)
+        return jax.tree_util.tree_map(lambda r, gl: r.astype(gl.dtype), g_red, g_loc)
+
     def local_step(state: EngineState, base_batches, meta_batch):
-        theta, b_state, lam = state.theta, state.base_opt_state, state.lam
+        lam = state.lam
 
-        # ---- base unroll: standard DDP (one pmean per base step) ----
-        g0 = jax.tree_util.tree_map(jnp.zeros_like, theta)
-
-        def base_one(carry, batch):
-            th, st, _, _ = carry
-            loss, g_loc = jax.value_and_grad(spec.base_scalar, argnums=0)(th, lam, batch)
-            g32 = bucket_pmean(jax.tree_util.tree_map(lambda gl: gl.astype(jnp.float32), g_loc), dp)
-            g = jax.tree_util.tree_map(lambda r, gl: r.astype(gl.dtype), g32, g_loc)
-            upd, st_new = base_opt.update(g, st, th)
-            return (apply_updates(th, upd), st_new, g, st), loss
-
-        (theta, b_state, g_base, st_at_g), losses = jax.lax.scan(
-            base_one, (theta, b_state, g0, b_state), base_batches
+        # ---- base unroll: standard DDP (one pmean per base step), shared
+        # with the Engine path — microbatch accumulation, precision casts
+        # and loss-scale skip semantics are engine._unroll_base's ----
+        (theta, b_state, g_base, st_at_g, losses, scale_state,
+         base_ok) = _unroll_base(
+            spec, base_opt, state.theta, state.base_opt_state, lam,
+            base_batches, scale_cfg=cfg.scale, scale_state=state.scale,
+            grad_reduce=ddp_grad_reduce,
         )
 
         # ---- method stage 1: strictly LOCAL terms (no collective) ----
         ctx = make_context(
             base_opt, state, base_batches, meta_batch,
             theta=theta, base_opt_state=st_at_g, g_base=g_base,
+            loss_scale=scale_state.scale if scale_state is not None else None,
         )
-        terms = methods_mod.validate_terms(method, method.local_terms(spec, ctx))
+        terms = methods_mod.validate_terms(
+            method, accum_mod.microbatch_local_terms(method, spec, ctx, micro,
+                                                     policy.accum_jnp))
 
         # ---- THE single synchronization point (one bucketed all-reduce) ----
         # Exactly the contract's terms ride the bucket, plus the scalar
-        # base-loss metric so logging costs no extra sync.
-        # (f32 cast: XLA's AllReducePromotion pass crashes on bf16 variadic
-        # all-reduce on the CPU backend; on TPU this cast is also what DDP
-        # implementations do for reduction accuracy.)
+        # base-loss metric so logging costs no extra sync. cast_for_reduce
+        # promotes only sub-f32 leaves (see its docstring for why).
         bucket = {k: terms[k] for k in contract.terms}
         bucket["__base_loss__"] = jnp.mean(losses)
-        bucket = jax.tree_util.tree_map(lambda x: x.astype(jnp.float32), bucket)
-        reduced = bucket_pmean(bucket, dp)
+        reduced = bucket_pmean(cast_for_reduce(bucket), dp)
         base_loss = reduced.pop("__base_loss__")
         terms = dict(terms, **reduced)
 
         # ---- method stage 3: finalize on replica-consistent terms ----
-        hyper, theta = method.finalize(terms, ctx)
+        hyper, theta_post = method.finalize(terms, ctx)
 
-        upd, m_state = meta_opt.update(hyper, state.meta_opt_state, lam)
-        lam = apply_updates(lam, upd)
+        lam, m_state, theta_post, meta_ok = guarded_meta_update(
+            meta_opt, hyper, theta_post, state,
+            theta_pre=theta, guard=policy.dynamic_scaling, base_ok=base_ok,
+        )
+        if meta_ok is not None:  # hypergrad overflow must back the scale off
+            scale_state = policy_mod.backoff_on(scale_state, meta_ok, policy)
 
         metrics = step_metrics(method, terms, hyper, losses)
         metrics["base_loss"] = base_loss
@@ -184,8 +223,8 @@ def make_manual_step(
         # out_specs are static); extra per-method metrics live on the Engine path
         metrics = {k: metrics[k] for k in METRIC_KEYS}
         new_state = EngineState(
-            theta=theta, base_opt_state=b_state, lam=lam,
-            meta_opt_state=m_state, step=state.step + 1,
+            theta=theta_post, base_opt_state=b_state, lam=lam,
+            meta_opt_state=m_state, step=state.step + 1, scale=scale_state,
         )
         return new_state, metrics
 

@@ -27,8 +27,7 @@ from repro.launch.mesh import make_production_mesh
 from repro.roofline import analyze
 from repro.roofline.analysis import cost_analysis_dict
 from repro.models import transformer as tf
-
-import jax.numpy as jnp
+from repro.models.common import dtype_of
 
 OUT_DIR = "experiments/dryrun"
 
@@ -74,8 +73,11 @@ def run_job(arch: str, shape_name: str, *, multi_pod: bool = False, save: bool =
             param_shapes = jax.eval_shape(lambda: tf.init_params(dry_cfg, jax.random.PRNGKey(0)))
             cache_shapes = None
             if job.kind == "decode":
+                # cache dtype follows the dry-run config's activation dtype
+                # through the one resolver (models.common.dtype_of)
                 cache_shapes = jax.eval_shape(
-                    lambda: tf.init_cache(dry_cfg, shape.global_batch, shape.seq_len, jnp.bfloat16)
+                    lambda: tf.init_cache(dry_cfg, shape.global_batch, shape.seq_len,
+                                          dtype_of(dry_cfg.dtype))
                 )
             roof = analyze(
                 job.name, compiled, compiled.as_text(), dry_cfg, shape, job.kind,

@@ -28,6 +28,7 @@ from repro.configs import ArchConfig, InputShape
 from repro.core import EngineConfig, init_state, make_meta_step, problems
 from repro.launch import sharding as sh
 from repro.models import Model, transformer as tf
+from repro.models.common import dtype_of
 
 PyTree = Any
 
@@ -86,7 +87,10 @@ def _batch_shapes(cfg: ArchConfig, batch: int, seq: int, *, unroll: Optional[int
         return (unroll,) + shape if unroll is not None else shape
 
     b = {"tokens": jax.ShapeDtypeStruct(lead((batch, seq)), jnp.int32)}
-    act = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    # activation dtype follows cfg.dtype through the ONE resolver
+    # (models.common.dtype_of) — the old bfloat16-or-f32 ternary silently
+    # promoted float16 configs' activations to f32
+    act = dtype_of(cfg.dtype)
     if cfg.family == "vlm":
         b["patches"] = jax.ShapeDtypeStruct(lead((batch, cfg.vision_tokens, cfg.vision_dim)), act)
     if cfg.family == "audio":
@@ -141,7 +145,7 @@ def make_train_job(cfg: ArchConfig, shape: InputShape, mesh, *, engine_cfg: Opti
     def build_state():
         theta = tf.init_params(cfg, key)
         lam = problems.init_data_optimization_lam(jax.random.PRNGKey(1), reweight=True)
-        return init_state(theta, lam, base_opt, meta_opt)
+        return init_state(theta, lam, base_opt, meta_opt, scale=engine_cfg.scale)
 
     state_shapes = jax.eval_shape(build_state)
 
@@ -160,6 +164,7 @@ def make_train_job(cfg: ArchConfig, shape: InputShape, mesh, *, engine_cfg: Opti
         lam=jax.tree_util.tree_map(lambda _: P(), state_shapes.lam),
         meta_opt_state=jax.tree_util.tree_map(lambda _: P(), state_shapes.meta_opt_state),
         step=P(),
+        scale=jax.tree_util.tree_map(lambda _: P(), state_shapes.scale),
     )
     state_sds = _sds(state_shapes, mesh, state_specs)
 

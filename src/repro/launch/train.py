@@ -1,7 +1,8 @@
 """End-to-end SAMA training driver, on the MetaLearner facade.
 
     PYTHONPATH=src python -m repro.launch.train --arch gemma3-1b --smoke \
-        --steps 50 --method sama [--manual-collectives] [--ckpt out/ck]
+        --steps 50 --method sama [--manual-collectives] [--ckpt out/ck] \
+        [--precision bf16] [--microbatch 4 | --hbm-budget-gb 8]
 
 Wires together: config registry -> synthetic noisy LM data -> Model ->
 data-optimization BilevelSpec -> ``repro.api.MetaLearner`` (which owns the
@@ -9,6 +10,11 @@ Engine or the single-sync shard_map schedule + checkpointing). On the CPU
 container use --smoke; on a TPU cluster the same script runs the full
 config on the production mesh. ``--method`` accepts any registered
 hypergradient method, including third-party registrations.
+
+repro.scale knobs: ``--precision`` picks the policy (f32/bf16/f16),
+``--microbatch`` forces an accumulation factor, and ``--hbm-budget-gb``
+asks the memory planner (``repro.scale.plan_microbatch``) to pick the
+smallest M whose compiled step fits that per-device budget instead.
 """
 
 from __future__ import annotations
@@ -21,7 +27,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro import api, configs, data
+from repro import api, configs, data, scale
 from repro.core import available_methods, problems
 from repro.launch.mesh import make_host_mesh, make_production_mesh
 from repro.models import Model
@@ -43,6 +49,14 @@ def main():
     ap.add_argument("--production-mesh", action="store_true")
     ap.add_argument("--ckpt", default=None)
     ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--precision", default="f32", choices=sorted(scale.POLICIES),
+                    help="repro.scale precision policy")
+    ap.add_argument("--microbatch", type=int, default=1,
+                    help="accumulate each base batch as M microbatches")
+    ap.add_argument("--hbm-budget-gb", type=float, default=None,
+                    help="let repro.scale.plan_microbatch pick the smallest M "
+                         "whose compiled step fits this per-device budget "
+                         "(overrides --microbatch)")
     args = ap.parse_args()
 
     cfg = configs.get_smoke_config(args.arch) if args.smoke else configs.get_config(args.arch)
@@ -53,8 +67,8 @@ def main():
         model.classifier_per_example if cfg.family == "encoder" else model.per_example,
         reweight=True,
     )
-    learner = api.MetaLearner(
-        spec,
+    scale_cfg = scale.ScaleConfig(policy=args.precision, microbatch=args.microbatch)
+    learner_args = dict(
         base_opt="adam", base_lr=args.base_lr,
         meta_opt="adam", meta_lr=args.meta_lr,
         method=args.method, unroll_steps=args.unroll,
@@ -62,17 +76,17 @@ def main():
         schedule="single_sync" if args.manual_collectives else "pjit",
         checkpoint_dir=args.ckpt,
     )
+    learner = api.MetaLearner(spec, scale=scale_cfg, **learner_args)
 
     theta = model.init(jax.random.PRNGKey(0))
     lam = problems.init_data_optimization_lam(jax.random.PRNGKey(1), reweight=True)
     learner.init(theta, lam)
-    print(f"arch={cfg.name} params={model.num_params(theta):,} method={args.method} "
-          f"schedule={learner.schedule} mesh={dict(zip(mesh.axis_names, mesh.devices.shape))}")
 
     lm_cfg = data.LMStreamConfig(vocab_size=cfg.vocab_size, seq_len=args.seq)
-    rng = np.random.default_rng(0)
+    train_rng = np.random.default_rng(0)
 
-    def make_batch(batch, unroll=None):
+    def make_batch(batch, unroll=None, rng=None):
+        rng = rng if rng is not None else train_rng
         shape_batch = batch * (unroll or 1)
         b = data.lm_batch(lm_cfg, rng, shape_batch)
         toks = b["tokens"].reshape((unroll, batch, args.seq) if unroll else (batch, args.seq))
@@ -87,6 +101,32 @@ def main():
             yshape = (unroll, batch) if unroll else (batch,)
             out["y"] = jnp.asarray(rng.integers(0, cfg.num_labels, size=yshape), jnp.int32)
         return out
+
+    if args.hbm_budget_gb is not None:
+        # plan on the learner's own batch SHAPES with a throwaway RNG so the
+        # training data stream is identical to a --microbatch run (the
+        # planner compiles candidates; nothing trains yet)
+        plan_rng = np.random.default_rng(0)
+        plan = scale.plan_microbatch(
+            spec, learner.base_opt, learner.meta_opt, learner.cfg,
+            learner.state, make_batch(args.batch, args.unroll, rng=plan_rng),
+            make_batch(max(args.batch // 2, 1), rng=plan_rng),
+            hbm_budget=int(args.hbm_budget_gb * 2 ** 30),
+            mesh=mesh if args.manual_collectives else None,
+            schedule="single_sync" if args.manual_collectives else "pjit",
+        )
+        peak_mb = plan.peak_bytes / 2 ** 20 if plan.peak_bytes is not None else float("nan")
+        print(f"planner: microbatch={plan.microbatch} fits={plan.fits} "
+              f"peak={peak_mb:.1f}MB budget={args.hbm_budget_gb}GB source={plan.source}")
+        if plan.microbatch != scale_cfg.microbatch:
+            scale_cfg = plan.scale
+            learner = api.MetaLearner(spec, scale=scale_cfg, **learner_args)
+            learner.init(theta, lam)
+
+    print(f"arch={cfg.name} params={model.num_params(theta):,} method={args.method} "
+          f"schedule={learner.schedule} precision={args.precision} "
+          f"microbatch={scale_cfg.microbatch} "
+          f"mesh={dict(zip(mesh.axis_names, mesh.devices.shape))}")
 
     t0 = time.time()
     for i in range(args.steps):

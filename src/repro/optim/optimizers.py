@@ -213,9 +213,15 @@ def adam(
         nu = _tmap(lambda v, g: b2 * v + (1.0 - b2) * g * g, state.nu, grads)
 
         def one(m1, v1, g, p):
-            t = (state.count + 1).astype(g.dtype)
-            mhat = m1 / (1.0 - jnp.power(b1, t))
-            vhat = v1 / (1.0 - jnp.power(b2, t))
+            # bias corrections in at-least-f32: in bf16, 1 - 0.999^t rounds
+            # to 0.0 (8 mantissa bits), making vhat 0/0=NaN on zero-gradient
+            # coordinates and silently zeroing early updates otherwise
+            # (f32/f64 paths are bit-identical to computing in g.dtype)
+            t = (state.count + 1).astype(jnp.promote_types(g.dtype, jnp.float32))
+            bc1 = (1.0 - jnp.power(b1, t)).astype(g.dtype)
+            bc2 = (1.0 - jnp.power(b2, t)).astype(g.dtype)
+            mhat = m1 / bc1
+            vhat = v1 / bc2
             step = step_lr * mhat / (jnp.sqrt(vhat) + eps)
             if weight_decay:
                 step = step + step_lr * weight_decay * p
@@ -401,7 +407,9 @@ def _adafactor_stats(g, nu_leaf, t, b2, eps1):
     means (O(r+c) state); everything else keeps the full moment."""
 
     g2 = g * g + eps1
-    bc2 = 1.0 - jnp.power(b2, t)
+    # at-least-f32 bias correction (see adam): 1 - b2^t rounds to 0 in bf16
+    bc2 = (1.0 - jnp.power(
+        b2, t.astype(jnp.promote_types(g.dtype, jnp.float32)))).astype(g.dtype)
     if "r" in nu_leaf:
         r1 = b2 * nu_leaf["r"] + (1.0 - b2) * jnp.mean(g2, axis=1)
         c1 = b2 * nu_leaf["c"] + (1.0 - b2) * jnp.mean(g2, axis=0)

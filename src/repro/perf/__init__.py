@@ -26,6 +26,7 @@ from repro.perf.memory import (
     compiled_memory,
     device_memory,
     memory_report,
+    tree_bytes,
 )
 from repro.perf.record import (
     SCHEMA_VERSION,
@@ -71,6 +72,6 @@ __all__ = [
     "bench_payload", "census", "census_of", "compare_dirs", "compare_record",
     "compile_split", "compiled_memory", "device_memory", "env_info",
     "load_bench", "measure", "memory_report", "profile_step", "time_callable",
-    "validate_bench", "validate_record", "verify_single_sync", "write_bench",
-    "write_json_atomic",
+    "tree_bytes", "validate_bench", "validate_record", "verify_single_sync",
+    "write_bench", "write_json_atomic",
 ]

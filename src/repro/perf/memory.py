@@ -13,6 +13,9 @@ every consumer must tolerate the fallback chain:
     memory_analysis  ->  aval arithmetic (argument/output only, temp unknown)
 
 ``source`` on the returned stats says which path produced the numbers.
+Consumers that make DECISIONS on these numbers (the repro.scale
+``plan_microbatch`` HBM-budget search) key off ``source`` — planning is
+trustworthy under ``memory_analysis``, best-effort under the fallback.
 """
 
 from __future__ import annotations
@@ -44,7 +47,11 @@ class MemoryStats:
         return dataclasses.asdict(self)
 
 
-def _tree_bytes(tree) -> int:
+def tree_bytes(tree) -> int:
+    """Total bytes of every leaf (shape x itemsize; shape/dtype-only
+    leaves like ShapeDtypeStructs count too). Used for the aval fallback
+    here and by the repro.scale planner's activation estimate."""
+
     total = 0
     for leaf in jax.tree_util.tree_leaves(tree):
         shape = getattr(leaf, "shape", ())
@@ -85,8 +92,8 @@ def compiled_memory(compiled, *, example_args=None, example_out=None) -> MemoryS
             generated_code_bytes=code, alias_bytes=alias,
             peak_bytes=arg + out + temp - alias, source=SOURCE_COMPILED,
         )
-    arg = _tree_bytes(example_args) if example_args is not None else 0
-    out = _tree_bytes(example_out) if example_out is not None else 0
+    arg = tree_bytes(example_args) if example_args is not None else 0
+    out = tree_bytes(example_out) if example_out is not None else 0
     return MemoryStats(
         argument_bytes=arg, output_bytes=out, temp_bytes=None,
         generated_code_bytes=None, alias_bytes=None, peak_bytes=None,

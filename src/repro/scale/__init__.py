@@ -1,0 +1,72 @@
+"""repro.scale — microbatch accumulation, mixed-precision policies, and
+the HBM-budget memory planner for the SAMA hot path (DESIGN.md §11).
+
+The paper's "2.0/3.8x decrease in memory consumption" claim rides on
+first-order distributed-training machinery; this package is that
+machinery for the bilevel step:
+
+* ``policy``  — PrecisionPolicy (f32 master params / bf16 or loss-scaled
+  f16 compute / f32 accumulation) + ScaleConfig, the knob that rides on
+  ``EngineConfig`` and everything above it (MetaLearner, DataOptimizer
+  scoring, launch.train).
+* ``accum``   — collective-free microbatch accumulation for the base
+  unroll and the hypergradient stage; SAMA's linear reduce contract is
+  what lets it compose with the single-sync schedule at exactly
+  ``unroll_steps + 1`` all-reduces for every M.
+* ``plan``    — ``plan_microbatch``: binary-search the largest microbatch
+  that fits an HBM budget, measured on the compiled step via
+  ``repro.perf.memory`` (aval fallback where XLA gives no buffer
+  assignment).
+
+    from repro import scale
+    cfg = EngineConfig(method="sama", unroll_steps=2,
+                       scale=scale.ScaleConfig(policy="bf16", microbatch=4))
+    plan = scale.plan_microbatch(spec, base_opt, meta_opt, cfg, state,
+                                 bb, mb, hbm_budget=8 * 2**30)
+"""
+
+from repro.scale.accum import (
+    accumulate_mean,
+    microbatch_local_terms,
+    microbatch_value_and_grad,
+    split_batch,
+)
+from repro.scale.policy import (
+    POLICIES,
+    LossScaleState,
+    PrecisionPolicy,
+    ScaleConfig,
+    all_finite,
+    apply_to_spec,
+    backoff_on,
+    cast_floats,
+    init_scale_state,
+    resolve_policy,
+    select_tree,
+    update_scale,
+)
+
+#: planner symbols resolve lazily (PEP 562): policy+accum are CORE-level
+#: primitives (core.engine imports this package), while plan.py consumes
+#: repro.perf — eager import here would drag perf/roofline into every
+#: core consumer's import path and tighten the core<->scale cycle.
+_PLAN_EXPORTS = ("AVAL_ACTIVATION_MULTIPLIER", "ExecPlan",
+                 "candidate_microbatches", "measure_peak", "plan_microbatch")
+
+
+def __getattr__(name):
+    if name in _PLAN_EXPORTS:
+        from repro.scale import plan
+
+        return getattr(plan, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+__all__ = [
+    "AVAL_ACTIVATION_MULTIPLIER", "ExecPlan", "LossScaleState", "POLICIES",
+    "PrecisionPolicy", "ScaleConfig", "accumulate_mean", "all_finite",
+    "apply_to_spec", "backoff_on", "candidate_microbatches", "cast_floats",
+    "init_scale_state", "measure_peak", "microbatch_local_terms",
+    "microbatch_value_and_grad", "plan_microbatch", "resolve_policy",
+    "select_tree", "split_batch", "update_scale",
+]

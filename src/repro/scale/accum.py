@@ -1,0 +1,176 @@
+"""Microbatch gradient accumulation for the bilevel step (DESIGN.md §11).
+
+Splits a batch with leading dim B into M microbatches of B/M and runs the
+backward pass once per microbatch under ``lax.scan``, accumulating in the
+policy's ``accum_dtype`` — activation memory becomes O(B/M) while the
+arithmetic stays the full-batch mean. Three accumulation sites:
+
+1. the base unroll's per-step gradient (``microbatch_value_and_grad`` —
+   also where dynamic loss scaling applies: each microbatch loss is
+   multiplied by the live scale before its backward pass, the accumulated
+   gradient is unscaled once);
+2. the hypergradient stage (``microbatch_local_terms``): a method that
+   implements ``micro_local_terms`` gets the exact staged decomposition
+   (SAMA: accumulate g_meta over meta microbatches -> v/eps once ->
+   accumulate the central difference over last-batch microbatches, which
+   reproduces the full-batch estimator exactly in f32); otherwise a
+   LINEAR-contract method falls back to virtual-shard averaging — each
+   microbatch is treated as one more data shard and the contract terms
+   are averaged, the SAME estimator family the single-sync schedule's
+   bucketed pmean already applies across devices. Nonlinear contracts
+   (CG, Neumann, iterdiff) are refused, mirroring
+   ``launch.distributed.make_manual_step``.
+
+Every scan here is collective-free, so on the manual schedule the one
+pmean per base step fires AFTER accumulation and the meta bucket stays
+single: the collective census is ``unroll_steps + 1`` for every M —
+pinned by tests/test_scale_distributed.py.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.scale.policy import LossScaleState
+
+PyTree = Any
+
+
+def _tmap(fn, *trees):
+    return jax.tree_util.tree_map(fn, *trees)
+
+
+def split_batch(batch: PyTree, m: int) -> PyTree:
+    """Reshape every leaf [B, ...] -> [m, B//m, ...]. Shape-checked at
+    trace time: every leading dim must be divisible by m (the planner only
+    proposes divisors; hand-picked Ms fail loudly here)."""
+
+    if m < 1:
+        raise ValueError(f"microbatch count must be >= 1, got {m}")
+
+    def one(x):
+        b = x.shape[0]
+        if b % m:
+            raise ValueError(
+                f"batch dim {b} not divisible by microbatch count {m}; "
+                "pick M from repro.scale.plan_microbatch (it only proposes "
+                "divisors) or pad the batch"
+            )
+        return x.reshape((m, b // m) + x.shape[1:])
+
+    return _tmap(one, batch)
+
+
+def accumulate_mean(
+    term_fn: Callable[[PyTree], PyTree],
+    split: PyTree,
+    m: int,
+    accum_dtype,
+) -> PyTree:
+    """mean_m term_fn(microbatch_m), accumulated in ``accum_dtype`` under
+    one collective-free ``lax.scan``. ``split`` carries the leading m axis
+    (from ``split_batch``); the result keeps accum_dtype — callers cast
+    back where the consumer is dtype-sensitive."""
+
+    def body(acc, mb):
+        term = term_fn(mb)
+        acc = _tmap(lambda a, t: a + t.astype(accum_dtype), acc, term)
+        return acc, None
+
+    zeros = jax.eval_shape(term_fn, _tmap(lambda x: x[0], split))
+    acc0 = _tmap(lambda s: jnp.zeros(s.shape, accum_dtype), zeros)
+    acc, _ = jax.lax.scan(body, acc0, split)
+    return _tmap(lambda a: a / m, acc)
+
+
+def microbatch_value_and_grad(
+    loss_fn: Callable,  # (theta, lam, batch) -> scalar
+    theta: PyTree,
+    lam: PyTree,
+    batch: PyTree,
+    m: int,
+    accum_dtype,
+    *,
+    scale: Optional[LossScaleState] = None,
+) -> Tuple[jnp.ndarray, PyTree]:
+    """(loss, dloss/dtheta) over the full batch via M accumulated
+    microbatch backward passes. With a live ``scale`` each microbatch loss
+    is multiplied by ``scale.scale`` before its backward pass (so
+    low-precision cotangents stay representable) and the accumulated
+    gradient is unscaled once at the end — callers check finiteness and
+    run the skip/backoff automaton (``policy.update_scale``)."""
+
+    s = scale.scale if scale is not None else None
+
+    def scaled_loss(th, la, mb):
+        loss = loss_fn(th, la, mb)
+        return loss * s if s is not None else loss
+
+    if m <= 1:
+        loss, g = jax.value_and_grad(scaled_loss, argnums=0)(theta, lam, batch)
+        if s is not None:
+            loss = loss / s
+            g = _tmap(lambda x: x / s, g)
+        return loss.astype(jnp.float32), g
+
+    split = split_batch(batch, m)
+
+    def term(mb):
+        loss, g = jax.value_and_grad(scaled_loss, argnums=0)(theta, lam, mb)
+        return {"loss": loss.astype(jnp.float32), "grad": g}
+
+    acc = accumulate_mean(term, split, m, accum_dtype)
+    loss, g = acc["loss"], acc["grad"]
+    if s is not None:
+        loss = loss / s
+        g = _tmap(lambda x: x / s, g)
+    # restore the native gradient dtype (= the param leaf's, e.g. bf16
+    # master params) so the M>1 path is a drop-in for the direct one
+    g = _tmap(lambda x, t: x.astype(t.dtype), g, theta)
+    return loss.astype(jnp.float32), g
+
+
+def microbatch_local_terms(method, spec, ctx, m: int, accum_dtype) -> PyTree:
+    """Stage-1 ``local_terms`` under M-way microbatching (see module
+    docstring for the exact-vs-virtual-shard split). M <= 1 is the plain
+    call."""
+
+    if m <= 1:
+        return method.local_terms(spec, ctx)
+
+    hook = getattr(method, "micro_local_terms", None)
+    if hook is not None:
+        return hook(spec, ctx, m, accum_dtype)
+
+    contract = method.reduce_contract
+    if not contract.linear:
+        raise ValueError(
+            f"hypergrad method {method.name!r} declares a nonlinear reduce "
+            "contract: averaging its per-microbatch estimates is not the "
+            "method's own estimator on the full batch (the same reason "
+            "make_manual_step refuses it). Run it with microbatch=1, or "
+            "implement micro_local_terms on the method."
+        )
+
+    meta_split = split_batch(ctx.meta_batch, m)
+    last_split = split_batch(ctx.last_batch, m)
+
+    def term(mb):
+        meta_mb, last_mb = mb
+        ctx_m = dataclasses.replace(ctx, meta_batch=meta_mb, last_batch=last_mb)
+        terms = method.local_terms(spec, ctx_m)
+        extra = set(terms) - set(contract.terms)
+        if extra:
+            raise ValueError(
+                f"{method.name}: local_terms produced non-contract terms "
+                f"{sorted(extra)} — the generic virtual-shard accumulator "
+                "only knows how to mean-reduce contract terms; implement "
+                "micro_local_terms to handle method-private state"
+            )
+        return terms
+
+    return accumulate_mean(term, (meta_split, last_split), m, accum_dtype)

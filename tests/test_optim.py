@@ -224,3 +224,25 @@ def test_new_optimizers_registered_with_fused_product(name):
         np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6)
     total = sum(float(jnp.sum(x * x)) for x in jax.tree_util.tree_leaves(v))
     np.testing.assert_allclose(float(ss), total, rtol=1e-6)
+
+
+def test_adam_bias_corrections_finite_in_bf16():
+    """Regression: 1 - 0.999^t rounds to 0.0 in bf16 (8 mantissa bits), so
+    computing the Adam bias corrections in the gradient dtype made
+    vhat = 0/0 = NaN on exactly-zero gradient coordinates (and silently
+    zeroed early updates). Both the update rule and the ref adaptation
+    kernel must compute the corrections in at-least-f32."""
+
+    opt = optim.adam(1e-2)
+    params = {"w": jnp.ones((4,), jnp.bfloat16)}
+    # one exactly-zero coordinate — what microbatch accumulation's
+    # f32 -> bf16 round-trip produces on cancelling slices
+    g = {"w": jnp.asarray([0.0, 0.1, -0.2, 0.05], jnp.bfloat16)}
+    state = opt.init(params)
+
+    upd, state2 = opt.update(g, state, params)
+    assert np.all(np.isfinite(np.asarray(upd["w"], np.float32)))
+    assert float(jnp.abs(upd["w"][1])) > 0  # not silently zeroed by bc2==0
+
+    diag = opt.adaptation(g, state, params)  # ref kernel path off-TPU
+    assert np.all(np.isfinite(np.asarray(diag["w"], np.float32)))

@@ -324,7 +324,8 @@ def test_metalearner_profile_emits_valid_record():
     assert rec.timing.median_us > 0 and rec.timing.repeats == 2
     assert rec.memory["per_device"]["peak_bytes"] > 0
     assert rec.collectives["total_count"] == 0  # single device: no collectives
-    assert rec.extra == {"method": "sama", "schedule": "pjit", "unroll_steps": 2}
+    assert rec.extra == {"method": "sama", "schedule": "pjit", "unroll_steps": 2,
+                         "microbatch": 1, "policy": "f32"}
     # profiling is a probe, not training: state untouched
     assert learner.state is state_before
     with pytest.raises(RuntimeError, match="before profile"):

@@ -1,0 +1,648 @@
+"""repro.scale tests: precision policies, dynamic loss scaling, microbatch
+accumulation correctness (the ISSUE's acceptance property: M-microbatch
+accumulated gradients and SAMA hypergradients equal the full-batch values —
+exact in f32 up to summation order, tolerance-bounded in bf16), and the
+HBM-budget memory planner. Distributed census pins live in
+tests/test_scale_distributed.py (they need 8 forced host devices)."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import optim, scale
+from repro.core import EngineConfig, init_state, make_meta_step, problems
+from repro.core.engine import EngineState
+from repro.launch.distributed import cast_for_reduce
+from repro.scale import (
+    LossScaleState,
+    PrecisionPolicy,
+    ScaleConfig,
+    accumulate_mean,
+    microbatch_value_and_grad,
+    split_batch,
+)
+from repro.scale import policy as policy_mod
+
+
+# ---------------------------------------------------------------------------
+# fixtures: the tiny classifier bilevel problem every core test uses
+# ---------------------------------------------------------------------------
+
+
+def apply_fn(theta, x):
+    return jnp.tanh(x @ theta["w1"]) @ theta["w2"]
+
+
+def make_problem(seed=0, d=6, h=16, C=3):
+    per_ex = problems.softmax_per_example(apply_fn)
+    spec = problems.make_data_optimization_spec(per_ex, reweight=True)
+    theta = {
+        "w1": jax.random.normal(jax.random.PRNGKey(seed), (d, h)) * 0.3,
+        "w2": jax.random.normal(jax.random.PRNGKey(seed + 1), (h, C)) * 0.3,
+    }
+    lam = problems.init_data_optimization_lam(jax.random.PRNGKey(seed + 2), reweight=True)
+    return spec, theta, lam
+
+
+def make_batches(seed, K, B, MB, d=6, C=3):
+    bb = {"x": jax.random.normal(jax.random.PRNGKey(seed + 3), (K, B, d)),
+          "y": jax.random.randint(jax.random.PRNGKey(seed + 4), (K, B), 0, C)}
+    mb = {"x": jax.random.normal(jax.random.PRNGKey(seed + 5), (MB, d)),
+          "y": jax.random.randint(jax.random.PRNGKey(seed + 6), (MB,), 0, C)}
+    return bb, mb
+
+
+def leaves_allclose(a, b, rtol, atol):
+    for x, y in zip(jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)):
+        np.testing.assert_allclose(np.asarray(x, np.float64),
+                                   np.asarray(y, np.float64),
+                                   rtol=rtol, atol=atol)
+
+
+# ---------------------------------------------------------------------------
+# policies
+# ---------------------------------------------------------------------------
+
+
+def test_builtin_policies():
+    f32 = scale.resolve_policy("f32")
+    assert f32.is_identity and not f32.dynamic_scaling
+    bf16 = scale.resolve_policy("bf16")
+    assert bf16.compute_jnp == jnp.bfloat16
+    assert bf16.param_jnp == jnp.float32  # master params stay f32
+    assert not bf16.dynamic_scaling  # bf16 ships unscaled
+    f16 = scale.resolve_policy("f16")
+    assert f16.compute_jnp == jnp.float16 and f16.dynamic_scaling
+    # growth cap: float16(2^16) == inf, and the backward seed IS the scale
+    # cast through the f16 boundary — growing past 2^15 would skip a base
+    # step deterministically every growth_interval
+    assert f16.max_loss_scale == f16.loss_scale == 2.0 ** 15
+    grown = scale.update_scale(scale.init_scale_state(
+        dataclasses.replace(f16, growth_interval=1)), jnp.asarray(True),
+        dataclasses.replace(f16, growth_interval=1))
+    assert float(grown.scale) == 2.0 ** 15  # clamped, not doubled to inf-land
+    with pytest.raises(ValueError, match="unknown precision policy"):
+        scale.resolve_policy("f8")
+    # instances pass through
+    assert scale.resolve_policy(f16) is f16
+
+
+def test_scale_config_validation():
+    with pytest.raises(ValueError, match="microbatch"):
+        ScaleConfig(microbatch=0)
+    with pytest.raises(ValueError, match="unknown precision policy"):
+        ScaleConfig(policy="nope")
+    assert ScaleConfig().is_identity
+    assert not ScaleConfig(microbatch=2).is_identity
+    assert not ScaleConfig(policy="bf16").is_identity
+
+
+def test_cast_floats_leaves_ints_alone():
+    tree = {"w": jnp.ones((3,), jnp.float32), "ids": jnp.ones((3,), jnp.int32)}
+    out = scale.cast_floats(tree, jnp.bfloat16)
+    assert out["w"].dtype == jnp.bfloat16
+    assert out["ids"].dtype == jnp.int32
+
+
+def test_apply_to_spec_casts_compute_and_returns_f32_loss():
+    spec, theta, lam = make_problem()
+    bb, mb = make_batches(0, 1, 8, 8)
+    batch = {"x": bb["x"][0], "y": bb["y"][0]}
+
+    seen = {}
+
+    def probe_loss(th, la, b):
+        seen["theta_dtype"] = th["w1"].dtype
+        seen["x_dtype"] = b["x"].dtype
+        seen["y_dtype"] = b["y"].dtype
+        return spec.base_loss(th, la, b)
+
+    from repro.core.bilevel import BilevelSpec
+
+    wrapped = scale.apply_to_spec(BilevelSpec(base_loss=probe_loss, meta_loss=probe_loss),
+                                  scale.resolve_policy("bf16"))
+    loss = wrapped.base_scalar(theta, lam, batch)
+    assert seen["theta_dtype"] == jnp.bfloat16
+    assert seen["x_dtype"] == jnp.bfloat16
+    assert seen["y_dtype"] == jnp.int32  # labels untouched
+    assert loss.dtype == jnp.float32
+    # identity policy returns the SAME spec object (paper-exact path)
+    assert scale.apply_to_spec(spec, scale.resolve_policy("f32")) is spec
+
+
+def test_grads_under_policy_are_f32_master_grads():
+    spec, theta, lam = make_problem()
+    bb, _ = make_batches(0, 1, 8, 8)
+    batch = {"x": bb["x"][0], "y": bb["y"][0]}
+    wrapped = scale.apply_to_spec(spec, scale.resolve_policy("bf16"))
+    g = jax.grad(wrapped.base_scalar)(theta, lam, batch)
+    assert all(x.dtype == jnp.float32 for x in jax.tree_util.tree_leaves(g))
+
+
+# ---------------------------------------------------------------------------
+# dynamic loss scale automaton
+# ---------------------------------------------------------------------------
+
+
+def test_update_scale_backoff_and_growth():
+    pol = dataclasses.replace(scale.resolve_policy("f16"), growth_interval=2)
+    st = scale.init_scale_state(pol)
+    assert float(st.scale) == 2.0 ** 15
+    # non-finite step: halve, reset streak
+    st2 = scale.update_scale(st, jnp.asarray(False), pol)
+    assert float(st2.scale) == 2.0 ** 14 and int(st2.good_steps) == 0
+    # two finite steps: double once
+    st3 = scale.update_scale(st2, jnp.asarray(True), pol)
+    st4 = scale.update_scale(st3, jnp.asarray(True), pol)
+    assert float(st4.scale) == 2.0 ** 15 and int(st4.good_steps) == 0
+    # clamped at the ceiling
+    hi = LossScaleState(scale=jnp.asarray(pol.max_loss_scale, jnp.float32),
+                        good_steps=jnp.asarray(pol.growth_interval, jnp.int32))
+    st5 = scale.update_scale(hi, jnp.asarray(True), pol)
+    assert float(st5.scale) == pol.max_loss_scale
+    # clamped at the floor
+    lo = LossScaleState(scale=jnp.asarray(pol.min_loss_scale, jnp.float32),
+                        good_steps=jnp.zeros([], jnp.int32))
+    st6 = scale.update_scale(lo, jnp.asarray(False), pol)
+    assert float(st6.scale) == pol.min_loss_scale
+
+
+def test_all_finite():
+    assert bool(scale.all_finite({"a": jnp.ones(3), "i": jnp.ones(3, jnp.int32)}))
+    assert not bool(scale.all_finite({"a": jnp.array([1.0, jnp.inf])}))
+    assert not bool(scale.all_finite({"a": jnp.array([jnp.nan])}))
+
+
+def test_f16_policy_requires_seeded_scale_state():
+    spec, theta, lam = make_problem()
+    bb, mb = make_batches(0, 2, 8, 8)
+    base_opt, meta_opt = optim.adam(1e-2), optim.adam(1e-2)
+    cfg = EngineConfig(method="sama", unroll_steps=2,
+                       scale=ScaleConfig(policy="f16"))
+    # state built WITHOUT the scale config -> clear trace-time error
+    state = init_state(theta, lam, base_opt, meta_opt)
+    step = make_meta_step(spec, base_opt, meta_opt, cfg)
+    with pytest.raises(ValueError, match="LossScaleState"):
+        step(state, bb, mb)
+
+
+def test_f16_nonfinite_step_skips_update_and_backs_off():
+    """A loss big enough to overflow the f16 backward pass must leave
+    params/lam untouched, halve the scale, and keep metrics finite-free
+    drama out of the next step."""
+
+    spec, theta, lam = make_problem()
+    bb, mb = make_batches(0, 1, 8, 8)
+    base_opt, meta_opt = optim.adam(1e-2), optim.adam(1e-2)
+    # scale far above f16 max (65504): the scaled cotangents overflow
+    pol = dataclasses.replace(scale.resolve_policy("f16"),
+                              loss_scale=float(2 ** 30), min_loss_scale=1.0,
+                              max_loss_scale=float(2 ** 31))
+    cfg = EngineConfig(method="sama", unroll_steps=1,
+                       scale=ScaleConfig(policy=pol))
+    state = init_state(theta, lam, base_opt, meta_opt, scale=cfg.scale)
+    step = jax.jit(make_meta_step(spec, base_opt, meta_opt, cfg))
+    new_state, _ = step(state, bb, mb)
+    # scale halved TWICE: the base unroll skipped (2^30 -> 2^29) and the
+    # hypergradient path — whose losses are scaled by ctx.loss_scale —
+    # also overflowed, so the meta guard backed off again (2^29 -> 2^28)
+    assert float(new_state.scale.scale) == float(2 ** 28)
+    assert int(new_state.scale.good_steps) == 0
+    leaves_allclose(new_state.theta, state.theta, rtol=0, atol=0)
+    leaves_allclose(new_state.lam, state.lam, rtol=0, atol=0)
+
+
+def test_backoff_on_halves_only_on_nonfinite():
+    pol = scale.resolve_policy("f16")
+    st = LossScaleState(scale=jnp.asarray(2.0 ** 14, jnp.float32),
+                        good_steps=jnp.asarray(7, jnp.int32))
+    same = scale.backoff_on(st, jnp.asarray(True), pol)
+    assert float(same.scale) == 2.0 ** 14 and int(same.good_steps) == 7
+    halved = scale.backoff_on(st, jnp.asarray(False), pol)
+    assert float(halved.scale) == 2.0 ** 13 and int(halved.good_steps) == 0
+
+
+def test_sama_local_terms_invariant_under_loss_scale():
+    """The hypergradient path scales its meta/CD losses by ctx.loss_scale
+    and unscales the results — in f32 the scaling must cancel exactly, so
+    terms with and without a live scale agree (the f16 benefit is purely
+    about cotangent representability)."""
+
+    from repro.core.engine import make_context, _unroll_base
+    from repro.core.methods import resolve_method
+
+    spec, theta, lam = make_problem(11)
+    bb, mb = make_batches(11, 2, 16, 8)
+    base_opt, meta_opt = optim.adam(1e-2), optim.adam(1e-2)
+    state = init_state(theta, lam, base_opt, meta_opt)
+    th, _, g_base, st_at_g, _, _, _ = _unroll_base(
+        spec, base_opt, theta, state.base_opt_state, lam, bb)
+    method = resolve_method("sama", EngineConfig())
+
+    def terms_with(ls):
+        ctx = make_context(base_opt, state, bb, mb, theta=th,
+                           base_opt_state=st_at_g, g_base=g_base,
+                           loss_scale=ls)
+        return method.local_terms(spec, ctx)
+
+    ref = terms_with(None)
+    scaled = terms_with(jnp.asarray(1024.0, jnp.float32))
+    for k in ("hypergrad", "meta_loss", "v", "eps"):
+        leaves_allclose(scaled[k], ref[k], rtol=1e-5, atol=1e-7)
+    # and the staged micro path honors the scale identically
+    ctx = make_context(base_opt, state, bb, mb, theta=th,
+                       base_opt_state=st_at_g, g_base=g_base,
+                       loss_scale=jnp.asarray(1024.0, jnp.float32))
+    micro = method.micro_local_terms(spec, ctx, 4, jnp.float32)
+    for k in ("hypergrad", "meta_loss", "v", "eps"):
+        leaves_allclose(micro[k], ref[k], rtol=2e-5, atol=1e-7)
+
+
+def test_guarded_meta_update_reports_gate_for_backoff():
+    """A non-finite hypergradient must (a) skip lam/moments and (b) come
+    back as finite=False so the caller backs the loss scale off —
+    otherwise a persistently-overflowing meta path would skip forever."""
+
+    from repro.core.engine import guarded_meta_update
+
+    spec, theta, lam = make_problem()
+    base_opt, meta_opt = optim.adam(1e-2), optim.adam(1e-2)
+    state = init_state(theta, lam, base_opt, meta_opt,
+                       scale=ScaleConfig(policy="f16"))
+    bad_hyper = jax.tree_util.tree_map(
+        lambda x: jnp.full_like(x, jnp.inf), lam)
+    new_lam, _, theta_post, ok = guarded_meta_update(
+        meta_opt, bad_hyper, theta, state, theta_pre=theta, guard=True)
+    assert not bool(ok)
+    leaves_allclose(new_lam, lam, rtol=0, atol=0)
+    pol = scale.resolve_policy("f16")
+    backed = scale.backoff_on(state.scale, ok, pol)
+    assert float(backed.scale) == float(state.scale.scale) / 2
+
+
+def test_f16_policy_trains_and_scale_state_advances():
+    spec, theta, lam = make_problem()
+    bb, mb = make_batches(0, 2, 8, 8)
+    base_opt, meta_opt = optim.adam(1e-2), optim.adam(1e-2)
+    cfg = EngineConfig(method="sama", unroll_steps=2, scale=ScaleConfig(policy="f16"))
+    state = init_state(theta, lam, base_opt, meta_opt, scale=cfg.scale)
+    step = jax.jit(make_meta_step(spec, base_opt, meta_opt, cfg))
+    s, m = step(state, bb, mb)
+    assert int(s.scale.good_steps) == 2  # both base steps finite
+    assert all(np.isfinite(float(v)) for v in m.values())
+    moved = max(float(jnp.max(jnp.abs(a - b))) for a, b in zip(
+        jax.tree_util.tree_leaves(s.lam), jax.tree_util.tree_leaves(state.lam)))
+    assert moved > 0
+
+
+# ---------------------------------------------------------------------------
+# microbatch accumulation primitives
+# ---------------------------------------------------------------------------
+
+
+def test_split_batch_shapes_and_divisibility():
+    b = {"x": jnp.zeros((8, 5)), "y": jnp.zeros((8,), jnp.int32)}
+    s = split_batch(b, 4)
+    assert s["x"].shape == (4, 2, 5) and s["y"].shape == (4, 2)
+    with pytest.raises(ValueError, match="not divisible"):
+        split_batch(b, 3)
+    with pytest.raises(ValueError, match=">= 1"):
+        split_batch(b, 0)
+
+
+def test_accumulate_mean_matches_direct_mean():
+    xs = jax.random.normal(jax.random.PRNGKey(0), (12, 7))
+    split = split_batch(xs, 4)
+    out = accumulate_mean(lambda mb: {"m": jnp.mean(mb, axis=0)}, split, 4, jnp.float32)
+    np.testing.assert_allclose(np.asarray(out["m"]), np.asarray(jnp.mean(xs, axis=0)),
+                               rtol=1e-6, atol=1e-7)
+
+
+@pytest.mark.parametrize("m", [1, 2, 4, 8])
+def test_microbatch_value_and_grad_equals_full_batch(m):
+    spec, theta, lam = make_problem()
+    bb, _ = make_batches(0, 1, 16, 8)
+    batch = {"x": bb["x"][0], "y": bb["y"][0]}
+    ref_loss, ref_g = jax.value_and_grad(spec.base_scalar)(theta, lam, batch)
+    loss, g = microbatch_value_and_grad(spec.base_scalar, theta, lam, batch,
+                                        m, jnp.float32)
+    np.testing.assert_allclose(float(loss), float(ref_loss), rtol=1e-6)
+    leaves_allclose(g, ref_g, rtol=1e-5, atol=1e-7)
+
+
+# ---------------------------------------------------------------------------
+# the acceptance property: accumulated step == full-batch step
+# ---------------------------------------------------------------------------
+
+
+def run_sama_step(spec, theta, lam, bb, mb, *, m, policy="f32", unroll=2,
+                  base_opt_name="adam"):
+    base_opt = optim.get_optimizer(base_opt_name, 1e-2)
+    meta_opt = optim.adam(1e-2)
+    cfg = EngineConfig(method="sama", unroll_steps=unroll,
+                       scale=ScaleConfig(policy=policy, microbatch=m))
+    state = init_state(theta, lam, base_opt, meta_opt, scale=cfg.scale)
+    step = jax.jit(make_meta_step(spec, base_opt, meta_opt, cfg))
+    return step(state, bb, mb)
+
+
+@pytest.mark.parametrize("m", [2, 4, 8])
+@pytest.mark.parametrize("seed", [0, 1])
+def test_sama_microbatch_exact_in_f32(m, seed):
+    """The staged SAMA micro path (accumulate g_meta -> one v/eps ->
+    accumulate the CD delta) reproduces the full-batch estimator exactly
+    in f32, up to summation reorder noise — NOT just in expectation."""
+
+    spec, theta, lam = make_problem(seed)
+    bb, mb = make_batches(seed, 2, 16, 8)
+    s_ref, m_ref = run_sama_step(spec, theta, lam, bb, mb, m=1)
+    s_mic, m_mic = run_sama_step(spec, theta, lam, bb, mb, m=m)
+    leaves_allclose(s_mic.lam, s_ref.lam, rtol=2e-5, atol=1e-7)
+    leaves_allclose(s_mic.theta, s_ref.theta, rtol=2e-5, atol=1e-7)
+    for k in ("base_loss", "meta_loss", "eps", "hypergrad_norm"):
+        np.testing.assert_allclose(float(m_mic[k]), float(m_ref[k]), rtol=2e-4)
+
+
+def test_sama_microbatch_exact_with_sgd_and_momentum():
+    """The exactness property is optimizer-independent (the adaptation
+    product only sees the ACCUMULATED g_meta)."""
+
+    for opt_name in ("sgd", "momentum"):
+        spec, theta, lam = make_problem(7)
+        bb, mb = make_batches(7, 2, 12, 12)
+        s_ref, _ = run_sama_step(spec, theta, lam, bb, mb, m=1,
+                                 base_opt_name=opt_name)
+        s_mic, _ = run_sama_step(spec, theta, lam, bb, mb, m=4,
+                                 base_opt_name=opt_name)
+        leaves_allclose(s_mic.lam, s_ref.lam, rtol=2e-5, atol=1e-7)
+
+
+def test_hypothesis_property_microbatch_exactness():
+    hyp = pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(0, 50),
+           m=st.sampled_from([2, 3, 4, 6]),
+           unroll=st.integers(1, 3))
+    def prop(seed, m, unroll):
+        spec, theta, lam = make_problem(seed)
+        bb, mb = make_batches(seed, unroll, 12, 12)  # 12 divisible by 2/3/4/6
+        s_ref, _ = run_sama_step(spec, theta, lam, bb, mb, m=1, unroll=unroll)
+        s_mic, _ = run_sama_step(spec, theta, lam, bb, mb, m=m, unroll=unroll)
+        leaves_allclose(s_mic.lam, s_ref.lam, rtol=5e-5, atol=1e-6)
+        leaves_allclose(s_mic.theta, s_ref.theta, rtol=5e-5, atol=1e-6)
+
+    prop()
+
+
+def test_virtual_shard_fallback_identical_microbatches_exact():
+    """t1t2 has no micro hook -> generic virtual-shard averaging. With
+    IDENTICAL microbatches (tiled) the average of per-microbatch terms
+    must equal the single-microbatch value bit-for-bit-ish — the same
+    equality the distributed schedule pins under tiled shards."""
+
+    spec, theta, lam = make_problem(3)
+    K, b = 2, 4
+    bb1 = {"x": jax.random.normal(jax.random.PRNGKey(9), (K, b, 6)),
+           "y": jax.random.randint(jax.random.PRNGKey(10), (K, b), 0, 3)}
+    mb1 = {"x": jax.random.normal(jax.random.PRNGKey(11), (b, 6)),
+           "y": jax.random.randint(jax.random.PRNGKey(12), (b,), 0, 3)}
+    M = 4
+    bb_t = {"x": jnp.tile(bb1["x"], (1, M, 1)), "y": jnp.tile(bb1["y"], (1, M))}
+    mb_t = {"x": jnp.tile(mb1["x"], (M, 1)), "y": jnp.tile(mb1["y"], (M,))}
+
+    base_opt, meta_opt = optim.adam(1e-2), optim.adam(1e-2)
+
+    def run(bb, mb, m):
+        cfg = EngineConfig(method="t1t2", unroll_steps=K,
+                           scale=ScaleConfig(microbatch=m))
+        state = init_state(theta, lam, base_opt, meta_opt, scale=cfg.scale)
+        return jax.jit(make_meta_step(spec, base_opt, meta_opt, cfg))(state, bb, mb)
+
+    s_ref, _ = run(bb1, mb1, 1)
+    s_mic, _ = run(bb_t, mb_t, M)
+    leaves_allclose(s_mic.lam, s_ref.lam, rtol=1e-5, atol=1e-7)
+
+
+def test_nonlinear_method_refuses_microbatching():
+    spec, theta, lam = make_problem()
+    bb, mb = make_batches(0, 2, 8, 8)
+    base_opt, meta_opt = optim.adam(1e-2), optim.adam(1e-2)
+    cfg = EngineConfig(method="cg", unroll_steps=2, scale=ScaleConfig(microbatch=2))
+    state = init_state(theta, lam, base_opt, meta_opt, scale=cfg.scale)
+    step = make_meta_step(spec, base_opt, meta_opt, cfg)
+    with pytest.raises(ValueError, match="nonlinear reduce"):
+        step(state, bb, mb)
+
+
+# ---------------------------------------------------------------------------
+# precision-policy loss trajectories (pinned tolerance, acceptance criterion)
+# ---------------------------------------------------------------------------
+
+
+def run_trajectory(policy, steps=8, seed=0):
+    spec, theta, lam = make_problem(seed)
+    base_opt, meta_opt = optim.adam(1e-2), optim.adam(1e-2)
+    cfg = EngineConfig(method="sama", unroll_steps=2,
+                       scale=ScaleConfig(policy=policy))
+    state = init_state(theta, lam, base_opt, meta_opt, scale=cfg.scale)
+    step = jax.jit(make_meta_step(spec, base_opt, meta_opt, cfg))
+    traj = []
+    for i in range(steps):
+        bb, mb = make_batches(seed + 100 * i, 2, 16, 8)
+        state, m = step(state, bb, mb)
+        traj.append((float(m["base_loss"]), float(m["meta_loss"])))
+    return np.asarray(traj)
+
+
+@pytest.mark.parametrize("policy,tol", [("bf16", 0.05), ("f16", 0.02)])
+def test_low_precision_loss_trajectory_matches_f32(policy, tol):
+    """Documented tolerance (docs/scale.md): over 8 meta steps on the
+    smoke problem, bf16 tracks the f32 loss trajectory within 5% relative
+    per step and f16 (loss-scaled, more mantissa than bf16) within 2%."""
+
+    ref = run_trajectory("f32")
+    low = run_trajectory(policy)
+    rel = np.abs(low - ref) / np.maximum(np.abs(ref), 1e-3)
+    assert rel.max() < tol, f"{policy} trajectory diverged: max rel {rel.max():.4f}"
+
+
+# ---------------------------------------------------------------------------
+# cast_for_reduce (the bf16-variadic-AllReduce workaround, pinned)
+# ---------------------------------------------------------------------------
+
+
+def test_cast_for_reduce_promotes_only_sub_f32():
+    f32 = jnp.ones((3,), jnp.float32)
+    tree = {"bf16": jnp.ones((3,), jnp.bfloat16),
+            "f16": jnp.ones((3,), jnp.float16),
+            "f32": f32,
+            "i32": jnp.ones((3,), jnp.int32)}
+    out = cast_for_reduce(tree)
+    assert out["bf16"].dtype == jnp.float32
+    assert out["f16"].dtype == jnp.float32
+    assert out["f32"] is f32  # untouched, not copied
+    assert out["i32"].dtype == jnp.int32
+
+
+# ---------------------------------------------------------------------------
+# EngineState compatibility
+# ---------------------------------------------------------------------------
+
+
+def test_engine_state_scale_default_none_checkpoint_compatible(tmp_path):
+    """scale=None adds no pytree leaves, so pre-repro.scale checkpoints
+    restore into new states unchanged."""
+
+    from repro import checkpoint
+
+    spec, theta, lam = make_problem()
+    base_opt, meta_opt = optim.adam(1e-2), optim.adam(1e-2)
+    state = init_state(theta, lam, base_opt, meta_opt)
+    assert state.scale is None
+    # simulate an old 5-field checkpoint: same leaves, saved from a tree
+    # without the scale field at all
+    old_style = {"theta": state.theta, "base_opt_state": state.base_opt_state,
+                 "lam": state.lam, "meta_opt_state": state.meta_opt_state,
+                 "step": state.step}
+    new_style = {"theta": state.theta, "base_opt_state": state.base_opt_state,
+                 "lam": state.lam, "meta_opt_state": state.meta_opt_state,
+                 "step": state.step, "scale": None}
+    assert (jax.tree_util.tree_structure(old_style)
+            != jax.tree_util.tree_structure(new_style))  # differ as trees...
+    assert len(jax.tree_util.tree_leaves(old_style)) == len(
+        jax.tree_util.tree_leaves(new_style))  # ...but same leaf count
+    path = str(tmp_path / "ck")
+    checkpoint.save(path, state, step=0)
+    restored, _ = checkpoint.restore(path, state)
+    assert restored.scale is None
+
+
+# ---------------------------------------------------------------------------
+# the memory planner
+# ---------------------------------------------------------------------------
+
+
+def planner_args(batch=16, meta=8, unroll=2):
+    spec, theta, lam = make_problem()
+    base_opt, meta_opt = optim.adam(1e-2), optim.adam(1e-2)
+    cfg = EngineConfig(method="sama", unroll_steps=unroll)
+    state = init_state(theta, lam, base_opt, meta_opt)
+    bb, mb = make_batches(0, unroll, batch, meta)
+    return spec, base_opt, meta_opt, cfg, state, bb, mb
+
+
+def test_candidate_microbatches_common_divisors():
+    _, _, _, _, _, bb, mb = planner_args(batch=16, meta=8)
+    cands = scale.candidate_microbatches(bb, mb)
+    assert cands == (1, 2, 4, 8)  # divisors of both 16 and 8
+    assert scale.candidate_microbatches(bb, mb, max_microbatch=2) == (1, 2)
+    # manual schedule: candidates divide the per-device shard, not the global
+    assert scale.candidate_microbatches(bb, mb, shard_divisor=4) == (1, 2)
+    with pytest.raises(ValueError, match="shard evenly"):
+        scale.candidate_microbatches(bb, mb, shard_divisor=3)
+
+
+def test_plan_microbatch_huge_budget_picks_m1():
+    args = planner_args()
+    plan = scale.plan_microbatch(*args, hbm_budget=int(1e12))
+    assert plan.microbatch == 1 and plan.fits
+    assert plan.scale.microbatch == 1
+    assert plan.peak_bytes is not None and plan.peak_bytes < 1e12
+
+
+def test_plan_microbatch_tiny_budget_does_not_fit():
+    args = planner_args()
+    plan = scale.plan_microbatch(*args, hbm_budget=1)
+    assert not plan.fits
+    assert plan.microbatch == 8  # the least-bad (largest) candidate
+    # candidates recorded for the audit trail, peaks non-increasing in M
+    ms = [m for m, _ in plan.candidates]
+    assert ms == sorted(ms)
+
+
+def test_plan_microbatch_intermediate_budget_binary_search():
+    """Set the budget between the M=1 and max-M peaks: the plan must pick
+    the SMALLEST M that fits (the largest fitting microbatch), and its
+    measured peak must actually fit."""
+
+    args = planner_args(batch=32, meta=16)
+    # probe the endpoints through the public API
+    hi = scale.plan_microbatch(*args, hbm_budget=int(1e12))
+    lo = scale.plan_microbatch(*args, hbm_budget=1)
+    peak_m1 = dict(hi.candidates)[1]
+    peak_mmax = [p for m, p in lo.candidates if m == max(m for m, _ in lo.candidates)][0]
+    assert peak_mmax < peak_m1, "peak must decrease with M for this test to bite"
+    budget = (peak_m1 + peak_mmax) // 2
+    plan = scale.plan_microbatch(*args, hbm_budget=budget)
+    assert plan.fits
+    assert 1 < plan.microbatch
+    assert plan.peak_bytes <= budget
+    # minimality: every tried candidate below the chosen M busted the budget
+    for m, peak in plan.candidates:
+        if m < plan.microbatch:
+            assert peak > budget
+
+
+def test_plan_microbatch_rejects_bad_budget():
+    args = planner_args()
+    with pytest.raises(ValueError, match="hbm_budget"):
+        scale.plan_microbatch(*args, hbm_budget=0)
+
+
+def test_exec_plan_feeds_back_into_engine_config():
+    args = planner_args()
+    plan = scale.plan_microbatch(*args, hbm_budget=int(1e12))
+    cfg = dataclasses.replace(args[3], scale=plan.scale)
+    assert cfg.scale.microbatch == plan.microbatch
+
+
+# ---------------------------------------------------------------------------
+# the ScaleConfig surfaces: MetaLearner and DataOptimizer scoring
+# ---------------------------------------------------------------------------
+
+
+def test_metalearner_scale_knob_end_to_end():
+    from repro.api import MetaLearner
+
+    spec, theta, lam = make_problem(5)
+    bb, mb = make_batches(5, 2, 16, 8)
+    learner = MetaLearner(spec, base_opt="adam", base_lr=1e-2,
+                          meta_opt="adam", meta_lr=1e-2,
+                          method="sama", unroll_steps=2,
+                          scale=ScaleConfig(policy="f16", microbatch=4))
+    learner.init(theta, lam)
+    assert learner.state.scale is not None  # LossScaleState seeded
+    metrics = learner.step(bb, mb)
+    assert all(np.isfinite(float(v)) for v in metrics.values())
+
+
+def test_dataopt_meta_scorer_accepts_scale_knob():
+    """scale= flows DataOptimizer -> meta scorer -> fit_meta -> MetaLearner
+    and scoring stays finite with accumulation active."""
+
+    from repro.dataopt import DataOptimizer
+
+    rng = np.random.default_rng(0)
+    n = 64
+    train = {"x": rng.normal(size=(n, 6)).astype(np.float32),
+             "y": rng.integers(0, 3, n).astype(np.int32)}
+
+    per_ex = problems.softmax_per_example(apply_fn)
+
+    def init_fn(key):
+        k1, k2 = jax.random.split(key)
+        return {"w1": jax.random.normal(k1, (6, 16)) * 0.3,
+                "w2": jax.random.normal(k2, (16, 3)) * 0.3}
+
+    opt = DataOptimizer(train=train, per_example_fn=per_ex, init_fn=init_fn,
+                        fields=("x", "y"), num_classes=3, scorer="meta",
+                        batch_size=32, steps=2, unroll=2, batch=32,
+                        meta_batch=32, uncertainty="none",
+                        scale=scale.ScaleConfig(microbatch=4))
+    s = opt.fit_scores()
+    assert s.shape == (n,) and np.all(np.isfinite(s))
