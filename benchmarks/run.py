@@ -36,6 +36,7 @@ BENCHES = [
     "bench_distributed",  # Fig 2 / Table 2 multi-GPU structure
     "bench_kernels",  # fused dispatch kernels vs naive jnp chains
     "bench_scale",  # repro.scale: memory vs microbatch M + census under accumulation
+    "bench_serve",  # repro.serve: continuous-batch QPS vs serial + paged-cache memory
 ]
 
 #: benches whose rows are produced by the repro.dataopt subsystem

@@ -1,24 +1,54 @@
-"""Batched serving demo: prefill + greedy decode through the per-family
-serve_step (KV cache for attention archs, recurrent state for SSM archs).
+"""Continuous-batching serving demo: N staggered mixed-length requests
+through ``repro.serve`` (queue -> batcher -> paged cache -> executor),
+with per-request latency and aggregate QPS (docs/serve.md).
 
     PYTHONPATH=src python examples/serve_decode.py --arch zamba2-7b
-    PYTHONPATH=src python examples/serve_decode.py --arch gemma2-9b
+    PYTHONPATH=src python examples/serve_decode.py --arch gemma3-1b --requests 12
 """
 
 import argparse
 
-from repro.launch import serve
+import jax
+import numpy as np
+
+from repro import configs, serve
+from repro.models import Model
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="rwkv6-1.6b")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--gen", type=int, default=12)
     args = ap.parse_args()
 
-    import sys
-    sys.argv = ["serve", "--arch", args.arch, "--smoke", "--batch", "4",
-                "--prompt-len", "12", "--gen", "12"]
-    serve.main()
+    cfg = configs.get_smoke_config(args.arch)
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+
+    rng = np.random.default_rng(0)
+    lens = rng.integers(4, 17, size=args.requests)
+    prompts = [rng.integers(0, cfg.vocab_size, size=(int(L),)).astype(np.int32)
+               for L in lens]
+
+    ex = serve.ServeExecutor(model, params, serve.ServeConfig(
+        slots=args.slots, page_size=8, max_len=64, max_new_tokens=args.gen))
+    ids = [ex.submit(p) for p in prompts]  # staggered: admitted as slots free
+    stats = ex.run()
+
+    print(f"arch={cfg.name} requests={args.requests} slots={args.slots} "
+          f"decode_steps={stats.steps}")
+    for rid, L in zip(ids, lens):
+        r = ex.results[rid]
+        lat = "-" if r.latency_s is None else f"{r.latency_s * 1e3:8.1f}ms"
+        print(f"  req {rid}: prompt_len={int(L):2d} status={r.status:<8s} "
+              f"latency={lat} tokens={r.tokens[:6]}...")
+    lat = stats.latency
+    print(f"qps={stats.qps:.2f} p50={lat.p50_us / 1e3:.1f}ms "
+          f"p99={lat.p99_us / 1e3:.1f}ms "
+          f"cache_peak={stats.memory['peak_bytes'] / 1024:.1f}KiB "
+          f"buckets={stats.memory['buckets']}")
 
 
 if __name__ == "__main__":

@@ -1,14 +1,21 @@
-"""Batched serving driver: prefill a prompt batch, then decode step-by-step
-with the per-family KV cache / recurrent state.
+"""Serving CLI — a thin driver over ``repro.serve`` (docs/serve.md).
 
     PYTHONPATH=src python -m repro.launch.serve --arch rwkv6-1.6b --smoke \
-        --batch 4 --prompt-len 16 --gen 16
+        --requests 12 --slots 4 --gen 16
 
-Timing flows through ``repro.perf``: the generate loop is measured with
-the warmup/repeat/block protocol (the old ad-hoc ``time.time()`` around
-an async dispatch under-reported), and the jitted decode step gets the
-compile split + per-device memory breakdown. The emitted JSON embeds the
-full PerfRecord next to the human-readable tokens/s.
+Submits a mixed-length request set to the continuous-batching executor
+and reports per-request latency (p50/p99), sustained QPS, shed counts
+and paged-cache memory, embedding a full ``perf.PerfRecord`` (with the
+``latency`` section) in the emitted JSON. ``--serial`` runs the same
+request set through the serial dense-cache ``greedy_generate`` reference
+loop instead — the two modes emit the same record shape, so the CLI
+doubles as an ad-hoc A/B harness (benchmarks/bench_serve.py is the
+gated version).
+
+``greedy_generate`` is re-exported from ``repro.serve.prefill`` for
+back-compat; the seed's copy here prefilled with P separate jitted
+calls and hard-coded f32 caches (the configured-dtype fix and the
+single-call chunked prefill live in the subsystem now).
 """
 
 from __future__ import annotations
@@ -17,41 +24,48 @@ import argparse
 import json
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro import configs, perf
+from repro import configs, perf, serve
 from repro.models import Model
+from repro.serve import greedy_generate  # noqa: F401  (back-compat re-export)
 
 
-def greedy_generate(model: Model, params, prompt: jnp.ndarray, gen: int, cache_len: int,
-                    step=None):
-    """prompt: (B, P) int32. Prefill = teacher-forced decode over the prompt
-    (exercises the same serve_step the dry-run lowers), then greedy decode."""
+def make_requests(cfg, n: int, prompt_len: int, gen: int, seed: int = 0):
+    """Mixed-length prompts around ``prompt_len`` (the serving regime the
+    paged cache exists for — uniform lengths would flatter dense caches)."""
 
-    B, P = prompt.shape
-    cache = model.init_cache(B, cache_len, dtype=jnp.float32)
-    step = step if step is not None else jax.jit(model.decode_step)
+    rng = np.random.default_rng(seed)
+    lens = rng.integers(max(1, prompt_len // 2), prompt_len + 1, size=n)
+    return [rng.integers(0, cfg.vocab_size, size=(int(L),)).astype(np.int32)
+            for L in lens], [gen] * n
 
-    logits = None
-    for t in range(P):
-        logits, cache = step(params, cache, prompt[:, t : t + 1], jnp.asarray(t, jnp.int32))
-    toks = [jnp.argmax(logits[:, 0], axis=-1).astype(jnp.int32)]
-    for t in range(P, P + gen - 1):
-        logits, cache = step(params, cache, toks[-1][:, None], jnp.asarray(t, jnp.int32))
-        toks.append(jnp.argmax(logits[:, 0], axis=-1).astype(jnp.int32))
-    return jnp.stack(toks, axis=1)
+
+def run_continuous(model, params, prompts, gens, scfg: serve.ServeConfig):
+    ex = serve.ServeExecutor(model, params, scfg)
+    ids = [ex.submit(p, max_new_tokens=g) for p, g in zip(prompts, gens)]
+    stats = ex.run()
+    return ex, ids, stats
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="rwkv6-1.6b")
     ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=12)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--gen", type=int, default=16)
-    ap.add_argument("--repeats", type=int, default=3,
-                    help="timed generate-loop repeats (median reported)")
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--page-size", type=int, default=8)
+    ap.add_argument("--max-len", type=int, default=0,
+                    help="per-request token cap (0 = prompt+gen rounded to a "
+                         "page multiple)")
+    ap.add_argument("--timeout-s", type=float, default=None,
+                    help="per-request deadline (shed on miss)")
+    ap.add_argument("--serial", action="store_true",
+                    help="serial dense-cache reference loop instead of "
+                         "continuous batching")
+    ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
     cfg = configs.get_smoke_config(args.arch) if args.smoke else configs.get_config(args.arch)
@@ -59,45 +73,62 @@ def main():
         raise SystemExit("encoder-only architectures have no decode step")
     model = Model(cfg)
     params = model.init(jax.random.PRNGKey(0))
+    prompts, gens = make_requests(cfg, args.requests, args.prompt_len,
+                                  args.gen, args.seed)
 
-    rng = np.random.default_rng(0)
-    prompt = jnp.asarray(rng.integers(0, cfg.vocab_size, size=(args.batch, args.prompt_len)), jnp.int32)
+    pg = args.page_size
+    max_len = args.max_len or pg * ((args.prompt_len + args.gen + pg - 1) // pg)
 
-    cache_len = args.prompt_len + args.gen
-    step = jax.jit(model.decode_step)
-
-    # compile split + memory breakdown of the decode step itself
-    cache0 = model.init_cache(args.batch, cache_len, dtype=jnp.float32)
-    step_args = (params, cache0, prompt[:, :1], jnp.asarray(0, jnp.int32))
-    lower_s, compile_s, compiled = perf.compile_split(step, *step_args)
-    mem = perf.memory_report(compiled, example_args=step_args)
-
-    # the generate loop: warmup run (absorbs tracing), then timed repeats
-    out = greedy_generate(model, params, prompt, args.gen, cache_len, step=step)
-    timing = perf.time_callable(
-        greedy_generate, model, params, prompt, args.gen, cache_len,
-        step=step, warmup=0, repeats=args.repeats,
-    )
-    tokens_per_s = args.batch * args.gen / (timing.median_us / 1e6)
-
-    record = perf.PerfRecord(
-        name=f"serve_{cfg.name}",
-        us_per_step=timing.as_dict(),
-        samples_per_s=tokens_per_s,
-        compile_s=compile_s,
-        lower_s=lower_s,
-        memory=mem,
-        extra={"batch": args.batch, "prompt_len": args.prompt_len, "gen": args.gen,
-               "us_per_generate_loop": timing.median_us},
-    )
-    print(json.dumps({
-        "arch": cfg.name,
-        "batch": args.batch,
-        "generated_shape": list(out.shape),
-        "tokens_per_s": round(tokens_per_s, 1),
-        "sample": out[0].tolist(),
-        "perf": record.as_dict(),
-    }))
+    if args.serial:
+        import time
+        lat = []
+        outs = []
+        t0 = time.perf_counter()
+        for p, g in zip(prompts, gens):
+            s0 = time.perf_counter()
+            toks = greedy_generate(model, params, np.asarray(p)[None], g, max_len)
+            jax.block_until_ready(toks)
+            lat.append(time.perf_counter() - s0)
+            outs.append([int(t) for t in toks[0]])
+        elapsed = time.perf_counter() - t0
+        latency = perf.LatencyStats.from_samples(lat)
+        payload = {
+            "mode": "serial", "arch": cfg.name, "requests": args.requests,
+            "qps": round(args.requests / elapsed, 2),
+            "latency_us": latency.as_dict(),
+            "sample": outs[0],
+        }
+        record = perf.PerfRecord(
+            name=f"serve_serial_{cfg.name}", latency=latency.as_dict(),
+            samples_per_s=args.requests / elapsed,
+            extra={"requests": args.requests, "gen": args.gen},
+        )
+    else:
+        scfg = serve.ServeConfig(
+            slots=args.slots, page_size=pg, max_len=max_len,
+            max_new_tokens=args.gen, default_timeout_s=args.timeout_s,
+        )
+        ex, ids, stats = run_continuous(model, params, prompts, gens, scfg)
+        payload = {
+            "mode": "continuous", "arch": cfg.name, "requests": args.requests,
+            "statuses": {s: sum(ex.results[i].status == s for i in ids)
+                         for s in set(ex.results[i].status for i in ids)},
+            "qps": round(stats.qps, 2),
+            "latency_us": None if stats.latency is None else stats.latency.as_dict(),
+            "decode_steps": stats.steps,
+            "memory": stats.memory,
+            "sample": ex.results[ids[0]].tokens,
+        }
+        record = perf.PerfRecord(
+            name=f"serve_{cfg.name}",
+            latency=None if stats.latency is None else stats.latency.as_dict(),
+            samples_per_s=stats.qps if np.isfinite(stats.qps) else None,
+            extra={"requests": args.requests, "gen": args.gen,
+                   "slots": args.slots, "decode_steps": stats.steps,
+                   "cache_peak_bytes": stats.memory["peak_bytes"]},
+        )
+    payload["perf"] = record.as_dict()
+    print(json.dumps(payload))
 
 
 if __name__ == "__main__":

@@ -158,10 +158,19 @@ def self_attention(
             out = _sdpa(q, k, v, mask, softcap=cfg.attn_logit_softcap)
         new_cache = None
     else:
-        # one-token decode: insert k/v at cache_pos, attend over the cache
+        # decode: insert the S new k/v rows at cache_pos, attend over the
+        # cache. cache_pos is a scalar start (uniform batch — a contiguous
+        # dynamic_update_slice) or a (B,) vector of per-lane starts
+        # (continuous batching with staggered sequence lengths — a scatter).
         T = cache["k"].shape[1]
-        ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype), (0, cache_pos, 0, 0))
-        cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype), (0, cache_pos, 0, 0))
+        if jnp.ndim(cache_pos) == 0:
+            ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype), (0, cache_pos, 0, 0))
+            cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype), (0, cache_pos, 0, 0))
+        else:
+            lane = jnp.arange(B)[:, None]
+            idx = cache_pos[:, None] + jnp.arange(S)
+            ck = cache["k"].at[lane, idx].set(k.astype(cache["k"].dtype))
+            cv = cache["v"].at[lane, idx].set(v.astype(cache["v"].dtype))
         kv_pos = jnp.arange(T)
         mask = make_mask(positions, kv_pos, causal=True, local_flag=local_flag, window=cfg.sliding_window)
         out = _sdpa(q, ck.astype(q.dtype), cv.astype(q.dtype), mask, softcap=cfg.attn_logit_softcap)
@@ -228,10 +237,16 @@ def mla_attention(cfg, p, x, positions, *, cache=None, cache_pos=None):
     krope = cm.apply_rope(krope[:, :, None, :], positions, cfg.rope_theta)[:, :, 0]  # shared head
 
     if cache is not None:
-        ckv = jax.lax.dynamic_update_slice(cache["ckv"], ckv.astype(cache["ckv"].dtype), (0, cache_pos, 0))
-        krope = jax.lax.dynamic_update_slice(
-            cache["krope"], krope.astype(cache["krope"].dtype), (0, cache_pos, 0)
-        )
+        if jnp.ndim(cache_pos) == 0:
+            ckv = jax.lax.dynamic_update_slice(cache["ckv"], ckv.astype(cache["ckv"].dtype), (0, cache_pos, 0))
+            krope = jax.lax.dynamic_update_slice(
+                cache["krope"], krope.astype(cache["krope"].dtype), (0, cache_pos, 0)
+            )
+        else:  # per-lane starts (continuous batching): scatter rows
+            lane = jnp.arange(B)[:, None]
+            idx = cache_pos[:, None] + jnp.arange(S)
+            ckv = cache["ckv"].at[lane, idx].set(ckv.astype(cache["ckv"].dtype))
+            krope = cache["krope"].at[lane, idx].set(krope.astype(cache["krope"].dtype))
         new_cache = {"ckv": ckv, "krope": krope}
         T = ckv.shape[1]
         kv_pos = jnp.arange(T)

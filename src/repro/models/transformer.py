@@ -97,11 +97,17 @@ def _maybe_remat(cfg, body):
     return jax.checkpoint(body, prevent_cse=False) if cfg.remat else body
 
 
-def _embed(cfg, params, tokens, dtype):
+def _embed(cfg, params, tokens, dtype, positions=None):
+    """positions: (B, S) absolute positions for learned pos-embed lookup;
+    None means tokens start at position 0 (the train/prefill case). Decode
+    MUST pass real positions — indexing ``pos_embed[:S]`` there would add
+    the position-0 embedding to every generated token."""
     x = params["embed"][tokens].astype(dtype) * jnp.sqrt(cfg.d_model).astype(dtype)
     if cfg.pos_embed == "learned":
-        S = tokens.shape[1]
-        x = x + params["pos_embed"][:S].astype(dtype)
+        if positions is None:
+            x = x + params["pos_embed"][: tokens.shape[1]].astype(dtype)
+        else:
+            x = x + params["pos_embed"][positions].astype(dtype)
     return x
 
 
@@ -426,14 +432,28 @@ def init_cache(cfg, batch: int, cache_len: int, dtype=jnp.bfloat16) -> PyTree:
 
 
 def decode_step(cfg, params: PyTree, cache: PyTree, tokens: jnp.ndarray, pos) -> Tuple[jnp.ndarray, PyTree]:
-    """tokens: (B, 1) int32; pos: scalar int32 index of the new token.
-    Returns (logits (B,1,V) f32, new_cache)."""
+    """tokens: (B, S) int32 — S = 1 for one-token decode, S > 1 for a
+    chunked teacher-forced prefill block (attention-cache families only;
+    the recurrent families advance their state one token per call).
+
+    pos: int32 position of tokens[:, 0] — a scalar when every lane is at
+    the same position, or a (B,) vector of per-lane positions (continuous
+    batching over staggered sequences; K/V rows scatter per lane). Token j
+    of the chunk lands at position pos + j.
+
+    Returns (logits (B,S,V) f32, new_cache)."""
 
     dtype = cm.dtype_of(cfg.dtype)
     fam = cfg.family
-    B = tokens.shape[0]
-    x = _embed(cfg, params, tokens, dtype)
-    positions = jnp.full((B, 1), pos, jnp.int32)
+    B, S = tokens.shape
+    if S != 1 and fam in ("ssm", "hybrid"):
+        raise ValueError(
+            f"family {fam!r} is recurrent: decode_step advances one token per "
+            "call (chunked prefill uses the token-scan path, repro.serve.prefill)"
+        )
+    pos_col = pos[:, None] if jnp.ndim(pos) else jnp.full((B, 1), pos, jnp.int32)
+    positions = pos_col + jnp.arange(S, dtype=jnp.int32)[None]
+    x = _embed(cfg, params, tokens, dtype, positions=positions)
 
     if fam == "dense":
         flags = _flags(cfg)

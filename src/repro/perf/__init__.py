@@ -40,6 +40,7 @@ from repro.perf.record import (
     write_json_atomic,
 )
 from repro.perf.timers import (
+    LatencyStats,
     StepMeasurement,
     TimingStats,
     compile_split,
@@ -67,7 +68,7 @@ def profile_step(name: str, fn, *args, samples_per_step: Optional[float] = None,
 
 
 __all__ = [
-    "GateReport", "MemoryStats", "PerfRecord", "SCHEMA_VERSION",
+    "GateReport", "LatencyStats", "MemoryStats", "PerfRecord", "SCHEMA_VERSION",
     "StepMeasurement", "TimingStats", "Tolerance",
     "bench_payload", "census", "census_of", "compare_dirs", "compare_record",
     "compile_split", "compiled_memory", "device_memory", "env_info",

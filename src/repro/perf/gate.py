@@ -11,6 +11,8 @@ never fails):
   shared CPU runners is noisy; the band catches order-of-magnitude
   regressions, the trajectory catches drift)
 * ``samples_per_s``       — inverse ratio band (same default)
+* ``latency.p50_us/p99_us`` — ratio band (same default as time: served
+  tail latency on shared runners inherits the same noise floor)
 * ``memory.peak_bytes``   — ratio band, default 1.15x (buffer assignment
   is deterministic; 15% absorbs compiler-version churn)
 * ``collectives.*_count`` — EXACT. A new all-reduce is a structural
@@ -84,6 +86,15 @@ def compare_record(bench: str, current: Dict[str, Any], baseline: Dict[str, Any]
         limit = base_s / tol.throughput_ratio
         if cur_s < limit:
             out.append(Violation(bench, name, "samples_per_s", base_s, cur_s, limit))
+
+    cur_l, base_l = current.get("latency"), baseline.get("latency")
+    if cur_l and base_l:
+        for key in ("p50_us", "p99_us"):  # the served-SLO pair (timers.LatencyStats)
+            if key in cur_l and key in base_l:
+                limit = base_l[key] * tol.time_ratio
+                if cur_l[key] > limit:
+                    out.append(Violation(bench, name, f"latency.{key}",
+                                         base_l[key], cur_l[key], limit))
 
     cur_m, base_m = _peak_bytes(current), _peak_bytes(baseline)
     if cur_m is not None and base_m is not None and base_m > 0:

@@ -27,6 +27,7 @@ from repro.perf.timers import StepMeasurement, TimingStats
 SCHEMA_VERSION = 1
 
 _TIMING_KEYS = {"median_us", "iqr_us", "min_us", "max_us", "mean_us", "repeats", "warmup"}
+_LATENCY_KEYS = {"p50_us", "p90_us", "p99_us", "mean_us", "max_us", "n"}
 
 
 @dataclasses.dataclass
@@ -42,6 +43,7 @@ class PerfRecord:
     lower_s: Optional[float] = None
     memory: Optional[Dict[str, Any]] = None  # memory.memory_report()
     collectives: Optional[Dict[str, Any]] = None  # collectives.census()
+    latency: Optional[Dict[str, Any]] = None  # timers.LatencyStats.as_dict()
     extra: Dict[str, Any] = dataclasses.field(default_factory=dict)
     schema_version: int = SCHEMA_VERSION
 
@@ -107,9 +109,16 @@ def validate_record(d: Dict[str, Any]) -> List[str]:
         if not isinstance(coll, dict) or "total_count" not in coll \
                 or "all-reduce_count" not in coll:
             errors.append("record.collectives must carry per-type and total counts")
-    if d.get("us_per_step") is None and mem is None and coll is None:
+    lat = d.get("latency")
+    if lat is not None:
+        if not isinstance(lat, dict) or not _LATENCY_KEYS <= set(lat):
+            errors.append(f"record.latency must carry {sorted(_LATENCY_KEYS)}")
+        elif lat["p50_us"] <= 0 or lat["p99_us"] < lat["p50_us"]:
+            errors.append("record.latency needs p50_us > 0 and p99_us >= p50_us")
+    if d.get("us_per_step") is None and mem is None and coll is None \
+            and lat is None:
         errors.append(f"record {d.get('name')!r} carries no measured section "
-                      "(us_per_step / memory / collectives)")
+                      "(us_per_step / memory / collectives / latency)")
     return errors
 
 

@@ -51,6 +51,37 @@ class TimingStats:
 
 
 @dataclasses.dataclass(frozen=True)
+class LatencyStats:
+    """Tail-latency percentiles over per-request wall times (us).
+
+    TimingStats measures one callable repeated under identical
+    conditions — median + IQR is the right summary. Serving latency is
+    the opposite regime: heterogeneous requests contending for batch
+    slots, where the *tail* is the SLO. Hence explicit p50/p90/p99."""
+
+    p50_us: float
+    p90_us: float
+    p99_us: float
+    mean_us: float
+    max_us: float
+    n: int
+
+    def as_dict(self) -> Dict[str, Any]:
+        return dataclasses.asdict(self)
+
+    @staticmethod
+    def from_samples(samples_s: Sequence[float]) -> "LatencyStats":
+        if len(samples_s) == 0:
+            raise ValueError("LatencyStats needs at least one sample")
+        us = np.asarray(samples_s, dtype=np.float64) * 1e6
+        p50, p90, p99 = np.percentile(us, [50, 90, 99])
+        return LatencyStats(
+            p50_us=float(p50), p90_us=float(p90), p99_us=float(p99),
+            mean_us=float(us.mean()), max_us=float(us.max()), n=int(us.size),
+        )
+
+
+@dataclasses.dataclass(frozen=True)
 class StepMeasurement:
     """One measured step function: run stats + the compile split + the
     compiled executable (reusable for memory / collective accounting)."""

@@ -1,0 +1,62 @@
+"""Production score/decode serving (docs/serve.md, DESIGN.md §12).
+
+The pipeline: ``queue`` (admission, deadlines, shed) -> ``batcher``
+(continuous batching over fixed decode lanes, bucketed view lengths) ->
+``cache`` (paged KV/recurrent-state pool, free-list allocator) ->
+``executor`` (async dispatch, graceful degradation, p50/p99 telemetry).
+``prefill`` holds the single-call chunked teacher-forced prefill shared
+by the batched and serial paths, and ``score_api`` serves dataopt
+per-example scores through the same queue machinery.
+
+    from repro import serve
+
+    ex = serve.ServeExecutor(model, params, serve.ServeConfig(slots=8))
+    rid = ex.submit(prompt_ids, max_new_tokens=16)
+    stats = ex.run()                      # ServeStats: qps, p50/p99, sheds
+    ex.results[rid].tokens               # greedy tokens (== serial reference)
+"""
+
+from repro.serve.batcher import ContinuousBatcher, ServeConfig, decode_buckets
+from repro.serve.cache import (
+    CacheSpec,
+    LeafSpec,
+    PagedCache,
+    PagedCacheError,
+    build_spec,
+    dense_cache_bytes,
+    gather_dense,
+    scatter_token,
+)
+from repro.serve.executor import (
+    OK_STATUSES,
+    STATUS_ERROR,
+    STATUS_FALLBACK,
+    STATUS_OK,
+    STATUS_REJECTED,
+    STATUS_SHED_DEADLINE,
+    STATUS_SHED_OVERFLOW,
+    RequestResult,
+    ServeExecutor,
+    ServeStats,
+)
+from repro.serve.prefill import chunked_prefill, greedy_generate
+from repro.serve.queue import (
+    QueueClosed,
+    QueueFull,
+    QueueStats,
+    Request,
+    RequestQueue,
+    ShedEvent,
+)
+from repro.serve.score_api import ScoreAPI, ScoreAPIStats, ScoreStore
+
+__all__ = [
+    "CacheSpec", "ContinuousBatcher", "LeafSpec", "OK_STATUSES",
+    "PagedCache", "PagedCacheError", "QueueClosed", "QueueFull", "QueueStats",
+    "Request", "RequestQueue", "RequestResult", "STATUS_ERROR",
+    "STATUS_FALLBACK", "STATUS_OK", "STATUS_REJECTED", "STATUS_SHED_DEADLINE",
+    "STATUS_SHED_OVERFLOW", "ScoreAPI", "ScoreAPIStats", "ScoreStore",
+    "ServeConfig", "ServeExecutor", "ServeStats", "ShedEvent",
+    "build_spec", "chunked_prefill", "decode_buckets", "dense_cache_bytes",
+    "gather_dense", "greedy_generate", "scatter_token",
+]

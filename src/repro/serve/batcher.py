@@ -1,0 +1,279 @@
+"""Continuous batching over fixed decode lanes (docs/serve.md §3).
+
+The decode batch is ``slots`` fixed lanes. A lane is bound to one
+request from admission to retirement; finished lanes free immediately
+and the next queued request prefills into the freed slot — *joining the
+in-flight batch between steps without recompiling*, because the jitted
+step's shapes depend only on ``(slots, bucket_len, pool_capacity)``,
+never on which lanes are live.
+
+One decode step is ONE jitted call fusing gather (paged pool -> dense
+bucket view) -> ``decode_step`` -> scatter (one column per lane back to
+its page), with the pool/state buffers donated so XLA can update pages
+in place. The bucket view length is the smallest member of a
+power-of-two page-multiple bucket set covering the longest live lane —
+short traffic never pays long-context attention, and the bucket set is
+capped by the same HBM-budget arithmetic ``scale/plan.py`` applies to
+training microbatches (``hbm_budget_bytes``).
+
+Per-lane positions are ragged (``pos[lane] = seq_len``): a lane
+admitted at step 1000 decodes its position-7 token in the same call a
+long lane decodes position 900. Inactive lanes run the step on trash
+inputs (position 0, trash page) and their outputs are discarded.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import common as cm
+from repro.serve import prefill as prefill_mod
+from repro.serve.cache import CacheSpec, PagedCache, gather_dense, scatter_token
+from repro.serve.queue import Request
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    """Knobs for the serving stack. ``max_len`` bounds prompt + generated
+    tokens per request and must be a multiple of ``page_size``;
+    ``dtype=None`` serves in the model config's dtype
+    (``models.common.dtype_of``)."""
+
+    slots: int = 4
+    page_size: int = 8
+    max_len: int = 128
+    max_new_tokens: int = 16
+    queue_depth: int = 64
+    default_timeout_s: Optional[float] = None
+    prefill_mode: str = "auto"  # "auto" | "block" | "scan"
+    hbm_budget_bytes: Optional[int] = None
+    initial_pages: Optional[int] = None
+    max_pages: Optional[int] = None
+    dtype: Optional[str] = None
+
+
+def decode_buckets(spec: CacheSpec, cfg: ServeConfig) -> Tuple[int, ...]:
+    """Power-of-two page-multiple view lengths up to ``max_len``, filtered
+    by the gathered-view HBM cost (``slots x bucket x bytes/token`` — the
+    transient the gather materializes on top of the pool). The ``max_len``
+    bucket must survive the filter: a request the config admits must also
+    be decodable."""
+
+    buckets: List[int] = []
+    b = cfg.page_size
+    while b < cfg.max_len:
+        buckets.append(b)
+        b *= 2
+    buckets.append(cfg.max_len)
+    if cfg.hbm_budget_bytes is not None:
+        per_token = spec.token_view_bytes() * cfg.slots
+        kept = [b for b in buckets if b * per_token <= cfg.hbm_budget_bytes]
+        if cfg.max_len not in kept:
+            raise ValueError(
+                f"hbm_budget_bytes={cfg.hbm_budget_bytes} cannot fit the "
+                f"max_len={cfg.max_len} decode view "
+                f"({cfg.max_len * per_token} bytes); lower max_len or slots")
+        buckets = kept
+    return tuple(buckets)
+
+
+@functools.lru_cache(maxsize=None)  # (Model identity, frozen spec)-keyed:
+def _fused_step(model, spec):       # batchers over the same model share
+    """gather -> decode_step -> scatter as ONE jitted call, pool/state
+    buffers donated so XLA updates pages in place."""
+
+    def step(params, pools, states, table_view, pos, tokens, active):
+        dense = gather_dense(spec, pools, states, table_view)
+        logits, new_cache = model.decode_step(params, dense,
+                                              tokens[:, None], pos)
+        pools, states = scatter_token(spec, pools, states, new_cache,
+                                      table_view, pos, active)
+        lg = logits[:, 0].astype(jnp.float32)
+        next_tok = jnp.argmax(lg, axis=-1).astype(jnp.int32)
+        finite = jnp.all(jnp.isfinite(lg), axis=-1)
+        return pools, states, next_tok, finite
+
+    return jax.jit(step, donate_argnums=(1, 2))
+
+
+@dataclasses.dataclass
+class Lane:
+    """One live request bound to a decode slot."""
+
+    request: Request
+    slot: int
+    prompt_len: int
+    target_new: int
+    tokens: List[int]
+    admitted_t: float
+
+
+@dataclasses.dataclass
+class PendingStep:
+    """In-flight device step: arrays are uncommitted futures until
+    ``harvest`` blocks on them."""
+
+    next_tok: jnp.ndarray
+    finite: jnp.ndarray
+    lanes: List[Optional[Lane]]
+    bucket: int
+
+
+class ContinuousBatcher:
+    """Admission + fused-step mechanics. The executor owns the loop,
+    deadlines and terminal statuses; this class owns lanes, pages and
+    the jitted step."""
+
+    def __init__(self, model, params, cfg: ServeConfig):
+        if model.cfg.family == "encoder":
+            raise ValueError(
+                f"{model.cfg.name!r} is encoder-only: no decode step to serve")
+        if cfg.max_len % cfg.page_size != 0:
+            raise ValueError("max_len must be a multiple of page_size")
+        self.model = model
+        self.params = params
+        self.cfg = cfg
+        self.dtype = cm.dtype_of(cfg.dtype if cfg.dtype is not None
+                                 else model.cfg.dtype)
+        self.cache = PagedCache(
+            model, slots=cfg.slots, page_size=cfg.page_size,
+            max_len=cfg.max_len, dtype=self.dtype,
+            initial_pages=cfg.initial_pages, max_pages=cfg.max_pages,
+        )
+        self.buckets = decode_buckets(self.cache.spec, cfg)
+        self.lanes: List[Optional[Lane]] = [None] * cfg.slots
+        self._step_fn = _fused_step(model, self.cache.spec)
+        self.steps_dispatched = 0
+
+    # -- admission -----------------------------------------------------------
+
+    def can_admit(self) -> bool:
+        return self.cache.free_slot_count() > 0
+
+    def admit(self, request: Request, now: float) -> Lane:
+        """Prefill the request's prompt into a free slot. The prompt is
+        right-padded to a page multiple; one chunked-prefill call produces
+        the first greedy token and the slot's pages/state."""
+
+        prompt = np.asarray(request.payload["prompt"], np.int32).reshape(-1)
+        target_new = int(request.payload.get("max_new_tokens",
+                                             self.cfg.max_new_tokens))
+        P = int(prompt.size)
+        if P < 1:
+            raise ValueError("empty prompt")
+        if P + target_new > self.cfg.max_len:
+            raise ValueError(
+                f"prompt_len={P} + max_new_tokens={target_new} exceeds "
+                f"max_len={self.cfg.max_len}")
+        pg = self.cfg.page_size
+        P_pad = pg * math.ceil(P / pg)
+        slot = self.cache.alloc_slot()
+        try:
+            self.cache.reserve(slot, P)
+            cache0 = self.model.init_cache(1, P_pad, dtype=self.dtype)
+            padded = np.zeros((1, P_pad), np.int32)
+            padded[0, :P] = prompt
+            last, filled = prefill_mod.chunked_prefill(
+                self.model, self.params, jnp.asarray(padded), cache0,
+                lengths=jnp.asarray([P], jnp.int32),
+                mode=self.cfg.prefill_mode,
+            )
+            self.cache.write_prefill(slot, filled, P)
+        except Exception:
+            self.cache.free(slot)
+            raise
+        tok0 = int(jnp.argmax(last[0], axis=-1))
+        lane = Lane(request=request, slot=slot, prompt_len=P,
+                    target_new=target_new, tokens=[tok0], admitted_t=now)
+        self.lanes[slot] = lane
+        return lane
+
+    # -- decode --------------------------------------------------------------
+
+    def live_lanes(self) -> List[Lane]:
+        return [ln for ln in self.lanes if ln is not None]
+
+    def lane_done(self, lane: Lane) -> bool:
+        return len(lane.tokens) >= lane.target_new
+
+    def bucket_for(self, need: int) -> int:
+        for b in self.buckets:
+            if b >= need:
+                return b
+        raise ValueError(f"no bucket covers length {need}")  # unreachable: max_len gates admission
+
+    def dispatch(self) -> Optional[PendingStep]:
+        """Launch one fused decode step for all live lanes (async — the
+        returned arrays are futures). Returns None when no lane is live."""
+
+        live = self.live_lanes()
+        if not live:
+            return None
+        need = 0
+        for ln in live:
+            self.cache.reserve(ln.slot, int(self.cache.seq_lens[ln.slot]) + 1)
+            need = max(need, int(self.cache.seq_lens[ln.slot]) + 1)
+        bucket = self.bucket_for(need)
+
+        S = self.cfg.slots
+        pos = np.zeros((S,), np.int32)
+        toks = np.zeros((S,), np.int32)
+        active = np.zeros((S,), bool)
+        for ln in live:
+            pos[ln.slot] = self.cache.seq_lens[ln.slot]
+            toks[ln.slot] = ln.tokens[-1]
+            active[ln.slot] = True
+
+        pools, states, next_tok, finite = self._step_fn(
+            self.params, self.cache.pools, self.cache.states,
+            self.cache.table_view(bucket), jnp.asarray(pos),
+            jnp.asarray(toks), jnp.asarray(active),
+        )
+        # the old pool buffers were donated — rebind before anything else
+        # can touch them
+        self.cache.pools = pools
+        self.cache.states = states
+        self.steps_dispatched += 1
+        return PendingStep(next_tok=next_tok, finite=finite,
+                           lanes=list(self.lanes), bucket=bucket)
+
+    def harvest(self, pending: PendingStep) -> List[Tuple[Lane, int, bool]]:
+        """Block on a dispatched step; append each live lane's token and
+        advance its length. Returns ``(lane, token, finite)`` per lane —
+        the executor decides retirement."""
+
+        next_tok = np.asarray(pending.next_tok)
+        finite = np.asarray(pending.finite)
+        out: List[Tuple[Lane, int, bool]] = []
+        for slot, lane in enumerate(pending.lanes):
+            if lane is None or self.lanes[slot] is not lane:
+                continue  # retired while in flight (executor shed it)
+            tok = int(next_tok[slot])
+            ok = bool(finite[slot])
+            if ok:
+                lane.tokens.append(tok)
+                self.cache.set_len(slot, int(self.cache.seq_lens[slot]) + 1)
+            out.append((lane, tok, ok))
+        return out
+
+    def retire(self, lane: Lane) -> None:
+        self.cache.free(lane.slot)
+        self.lanes[lane.slot] = None
+
+    # -- telemetry -----------------------------------------------------------
+
+    def memory_stats(self) -> Dict[str, Any]:
+        return {
+            "allocated_bytes": self.cache.allocated_bytes(),
+            "peak_bytes": self.cache.peak_bytes,
+            "live_tokens": self.cache.live_tokens(),
+            "grow_events": self.cache.grow_events,
+            "buckets": list(self.buckets),
+        }

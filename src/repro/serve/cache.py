@@ -1,0 +1,396 @@
+"""Paged decode cache: fixed-size pages, a free-list allocator, and ragged
+``qo_indptr`` accounting, generic over every decoder cache layout in
+``models/`` (docs/serve.md §4).
+
+Dense serving preallocates ``batch x max_len`` cache — almost all of it
+dead for mixed-length traffic. Here the *time* axis of every cache leaf
+is chopped into fixed-size pages living in one shared pool; a per-slot
+page table maps logical token positions to physical pages, so allocated
+bytes track live tokens (plus one partially-filled page per sequence)
+and the pool grows by doubling only when the free list runs dry.
+
+Which axis is "time"? Not hard-coded per family: the layouts differ
+(dense KV ``(L,B,T,KV,Dh)``, hybrid ``(G,B,T,KV,Dh)`` attention plus
+``(G,K,B,...)`` recurrent state, audio cross-KV with a *config-sized*
+``enc_seq`` axis that must NOT be paged). ``build_spec`` probes
+``init_cache`` under ``jax.eval_shape`` with two batch sizes and two
+cache lengths: the axis that moves with ``cache_len`` is the time axis
+(paged), leaves with no such axis are per-slot state (RWKV/Mamba
+recurrent state, encoder cross-KV) stored dense at ``slots`` lanes.
+
+Physical page 0 is reserved as a trash page: inactive lanes' page-table
+rows are all-zero, so their decode writes land in the trash and their
+gathers read finite garbage that the batcher discards — no masking
+branches inside the jitted step. ``gather_dense`` / ``scatter_token``
+are pure functions of (pools, states, table-view) so the batcher can
+fuse gather -> decode_step -> scatter into ONE jitted call with the pool
+buffers donated.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import common as cm
+
+PyTree = Any
+
+
+class PagedCacheError(RuntimeError):
+    """Allocation failure: pool capacity exhausted at ``max_pages``."""
+
+
+@dataclasses.dataclass(frozen=True)
+class LeafSpec:
+    """Axis roles for one cache leaf. ``time_axis is None`` => state leaf."""
+
+    batch_axis: int
+    time_axis: Optional[int]
+    rest_shape: Tuple[int, ...]  # non-batch non-time dims, original order
+    dtype: Any
+
+    @property
+    def paged(self) -> bool:
+        return self.time_axis is not None
+
+
+@dataclasses.dataclass(frozen=True)
+class CacheSpec:
+    """Static layout of a model's decode cache under paging."""
+
+    treedef: Any
+    leaves: Tuple[LeafSpec, ...]
+    paged_idx: Tuple[int, ...]  # leaf indices with a time axis
+    state_idx: Tuple[int, ...]
+    page_size: int
+
+    def token_view_bytes(self) -> int:
+        """Bytes per (lane, token) of a gathered dense view — the unit the
+        bucket planner multiplies by ``slots x bucket_len``."""
+
+        total = 0
+        for i in self.paged_idx:
+            ls = self.leaves[i]
+            total += int(np.prod(ls.rest_shape, dtype=np.int64)) * jnp.dtype(ls.dtype).itemsize
+        return total
+
+    def state_bytes(self, slots: int) -> int:
+        total = 0
+        for i in self.state_idx:
+            ls = self.leaves[i]
+            total += slots * int(np.prod(ls.rest_shape, dtype=np.int64)) \
+                * jnp.dtype(ls.dtype).itemsize
+        return total
+
+
+def _axis_diff(a: Sequence[int], b: Sequence[int]) -> List[int]:
+    return [i for i, (x, y) in enumerate(zip(a, b)) if x != y]
+
+
+def build_spec(model, *, page_size: int, dtype,
+               allow_unpaged: bool = True) -> CacheSpec:
+    """Probe ``model.init_cache`` under eval_shape to classify every leaf's
+    axes. No device memory is touched.
+
+    A pure-recurrent cache (RWKV/Mamba: every leaf constant-size state)
+    has nothing to page — paging degenerates to the dense per-slot state
+    store, which already scales with slots rather than length. Pass
+    ``allow_unpaged=False`` to reject that instead."""
+
+    if page_size < 1:
+        raise ValueError("page_size must be >= 1")
+    b1, b2, l1, l2 = 2, 3, 2 * page_size, 3 * page_size
+    t_ref = jax.eval_shape(lambda: model.init_cache(b1, l1, dtype=dtype))
+    t_b = jax.eval_shape(lambda: model.init_cache(b2, l1, dtype=dtype))
+    t_l = jax.eval_shape(lambda: model.init_cache(b1, l2, dtype=dtype))
+
+    ref_leaves, treedef = jax.tree_util.tree_flatten(t_ref)
+    b_leaves = jax.tree_util.tree_leaves(t_b)
+    l_leaves = jax.tree_util.tree_leaves(t_l)
+
+    specs: List[LeafSpec] = []
+    for ref, lb, ll in zip(ref_leaves, b_leaves, l_leaves):
+        bdiff = _axis_diff(ref.shape, lb.shape)
+        if len(bdiff) != 1:
+            raise ValueError(
+                f"cache leaf {ref.shape} has {len(bdiff)} batch-dependent axes; "
+                "paged serving needs exactly one")
+        tdiff = _axis_diff(ref.shape, ll.shape)
+        if len(tdiff) > 1:
+            raise ValueError(
+                f"cache leaf {ref.shape} has {len(tdiff)} cache_len-dependent axes")
+        b_ax = bdiff[0]
+        t_ax = tdiff[0] if tdiff else None
+        rest = tuple(d for i, d in enumerate(ref.shape) if i not in (b_ax, t_ax))
+        specs.append(LeafSpec(b_ax, t_ax, rest, ref.dtype))
+
+    paged = tuple(i for i, s in enumerate(specs) if s.paged)
+    state = tuple(i for i, s in enumerate(specs) if not s.paged)
+    if not paged and not allow_unpaged:
+        raise ValueError("no cache leaf depends on cache_len — nothing to page")
+    return CacheSpec(treedef, tuple(specs), paged, state, page_size)
+
+
+def dense_cache_bytes(model, batch: int, cache_len: int, dtype) -> int:
+    """Bytes a dense ``init_cache(batch, cache_len)`` would allocate
+    (eval_shape — nothing is materialized). The bench's paged-vs-dense
+    comparison point."""
+
+    tree = jax.eval_shape(lambda: model.init_cache(batch, cache_len, dtype=dtype))
+    return sum(int(np.prod(l.shape, dtype=np.int64)) * jnp.dtype(l.dtype).itemsize
+               for l in jax.tree_util.tree_leaves(tree))
+
+
+# ---------------------------------------------------------------------------
+# pure view/update functions (jit-safe; the batcher fuses them around
+# decode_step with the pools donated)
+# ---------------------------------------------------------------------------
+
+
+def _dense_perm(ls: LeafSpec) -> Tuple[int, ...]:
+    """transpose perm taking ``(B, T, *rest)`` to the leaf's native layout."""
+
+    ndim = 2 + len(ls.rest_shape)
+    others = [i for i in range(ndim) if i not in (ls.batch_axis, ls.time_axis)]
+    perm = [0] * ndim
+    perm[ls.batch_axis] = 0
+    perm[ls.time_axis] = 1
+    for k, i in enumerate(others):
+        perm[i] = 2 + k
+    return tuple(perm)
+
+
+def _bt_first(leaf: jnp.ndarray, ls: LeafSpec) -> jnp.ndarray:
+    """The leaf as ``(B, T, *rest)`` (inverse of ``_dense_perm``)."""
+
+    return jnp.moveaxis(leaf, (ls.batch_axis, ls.time_axis), (0, 1))
+
+
+def gather_dense(spec: CacheSpec, pools: List[jnp.ndarray],
+                 states: List[jnp.ndarray], table_view: jnp.ndarray) -> PyTree:
+    """Materialize a dense cache view of ``table_view.shape[1] * page_size``
+    tokens per lane from the pools. Inactive lanes (all-zero table rows)
+    read the trash page — finite garbage, discarded by the caller."""
+
+    nv = table_view.shape[1]
+    dense: List[Any] = [None] * len(spec.leaves)
+    for j, i in enumerate(spec.paged_idx):
+        ls = spec.leaves[i]
+        v = pools[j][table_view]  # (slots, nv, page, *rest)
+        v = v.reshape(v.shape[0], nv * spec.page_size, *v.shape[3:])
+        dense[i] = jnp.transpose(v, _dense_perm(ls))
+    for j, i in enumerate(spec.state_idx):
+        dense[i] = states[j]
+    return jax.tree_util.tree_unflatten(spec.treedef, dense)
+
+
+def scatter_token(spec: CacheSpec, pools: List[jnp.ndarray],
+                  states: List[jnp.ndarray], new_cache: PyTree,
+                  table_view: jnp.ndarray, pos: jnp.ndarray,
+                  active: jnp.ndarray) -> Tuple[List[jnp.ndarray], List[jnp.ndarray]]:
+    """Write back one decoded token per lane: extract column ``pos[lane]``
+    of every paged leaf of ``new_cache`` into physical page
+    ``table[lane, pos // page]``; inactive lanes write the trash page.
+    State leaves are committed only where ``active`` (a retired lane must
+    not clobber a freed slot that may be re-allocated the same step)."""
+
+    new_leaves = jax.tree_util.tree_leaves(new_cache)
+    B = table_view.shape[0]
+    pg = spec.page_size
+    lanes = jnp.arange(B)
+    page_col = jnp.take_along_axis(table_view, (pos // pg)[:, None], axis=1)[:, 0]
+    page_col = jnp.where(active, page_col, 0)
+    off = pos % pg
+
+    new_pools: List[jnp.ndarray] = []
+    for j, i in enumerate(spec.paged_idx):
+        ls = spec.leaves[i]
+        col = _bt_first(new_leaves[i], ls)[lanes, pos]  # (B, *rest)
+        new_pools.append(pools[j].at[page_col, off].set(col.astype(pools[j].dtype)))
+
+    new_states: List[jnp.ndarray] = []
+    for j, i in enumerate(spec.state_idx):
+        ls = spec.leaves[i]
+        shape = [1] * (1 + len(ls.rest_shape))
+        shape[ls.batch_axis] = B
+        keep = active.reshape(shape)
+        new_states.append(jnp.where(keep, new_leaves[i].astype(states[j].dtype),
+                                    states[j]))
+    return new_pools, new_states
+
+
+# ---------------------------------------------------------------------------
+# the host-side allocator
+# ---------------------------------------------------------------------------
+
+
+class PagedCache:
+    """Free-list page allocator + per-slot bookkeeping over device pools.
+
+    ``slots`` is the fixed lane count of the continuous batch (shapes the
+    jitted step compiles for); ``max_len`` caps any single sequence
+    (prompt + generated) and sizes the page table width. The pool starts
+    at ``initial_pages`` physical pages (plus the trash page) and doubles
+    on demand up to ``max_pages``.
+    """
+
+    def __init__(self, model, *, slots: int, page_size: int, max_len: int,
+                 dtype=None, initial_pages: Optional[int] = None,
+                 max_pages: Optional[int] = None):
+        if slots < 1:
+            raise ValueError("slots must be >= 1")
+        if max_len < 1 or max_len % page_size != 0:
+            raise ValueError("max_len must be a positive multiple of page_size")
+        self.model = model
+        self.dtype = cm.dtype_of(model.cfg.dtype) if dtype is None else dtype
+        self.spec = build_spec(model, page_size=page_size, dtype=self.dtype)
+        self.slots = slots
+        self.page_size = page_size
+        self.max_len = max_len
+        self.pages_per_seq = max_len // page_size
+        # +1 everywhere: physical page 0 is the trash page, never allocated
+        self.max_pages = (1 + slots * self.pages_per_seq if max_pages is None
+                          else max_pages)
+        cap = min(self.max_pages, 1 + (initial_pages if initial_pages is not None
+                                       else slots))
+        self.pools: List[jnp.ndarray] = [
+            jnp.zeros((cap, page_size, *self.spec.leaves[i].rest_shape),
+                      self.spec.leaves[i].dtype)
+            for i in self.spec.paged_idx
+        ]
+        self.states: List[jnp.ndarray] = []
+        for i in self.spec.state_idx:
+            ls = self.spec.leaves[i]
+            shape = list(ls.rest_shape)
+            shape.insert(ls.batch_axis, slots)
+            self.states.append(jnp.zeros(tuple(shape), ls.dtype))
+        self._capacity = cap
+        self._free_pages: List[int] = list(range(cap - 1, 0, -1))  # pop() -> low ids first
+        self._free_slots: List[int] = list(range(slots - 1, -1, -1))
+        self.table = np.zeros((slots, self.pages_per_seq), np.int32)
+        self.seq_lens = np.zeros((slots,), np.int64)
+        self.active = np.zeros((slots,), bool)
+        self._pages_held = np.zeros((slots,), np.int64)
+        self.grow_events = 0
+        self.peak_bytes = self.allocated_bytes()
+
+    # -- accounting ----------------------------------------------------------
+
+    def allocated_bytes(self) -> int:
+        """Live allocation: pools at current capacity + state store + table."""
+
+        total = sum(x.size * x.dtype.itemsize for x in self.pools)
+        total += sum(x.size * x.dtype.itemsize for x in self.states)
+        total += self.table.size * self.table.itemsize
+        return int(total)
+
+    def live_tokens(self) -> int:
+        return int(self.seq_lens[self.active].sum())
+
+    def qo_indptr(self) -> np.ndarray:
+        """Ragged row-pointer over active slots' lengths (the aiter-style
+        ``qo_indptr`` a split-KV decode kernel consumes): ``indptr[k+1] -
+        indptr[k]`` is slot k's live length (0 for inactive lanes)."""
+
+        lens = np.where(self.active, self.seq_lens, 0)
+        return np.concatenate([[0], np.cumsum(lens)]).astype(np.int32)
+
+    def free_slot_count(self) -> int:
+        return len(self._free_slots)
+
+    # -- allocation ----------------------------------------------------------
+
+    def _grow(self, min_extra: int) -> None:
+        new_cap = min(self.max_pages, max(2 * self._capacity,
+                                          self._capacity + min_extra))
+        if new_cap <= self._capacity:
+            raise PagedCacheError(
+                f"page pool exhausted: capacity {self._capacity} at "
+                f"max_pages={self.max_pages}")
+        extra = new_cap - self._capacity
+        self.pools = [
+            jnp.concatenate([p, jnp.zeros((extra, *p.shape[1:]), p.dtype)], axis=0)
+            for p in self.pools
+        ]
+        self._free_pages = list(range(new_cap - 1, self._capacity - 1, -1)) \
+            + self._free_pages
+        self._capacity = new_cap
+        self.grow_events += 1
+        self.peak_bytes = max(self.peak_bytes, self.allocated_bytes())
+
+    def alloc_slot(self) -> int:
+        if not self._free_slots:
+            raise PagedCacheError("no free decode slot")
+        slot = self._free_slots.pop()
+        self.table[slot] = 0
+        self.seq_lens[slot] = 0
+        self._pages_held[slot] = 0
+        self.active[slot] = True
+        return slot
+
+    def reserve(self, slot: int, length: int) -> None:
+        """Ensure slot owns pages covering ``length`` tokens."""
+
+        if length > self.max_len:
+            raise PagedCacheError(f"sequence length {length} > max_len={self.max_len}")
+        need = math.ceil(length / self.page_size)
+        held = int(self._pages_held[slot])
+        if need <= held:
+            return
+        if need - held > len(self._free_pages):
+            self._grow(need - held - len(self._free_pages))
+        for k in range(held, need):
+            self.table[slot, k] = self._free_pages.pop()
+        self._pages_held[slot] = need
+
+    def set_len(self, slot: int, length: int) -> None:
+        self.reserve(slot, length)
+        self.seq_lens[slot] = length
+
+    def free(self, slot: int) -> None:
+        held = int(self._pages_held[slot])
+        self._free_pages.extend(int(p) for p in self.table[slot, :held])
+        self.table[slot] = 0
+        self.seq_lens[slot] = 0
+        self._pages_held[slot] = 0
+        self.active[slot] = False
+        self._free_slots.append(slot)
+
+    # -- views / writes ------------------------------------------------------
+
+    def table_view(self, view_len: int) -> jnp.ndarray:
+        """Page-table slice covering ``view_len`` tokens (a bucket length)."""
+
+        if view_len % self.page_size != 0:
+            raise ValueError(f"view_len {view_len} not a multiple of page_size")
+        nv = view_len // self.page_size
+        if nv > self.pages_per_seq:
+            raise ValueError(f"view_len {view_len} > max_len={self.max_len}")
+        return jnp.asarray(self.table[:, :nv])
+
+    def write_prefill(self, slot: int, dense_cache: PyTree, n_tokens: int) -> None:
+        """Commit a B=1 prefill cache (``n_tokens`` valid, padded to a page
+        multiple) into slot's pages + state row, and set its length."""
+
+        n_pages = math.ceil(n_tokens / self.page_size)
+        self.reserve(slot, n_tokens)
+        leaves = jax.tree_util.tree_leaves(dense_cache)
+        pages = jnp.asarray(self.table[slot, :n_pages])
+        for j, i in enumerate(self.spec.paged_idx):
+            ls = self.spec.leaves[i]
+            v = _bt_first(leaves[i], ls)[0, : n_pages * self.page_size]
+            v = v.reshape(n_pages, self.page_size, *v.shape[1:])
+            self.pools[j] = self.pools[j].at[pages].set(v.astype(self.pools[j].dtype))
+        for j, i in enumerate(self.spec.state_idx):
+            ls = self.spec.leaves[i]
+            row = jnp.moveaxis(leaves[i], ls.batch_axis, 0)[0]
+            s = jnp.moveaxis(self.states[j], ls.batch_axis, 0)
+            s = s.at[slot].set(row.astype(s.dtype))
+            self.states[j] = jnp.moveaxis(s, 0, ls.batch_axis)
+        self.seq_lens[slot] = n_tokens

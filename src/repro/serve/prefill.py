@@ -1,0 +1,149 @@
+"""Teacher-forced prefill in ONE jitted call, and the serial greedy
+reference loop (docs/serve.md §3).
+
+The seed's ``greedy_generate`` prefilled with P separate jitted
+``decode_step`` calls — P dispatches, P cache round-trips. Here prefill
+is a single call in one of two modes:
+
+* ``block`` — the whole (right-padded) prompt as one multi-token
+  ``decode_step``. Valid for attention-family caches: padded positions
+  write garbage K/V *beyond* every valid query position, causal masking
+  never attends it, and continuous decode overwrites position ``len``
+  onward token by token before it ever enters a mask. Recurrent
+  families cannot use this (state updates are order-dependent and
+  unmaskable after the fact).
+* ``scan`` — a ``lax.scan`` over single-token steps with per-lane
+  validity gating: ``jnp.where(t < length)`` on every cache leaf (axis-
+  aware via :func:`repro.serve.cache.build_spec`) so a padded lane's
+  recurrent state and cache stop evolving exactly at its length. This
+  is the per-step op sequence of the serial loop, so it is the
+  bitwise-conservative path, and the only correct one for ssm/hybrid.
+
+``mode="auto"`` picks block for attention families and scan for
+recurrent ones. Greedy *token* output is identical to the seed loop in
+both modes (pinned in tests/test_serve.py); block-mode logits are
+additionally bitwise for GQA-style attention, and within float ulps for
+MLA/MoE/cross-attention (different contraction order at S>1).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common as cm
+from repro.serve import cache as cache_mod
+
+RECURRENT_FAMILIES = ("ssm", "hybrid")
+
+
+def default_mode(cfg) -> str:
+    return "scan" if cfg.family in RECURRENT_FAMILIES else "block"
+
+
+@functools.lru_cache(maxsize=None)  # Model is eq=False: identity-keyed
+def _block_fn(model):
+    def fn(params, cache, prompt, lengths):
+        logits, cache = model.decode_step(params, cache, prompt,
+                                          jnp.asarray(0, jnp.int32))
+        last = logits[jnp.arange(prompt.shape[0]), lengths - 1]
+        return last, cache
+    return jax.jit(fn)
+
+
+@functools.lru_cache(maxsize=None)
+def _scan_fn(model):
+    # batch axis per cache leaf, for validity gating (shape probe only;
+    # axes are dtype-independent)
+    spec = cache_mod.build_spec(model, page_size=1, dtype=jnp.float32)
+    baxes = [ls.batch_axis for ls in spec.leaves]
+    treedef = spec.treedef
+
+    def gate(cache_new, cache_old, valid):
+        old = jax.tree_util.tree_leaves(cache_old)
+        new = jax.tree_util.tree_leaves(cache_new)
+        gated = []
+        for ax, o, n in zip(baxes, old, new):
+            shape = [1] * o.ndim
+            shape[ax] = o.shape[ax]
+            gated.append(jnp.where(valid.reshape(shape), n, o))
+        return jax.tree_util.tree_unflatten(treedef, gated)
+
+    def fn(params, cache, prompt, lengths):
+        B, P = prompt.shape
+        # step 0 outside the scan: it fixes the carry dtypes (logits dtype
+        # is family-dependent) and P >= 1 always holds
+        logits, new_cache = model.decode_step(params, cache, prompt[:, :1],
+                                              jnp.asarray(0, jnp.int32))
+        cache = gate(new_cache, cache, 0 < lengths)
+        last = logits[:, 0]
+        if P == 1:
+            return last, cache
+
+        def body(carry, xs):
+            c, lg = carry
+            tok, t = xs
+            step_logits, c_new = model.decode_step(params, c, tok[:, None], t)
+            valid = t < lengths
+            c = gate(c_new, c, valid)
+            lg = jnp.where(valid[:, None], step_logits[:, 0], lg)
+            return (c, lg), None
+
+        ts = jnp.arange(1, P, dtype=jnp.int32)
+        (cache, last), _ = jax.lax.scan(body, (cache, last),
+                                        (prompt[:, 1:].T, ts))
+        return last, cache
+    return jax.jit(fn)
+
+
+def chunked_prefill(model, params, prompt: jnp.ndarray, cache,
+                    *, lengths: Optional[jnp.ndarray] = None,
+                    mode: str = "auto"):
+    """Prefill ``prompt`` (B, P) into ``cache`` with one jitted call.
+
+    ``lengths`` (B,) marks each lane's valid prompt length (``None`` =
+    all P — the uniform serial case). Returns ``(last_logits, cache)``
+    where ``last_logits[b]`` is the logits after lane b's token
+    ``lengths[b] - 1`` — the distribution the first generated token is
+    sampled from.
+    """
+
+    B, P = prompt.shape
+    if mode == "auto":
+        mode = default_mode(model.cfg)
+    if mode == "block" and model.cfg.family in RECURRENT_FAMILIES:
+        raise ValueError(
+            f"block prefill is order-unsafe for family={model.cfg.family!r}; "
+            "use mode='scan'")
+    if mode not in ("block", "scan"):
+        raise ValueError(f"unknown prefill mode {mode!r}")
+    lengths = (jnp.full((B,), P, jnp.int32) if lengths is None
+               else jnp.asarray(lengths, jnp.int32))
+    fn = _block_fn(model) if mode == "block" else _scan_fn(model)
+    return fn(params, cache, prompt, lengths)
+
+
+def greedy_generate(model, params, prompt: jnp.ndarray, gen: int,
+                    cache_len: int, *, step=None, dtype=None,
+                    prefill_mode: str = "auto") -> jnp.ndarray:
+    """Serial dense-cache greedy decode: the correctness reference every
+    served output is pinned against. prompt: (B, P) int32; returns (B, gen)
+    greedy tokens. The cache dtype follows the model config
+    (``models.common.dtype_of``) unless overridden — the seed hard-coded
+    f32, silently doubling serve memory for bf16 configs."""
+
+    B, P = prompt.shape
+    dtype = cm.dtype_of(model.cfg.dtype) if dtype is None else dtype
+    cache = model.init_cache(B, cache_len, dtype=dtype)
+    last, cache = chunked_prefill(model, params, prompt, cache,
+                                  mode=prefill_mode)
+    step = step if step is not None else jax.jit(model.decode_step)
+    toks = [jnp.argmax(last, axis=-1).astype(jnp.int32)]
+    for t in range(P, P + gen - 1):
+        logits, cache = step(params, cache, toks[-1][:, None],
+                             jnp.asarray(t, jnp.int32))
+        toks.append(jnp.argmax(logits[:, 0], axis=-1).astype(jnp.int32))
+    return jnp.stack(toks, axis=1)

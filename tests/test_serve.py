@@ -1,0 +1,461 @@
+"""repro.serve: queue admission/deadline/shed, paged-cache allocator,
+single-call chunked prefill (pinned bitwise vs the seed's per-token
+loop), continuous-batched decode (pinned token-exact vs the serial
+dense-cache reference), graceful degradation, the dataopt score API,
+and the perf-layer latency extensions.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs, perf, serve
+from repro.dataopt import export as dataopt_export
+from repro.models import Model
+from repro.models import common as cm
+
+# dense-GQA (paged KV), pure-recurrent (state-only), hybrid (both)
+E2E_ARCHS = ["gemma3-1b", "rwkv6-1.6b", "zamba2-7b"]
+
+
+class FakeClock:
+    """Deterministic auto-advancing clock for deadline tests."""
+
+    def __init__(self, dt=0.0):
+        self.t = 0.0
+        self.dt = dt
+
+    def __call__(self):
+        self.t += self.dt
+        return self.t
+
+
+@pytest.fixture(scope="module")
+def models():
+    cache = {}
+
+    def get(arch):
+        if arch not in cache:
+            cfg = configs.get_smoke_config(arch)
+            m = Model(cfg)
+            cache[arch] = (cfg, m, m.init(jax.random.PRNGKey(0)))
+        return cache[arch]
+
+    return get
+
+
+def _prompt(cfg, n, seed=0):
+    rng = np.random.default_rng(seed)
+    return rng.integers(0, cfg.vocab_size, size=(n,)).astype(np.int32)
+
+
+def _seed_greedy(model, params, prompt, gen, cache_len, dtype):
+    """The seed repo's loop: P separate jitted prefill calls — the
+    reference the chunked prefill is pinned against."""
+
+    B, P = prompt.shape
+    cache = model.init_cache(B, cache_len, dtype=dtype)
+    step = jax.jit(model.decode_step)
+    logits = None
+    for t in range(P):
+        logits, cache = step(params, cache, prompt[:, t:t + 1],
+                             jnp.asarray(t, jnp.int32))
+    toks = [jnp.argmax(logits[:, 0], axis=-1).astype(jnp.int32)]
+    for t in range(P, P + gen - 1):
+        logits, cache = step(params, cache, toks[-1][:, None],
+                             jnp.asarray(t, jnp.int32))
+        toks.append(jnp.argmax(logits[:, 0], axis=-1).astype(jnp.int32))
+    return jnp.stack(toks, axis=1), cache
+
+
+# ---------------------------------------------------------------------------
+# queue
+# ---------------------------------------------------------------------------
+
+
+def test_queue_fifo_and_overflow_shed():
+    clock = FakeClock()
+    q = serve.RequestQueue(max_depth=2, clock=clock)
+    r1 = q.submit({"a": 1})
+    r2 = q.submit({"a": 2})
+    with pytest.raises(serve.QueueFull) as ei:
+        q.submit({"a": 3})
+    assert ei.value.event.reason == serve.STATUS_SHED_OVERFLOW
+    assert [r.id for r in q.pop(5)] == [r1.id, r2.id]
+    st = q.stats()
+    assert (st.submitted, st.admitted, st.shed_overflow) == (3, 2, 1)
+    assert len(q.drain_shed()) == 1 and not q.drain_shed()
+
+
+def test_queue_deadline_shed_on_pop():
+    clock = FakeClock()
+    q = serve.RequestQueue(max_depth=8, default_timeout_s=5.0, clock=clock)
+    q.submit({"a": 1})
+    keeper = q.submit({"a": 2}, timeout_s=100.0)
+    clock.t = 50.0
+    got = q.pop(5)
+    assert [r.id for r in got] == [keeper.id]
+    assert q.stats().shed_deadline == 1
+    assert q.drain_shed()[0].reason == serve.STATUS_SHED_DEADLINE
+
+
+def test_queue_close_rejects():
+    q = serve.RequestQueue(max_depth=2)
+    q.close()
+    with pytest.raises(serve.QueueClosed):
+        q.submit({})
+
+
+# ---------------------------------------------------------------------------
+# paged cache
+# ---------------------------------------------------------------------------
+
+
+def test_build_spec_classifies_time_vs_state_axes(models):
+    cfg, m, _ = models("gemma3-1b")
+    spec = serve.build_spec(m, page_size=4, dtype=jnp.float32)
+    assert spec.paged_idx and spec.token_view_bytes() > 0
+    cfg, m, _ = models("rwkv6-1.6b")
+    spec = serve.build_spec(m, page_size=4, dtype=jnp.float32)
+    assert not spec.paged_idx and spec.state_idx  # pure recurrent: state only
+    cfg, m, _ = models("zamba2-7b")
+    spec = serve.build_spec(m, page_size=4, dtype=jnp.float32)
+    assert spec.paged_idx and spec.state_idx  # hybrid: both
+
+
+def test_paged_cache_allocator(models):
+    _, m, _ = models("gemma3-1b")
+    pc = serve.PagedCache(m, slots=3, page_size=4, max_len=32,
+                          dtype=jnp.float32)
+    s0 = pc.alloc_slot()
+    pc.set_len(s0, 10)  # 3 pages
+    s1 = pc.alloc_slot()
+    pc.set_len(s1, 4)  # 1 page
+    assert pc.live_tokens() == 14
+    assert list(pc.qo_indptr()) == [0, 10, 14, 14]
+    used = set(pc.table[s0, :3]) | {pc.table[s1, 0]}
+    assert len(used) == 4 and 0 not in used  # page 0 is the trash page
+    base = pc.allocated_bytes()
+    pc.free(s0)
+    s2 = pc.alloc_slot()
+    pc.set_len(s2, 12)  # reuses freed pages: no growth
+    assert pc.allocated_bytes() == base and pc.grow_events >= 0
+    with pytest.raises(serve.PagedCacheError):
+        pc.set_len(s2, 33)  # > max_len
+    pc.free(s1)
+    pc.free(s2)
+    assert pc.free_slot_count() == 3 and pc.live_tokens() == 0
+
+
+def test_paged_cache_grows_and_respects_max_pages(models):
+    _, m, _ = models("gemma3-1b")
+    pc = serve.PagedCache(m, slots=2, page_size=4, max_len=16,
+                          dtype=jnp.float32, initial_pages=1, max_pages=3)
+    s0 = pc.alloc_slot()
+    pc.set_len(s0, 8)  # needs 2 pages, pool has 1 free -> grow
+    assert pc.grow_events == 1
+    s1 = pc.alloc_slot()
+    with pytest.raises(serve.PagedCacheError):
+        pc.set_len(s1, 8)  # pool capped at max_pages=3 (incl. trash)
+
+
+def test_paged_allocation_below_dense(models):
+    """The design claim: allocated bytes track live tokens, not
+    slots x max_len."""
+
+    _, m, _ = models("gemma3-1b")
+    slots, max_len = 4, 128
+    pc = serve.PagedCache(m, slots=slots, page_size=8, max_len=max_len,
+                          dtype=jnp.float32)
+    for n in (10, 24, 7, 40):
+        pc.set_len(pc.alloc_slot(), n)
+    dense = serve.dense_cache_bytes(m, slots, max_len, jnp.float32)
+    assert pc.allocated_bytes() < dense
+    assert pc.peak_bytes < dense
+
+
+def test_decode_buckets_and_hbm_budget(models):
+    _, m, _ = models("gemma3-1b")
+    spec = serve.build_spec(m, page_size=4, dtype=jnp.float32)
+    cfg = serve.ServeConfig(slots=2, page_size=4, max_len=32)
+    assert serve.decode_buckets(spec, cfg) == (4, 8, 16, 32)
+    per_token = spec.token_view_bytes() * cfg.slots
+    ok = serve.ServeConfig(slots=2, page_size=4, max_len=32,
+                           hbm_budget_bytes=32 * per_token)
+    assert serve.decode_buckets(spec, ok) == (4, 8, 16, 32)
+    with pytest.raises(ValueError, match="hbm_budget"):
+        serve.decode_buckets(spec, serve.ServeConfig(
+            slots=2, page_size=4, max_len=32,
+            hbm_budget_bytes=8 * per_token))
+
+
+# ---------------------------------------------------------------------------
+# chunked prefill (satellite: single call, pinned bitwise)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("arch", E2E_ARCHS)
+def test_scan_prefill_bitwise_vs_seed_loop(models, arch):
+    """One jitted scan-prefill call == P separate jitted calls, to the bit
+    (logits AND every cache leaf)."""
+
+    cfg, m, params = models(arch)
+    dt = cm.dtype_of(cfg.dtype)
+    B, P, CL = 2, 9, 16
+    prompt = jnp.stack([_prompt(cfg, P, seed=i) for i in range(B)])
+    ref_cache = m.init_cache(B, CL, dtype=dt)
+    step = jax.jit(m.decode_step)
+    logits = None
+    for t in range(P):
+        logits, ref_cache = step(params, ref_cache, prompt[:, t:t + 1],
+                                 jnp.asarray(t, jnp.int32))
+    last, cache = serve.chunked_prefill(m, params, prompt,
+                                        m.init_cache(B, CL, dtype=dt),
+                                        mode="scan")
+    assert bool(jnp.all(last == logits[:, 0]))
+    assert jax.tree_util.tree_all(jax.tree_util.tree_map(
+        lambda a, b: bool(jnp.all(a == b)), cache, ref_cache))
+
+
+def test_block_prefill_bitwise_for_gqa(models):
+    cfg, m, params = models("gemma3-1b")
+    dt = cm.dtype_of(cfg.dtype)
+    B, P, CL = 2, 12, 16
+    prompt = jnp.stack([_prompt(cfg, P, seed=i) for i in range(B)])
+    ref, _ = _seed_greedy(m, params, prompt, 1, CL, dt)
+    last, _ = serve.chunked_prefill(m, params, prompt,
+                                    m.init_cache(B, CL, dtype=dt),
+                                    mode="block")
+    assert bool(jnp.all(jnp.argmax(last, -1).astype(jnp.int32) == ref[:, 0]))
+
+
+def test_block_prefill_rejected_for_recurrent(models):
+    cfg, m, params = models("rwkv6-1.6b")
+    prompt = jnp.stack([_prompt(cfg, 4)])
+    with pytest.raises(ValueError, match="order-unsafe"):
+        serve.chunked_prefill(m, params, prompt,
+                              m.init_cache(1, 8, dtype=jnp.float32),
+                              mode="block")
+
+
+@pytest.mark.parametrize("arch", E2E_ARCHS + ["minicpm3-4b"])
+def test_greedy_generate_matches_seed_loop(models, arch):
+    """The rewritten greedy_generate (single-call prefill, configured
+    dtype) emits the seed loop's exact token ids."""
+
+    cfg, m, params = models(arch)
+    dt = cm.dtype_of(cfg.dtype)
+    B, P, gen, CL = 2, 9, 6, 16
+    prompt = jnp.stack([_prompt(cfg, P, seed=i) for i in range(B)])
+    ref, _ = _seed_greedy(m, params, prompt, gen, CL, dt)
+    got = serve.greedy_generate(m, params, prompt, gen, CL)
+    assert got.shape == (B, gen)
+    assert bool(jnp.all(got == ref))
+
+
+def test_serve_dtype_follows_config(models):
+    """Satellite fix: cache dtype routes through models.common.dtype_of
+    instead of hard-coded f32."""
+
+    cfg, _, _ = models("gemma3-1b")
+    m = Model(cfg.replace(dtype="bfloat16"))
+    params = m.init(jax.random.PRNGKey(0))
+    batcher = serve.ContinuousBatcher(m, params, serve.ServeConfig(
+        slots=2, page_size=4, max_len=16))
+    assert batcher.dtype == jnp.bfloat16
+    assert all(p.dtype == jnp.bfloat16 for p in batcher.cache.pools)
+    toks = serve.greedy_generate(m, params,
+                                 jnp.stack([_prompt(cfg, 5)]), 4, 16)
+    assert toks.shape == (1, 4)
+
+
+# ---------------------------------------------------------------------------
+# continuous batching end-to-end (the tentpole pin)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("arch", E2E_ARCHS)
+def test_continuous_batched_matches_serial(models, arch):
+    """Mixed-length staggered arrivals with early finishers through the
+    queue -> batcher -> paged cache -> executor stack produce EXACTLY the
+    serial dense-cache greedy_generate token ids."""
+
+    cfg, m, params = models(arch)
+    lens = [5, 9, 3, 12, 7, 1]
+    gens = [6, 4, 8, 5, 7, 1]  # early finishers + a prefill-only request
+    prompts = [_prompt(cfg, L, seed=i) for i, L in enumerate(lens)]
+    ref = [serve.greedy_generate(m, params, jnp.asarray(p[None]), g, 32)[0]
+           for p, g in zip(prompts, gens)]
+
+    ex = serve.ServeExecutor(m, params, serve.ServeConfig(
+        slots=2, page_size=4, max_len=32, max_new_tokens=8))
+    ids = [ex.submit(p, max_new_tokens=g) for p, g in zip(prompts, gens)]
+    stats = ex.run()
+
+    for rid, r in zip(ids, ref):
+        res = ex.results[rid]
+        assert res.status == serve.STATUS_OK
+        assert res.tokens == [int(t) for t in r]
+    assert stats.completed == len(lens) and stats.errors == 0
+    assert stats.latency is not None and stats.latency.n == len(lens)
+    assert stats.qps > 0
+    # paged allocation stayed below the dense slots x max_len equivalent
+    dense = serve.dense_cache_bytes(m, 2, 32, ex.batcher.dtype)
+    if ex.batcher.cache.spec.paged_idx:
+        assert stats.memory["peak_bytes"] < dense
+
+
+def test_executor_rejects_encoder_family(models):
+    cfg, m, params = models("bert-base")
+    with pytest.raises(ValueError, match="encoder-only"):
+        serve.ServeExecutor(m, params, serve.ServeConfig())
+
+
+def test_executor_overflow_shed(models):
+    cfg, m, params = models("gemma3-1b")
+    ex = serve.ServeExecutor(m, params, serve.ServeConfig(
+        slots=1, page_size=4, max_len=16, max_new_tokens=2, queue_depth=2))
+    ids = [ex.submit(_prompt(cfg, 4, seed=i)) for i in range(5)]
+    stats = ex.run()
+    statuses = [ex.results[i].status for i in ids]
+    assert statuses.count(serve.STATUS_SHED_OVERFLOW) == 3
+    assert stats.completed == 2 and stats.shed_overflow == 3
+    # shed results resolve with empty output, not a crash or a hang
+    assert all(ex.results[i].tokens == [] for i in ids
+               if ex.results[i].status == serve.STATUS_SHED_OVERFLOW)
+
+
+def test_executor_deadline_shed(models):
+    cfg, m, params = models("gemma3-1b")
+    clock = FakeClock(dt=1.0)
+    ex = serve.ServeExecutor(m, params, serve.ServeConfig(
+        slots=1, page_size=4, max_len=16, max_new_tokens=4), clock=clock)
+    first = ex.submit(_prompt(cfg, 4, seed=0))  # no deadline
+    late = [ex.submit(_prompt(cfg, 4, seed=i), timeout_s=2.0)
+            for i in range(1, 4)]
+    stats = ex.run()
+    assert ex.results[first].status == serve.STATUS_OK
+    assert all(ex.results[i].status == serve.STATUS_SHED_DEADLINE
+               for i in late)
+    assert stats.shed_deadline == 3
+
+
+def test_executor_submit_validation(models):
+    cfg, m, params = models("gemma3-1b")
+    ex = serve.ServeExecutor(m, params, serve.ServeConfig(
+        slots=1, page_size=4, max_len=16))
+    with pytest.raises(ValueError, match="empty prompt"):
+        ex.submit(np.zeros((0,), np.int32))
+    with pytest.raises(ValueError, match="exceeds"):
+        ex.submit(_prompt(cfg, 10), max_new_tokens=10)  # 20 > max_len
+
+
+def test_executor_nonfinite_falls_back_to_serial(models):
+    """Poisoned params make the batched path emit nonfinite logits; the
+    lane must retire into the serial fallback, not crash the loop."""
+
+    cfg, m, _ = models("gemma3-1b")
+    params = m.init(jax.random.PRNGKey(0))
+    params = jax.tree_util.tree_map(lambda x: jnp.full_like(x, jnp.inf),
+                                    params)
+    ex = serve.ServeExecutor(m, params, serve.ServeConfig(
+        slots=2, page_size=4, max_len=16, max_new_tokens=3))
+    ids = [ex.submit(_prompt(cfg, 4, seed=i)) for i in range(2)]
+    stats = ex.run()
+    assert all(ex.results[i].status in
+               (serve.STATUS_FALLBACK, serve.STATUS_ERROR) for i in ids)
+    assert stats.completed + stats.errors == 2  # every request resolved
+
+
+# ---------------------------------------------------------------------------
+# score API
+# ---------------------------------------------------------------------------
+
+
+def _store(tmp_path, n=10):
+    scores = np.linspace(-1.0, 1.0, n).astype(np.float32)
+    mask = scores > 0
+    path = dataopt_export.export_scores(str(tmp_path / "scores"), scores,
+                                        scorer="sama", mask=mask)
+    return serve.ScoreStore.load(path, expect_n=n, expect_scorer="sama"), scores, mask
+
+
+def test_score_store_roundtrip_and_views(tmp_path):
+    store, scores, mask = _store(tmp_path)
+    ids = np.array([0, 3, 9])
+    assert np.array_equal(store.lookup(ids), scores[ids])
+    assert np.array_equal(store.keep(ids), mask[ids])
+    w = store.weight(np.arange(10), temperature=0.5)
+    full = np.exp(scores.astype(np.float64) / 0.5)
+    np.testing.assert_allclose(w, full / full.sum(), rtol=1e-5)
+    with pytest.raises(IndexError):
+        store.lookup([10])
+
+
+def test_score_api_coalesces_ragged_batches(tmp_path):
+    store, scores, _ = _store(tmp_path)
+    api = serve.ScoreAPI(store, max_batch=8)
+    batches = [[0, 1, 2], [5], [9, 8, 7, 6]]
+    futs = [api.submit(b) for b in batches]
+    answered = api.run_pending()
+    assert answered == 3
+    for b, f in zip(batches, futs):
+        np.testing.assert_array_equal(f.result(timeout=0), scores[b])
+    st = api.stats()
+    assert st.batches == 1  # one coalesced lookup, split by qo_indptr
+    assert st.latency is not None and st.latency.n == 3
+
+
+def test_score_api_sheds(tmp_path):
+    store, _, _ = _store(tmp_path)
+    clock = FakeClock()
+    api = serve.ScoreAPI(store, queue_depth=1, default_timeout_s=5.0,
+                         clock=clock)
+    f1 = api.submit([1])
+    f2 = api.submit([2])  # overflow
+    with pytest.raises(serve.QueueFull):
+        f2.result(timeout=0)
+    clock.t = 100.0  # f1's deadline passes while queued
+    api.run_pending()
+    with pytest.raises(TimeoutError):
+        f1.result(timeout=0)
+    with pytest.raises(ValueError):
+        api.submit([1], kind="nope")
+
+
+# ---------------------------------------------------------------------------
+# perf latency extensions
+# ---------------------------------------------------------------------------
+
+
+def test_latency_stats_percentiles():
+    s = perf.LatencyStats.from_samples([0.001 * (i + 1) for i in range(100)])
+    assert s.n == 100
+    assert s.p50_us == pytest.approx(50500.0, rel=0.01)
+    assert s.p99_us <= s.max_us == pytest.approx(100000.0, rel=1e-6)
+    assert s.p50_us <= s.p90_us <= s.p99_us
+    with pytest.raises(ValueError):
+        perf.LatencyStats.from_samples([])
+
+
+def test_perf_record_latency_section():
+    lat = perf.LatencyStats.from_samples([0.01, 0.02, 0.03]).as_dict()
+    rec = perf.PerfRecord(name="serve_x", latency=lat).as_dict()
+    assert perf.validate_record(rec) == []
+    bad = dict(rec, latency={"p50_us": 1.0})
+    assert any("latency" in e for e in perf.validate_record(bad))
+    # latency alone counts as a measured section
+    none = perf.PerfRecord(name="empty").as_dict()
+    assert any("no measured section" in e for e in perf.validate_record(none))
+
+
+def test_gate_bands_latency():
+    lat = perf.LatencyStats.from_samples([0.01] * 4).as_dict()
+    base = perf.PerfRecord(name="serve_x", latency=lat).as_dict()
+    slow = dict(lat, p99_us=lat["p99_us"] * 10)
+    cur = perf.PerfRecord(name="serve_x", latency=slow).as_dict()
+    tol = perf.Tolerance()
+    bad = perf.compare_record("serve", cur, base, tol)
+    assert [v.metric for v in bad] == ["latency.p99_us"]
+    assert perf.compare_record("serve", base, base, tol) == []
