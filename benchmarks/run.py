@@ -37,6 +37,7 @@ BENCHES = [
     "bench_kernels",  # fused dispatch kernels vs naive jnp chains
     "bench_scale",  # repro.scale: memory vs microbatch M + census under accumulation
     "bench_serve",  # repro.serve: continuous-batch QPS vs serial + paged-cache memory
+    "bench_obs",  # repro.obs: instrumented-loop overhead <= 3% + census with obs on
 ]
 
 #: benches whose rows are produced by the repro.dataopt subsystem

@@ -79,6 +79,7 @@ class MetaLearner:
         allow_nonlinear: bool = False,
         jit: bool = True,
         checkpoint_dir: Optional[str] = None,
+        obs=None,
         **method_knobs,
     ):
         if schedule not in SCHEDULES:
@@ -104,6 +105,10 @@ class MetaLearner:
         self.mesh = mesh
         self.checkpoint_dir = checkpoint_dir
         self.state: Optional[EngineState] = None
+        if obs is None:
+            from repro.obs import NULL_OBS
+            obs = NULL_OBS
+        self.obs = obs
 
         if schedule == "auto":
             schedule = "single_sync" if mesh is not None else "pjit"
@@ -119,6 +124,7 @@ class MetaLearner:
         else:
             step = make_meta_step(self.spec, self.base_opt, self.meta_opt, self.cfg)
         self.schedule = schedule
+        self._raw_step = step  # un-jitted: phase_profile runs it eagerly
         self.step_fn = jax.jit(step) if jit else step
 
     # -- lifecycle ---------------------------------------------------------
@@ -151,10 +157,14 @@ class MetaLearner:
         *,
         log_every: int = 0,
         save_every: int = 0,
+        obs=None,
     ) -> List[Dict[str, float]]:
         """Run ``steps`` meta steps from an iterator of
         (base_batches[K], meta_batch). Checkpoints every ``save_every``
-        steps when a checkpoint_dir is configured."""
+        steps when a checkpoint_dir is configured. ``obs`` (defaulting to
+        the learner's own) receives metric/scale/gate events at the
+        ``log_every`` boundary — observability shares the loop's existing
+        sync points (see ``run_loop``)."""
 
         if save_every and self.checkpoint_dir is None:
             raise ValueError("fit(save_every=...) needs a checkpoint_dir")
@@ -171,7 +181,8 @@ class MetaLearner:
                 self.save()
 
         _, history = run_loop(step_adapter, self.state, batch_iter, steps,
-                              log_every, on_step=on_step)
+                              log_every, on_step=on_step,
+                              obs=obs if obs is not None else self.obs)
         return history
 
     # -- telemetry ---------------------------------------------------------
@@ -207,6 +218,65 @@ class MetaLearner:
         return perf.profile_step(rec_name, fn, *args, warmup=warmup,
                                  repeats=repeats, extra=extra)
 
+    def phase_profile(self, base_batches, meta_batch):
+        """Per-phase host wall times: run ONE step eagerly (un-jitted)
+        under an activated span tracer, so the engine's phase annotations
+        (base unroll, meta pass, CD passes, finalize, meta update, and the
+        flat-bucket all-reduce on the manual schedule) record real
+        execution spans instead of jit trace-time. Returns the list of
+        ``repro.obs.Span``; when the learner carries an enabled obs, each
+        span is also emitted as a ``span`` event.
+
+        The state is NOT advanced and the jitted step's cache is
+        untouched. Eager per-op dispatch overhead inflates absolute
+        numbers — read the result as the *relative* cost of the phases
+        (``repro.perf`` owns absolute step timing)."""
+
+        from repro import obs as obs_mod
+
+        if self.state is None:
+            raise RuntimeError(
+                "call init(theta, lam) or load(...) before phase_profile()")
+        tracer = obs_mod.Tracer(obs=self.obs if self.obs.enabled else None)
+        with obs_mod.activate(tracer):
+            if self.mesh is not None:
+                with self.mesh:
+                    out = self._raw_step(self.state, base_batches, meta_batch)
+            else:
+                out = self._raw_step(self.state, base_batches, meta_batch)
+            jax.block_until_ready(out)
+        return tracer.runtime_spans()
+
+    def verify_census(self, base_batches, meta_batch):
+        """Compile the step on these example shapes and check the
+        collective census against the pinned ``unroll+1`` all-reduces
+        (``perf.verify_single_sync``). Returns the census dict; when the
+        learner carries an enabled obs the verdict is emitted as a
+        ``census`` event (a mismatch trips the census health monitor).
+
+        Meaningful on the manual single-sync schedule — the pjit path
+        lets XLA place collectives, so nothing is pinned there. Shares
+        the jit cache with training when the shapes match."""
+
+        from repro import perf
+
+        if self.state is None:
+            raise RuntimeError(
+                "call init(theta, lam) or load(...) before verify_census()")
+        fn = self.step_fn if hasattr(self.step_fn, "lower") else jax.jit(self.step_fn)
+        args = (self.state, base_batches, meta_batch)
+        if self.mesh is not None:
+            with self.mesh:
+                compiled = fn.lower(*args).compile()
+        else:
+            compiled = fn.lower(*args).compile()
+        stats = perf.verify_single_sync(compiled, self.cfg.unroll_steps)
+        if self.obs.enabled:
+            self.obs.observe_census(stats.get("all-reduce_count", 0),
+                                    stats["expected_all_reduces"],
+                                    detail={"schedule": self.schedule})
+        return stats
+
     # -- checkpointing -----------------------------------------------------
 
     def save(self, path: Optional[str] = None, *, meta: Optional[Dict[str, Any]] = None) -> str:
@@ -227,6 +297,9 @@ class MetaLearner:
         if meta:
             manifest_meta.update(meta)
         checkpoint.save(path, self.state, step=step, meta=manifest_meta)
+        if self.obs.enabled:
+            self.obs.emit("checkpoint", "save", step=step,
+                          data={"path": path})
         return path
 
     def load(self, path: Optional[str] = None) -> EngineState:
@@ -257,4 +330,7 @@ class MetaLearner:
                     "(or restore via repro.checkpoint directly to override)"
                 )
         self.state = state
+        if self.obs.enabled:
+            self.obs.emit("checkpoint", "restore", step=int(state.step),
+                          data={"path": path})
         return self.state

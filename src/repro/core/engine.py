@@ -29,6 +29,8 @@ from repro.core import methods as methods_mod
 from repro.core.bilevel import BilevelSpec
 from repro.core.methods import HypergradMethod, MethodContext
 from repro.core.sama import global_norm
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 from repro.optim import Optimizer, OptState, apply_updates
 from repro.scale import accum as accum_mod
 from repro.scale import policy as policy_mod
@@ -264,11 +266,14 @@ def make_meta_step(
     micro = cfg.scale.microbatch
 
     def meta_step(state: EngineState, base_batches, meta_batch):
-        (theta, b_state, g_base, st_at_g, base_losses, scale_state,
-         base_ok) = _unroll_base(
-            spec, base_opt, state.theta, state.base_opt_state, state.lam,
-            base_batches, scale_cfg=cfg.scale, scale_state=state.scale,
-        )
+        # obs_trace.phase = unconditional jax.named_scope (identical HLO
+        # with obs on or off) + a host span iff a Tracer is activated
+        with obs_trace.phase("base_unroll"):
+            (theta, b_state, g_base, st_at_g, base_losses, scale_state,
+             base_ok) = _unroll_base(
+                spec, base_opt, state.theta, state.base_opt_state, state.lam,
+                base_batches, scale_cfg=cfg.scale, scale_state=state.scale,
+            )
         ctx = make_context(
             base_opt, state, base_batches, meta_batch,
             theta=theta, base_opt_state=st_at_g, g_base=g_base,
@@ -278,14 +283,16 @@ def make_meta_step(
             method, accum_mod.microbatch_local_terms(method, spec, ctx, micro,
                                                      policy.accum_jnp))
         # single-device / pjit path: identity reduce between stages 2 and 3
-        hyper, theta_post = method.finalize(terms, ctx)
+        with obs_trace.phase("finalize"):
+            hyper, theta_post = method.finalize(terms, ctx)
 
-        lam, m_state, theta_post, meta_ok = guarded_meta_update(
-            meta_opt, hyper, theta_post, state,
-            theta_pre=theta, guard=policy.dynamic_scaling, base_ok=base_ok,
-        )
-        if meta_ok is not None:  # hypergrad overflow must back the scale off
-            scale_state = policy_mod.backoff_on(scale_state, meta_ok, policy)
+        with obs_trace.phase("meta_update"):
+            lam, m_state, theta_post, meta_ok = guarded_meta_update(
+                meta_opt, hyper, theta_post, state,
+                theta_pre=theta, guard=policy.dynamic_scaling, base_ok=base_ok,
+            )
+            if meta_ok is not None:  # hypergrad overflow must back the scale off
+                scale_state = policy_mod.backoff_on(scale_state, meta_ok, policy)
 
         new_state = EngineState(
             theta=theta_post,
@@ -295,24 +302,44 @@ def make_meta_step(
             step=state.step + 1,
             scale=scale_state,
         )
-        return new_state, step_metrics(method, terms, hyper, base_losses)
+        metrics = step_metrics(method, terms, hyper, base_losses)
+        if meta_ok is not None:
+            # expose the automaton to host-side observers: the post-step
+            # scale and the gate verdict ride the existing metric outputs,
+            # so obs needs no extra sync (and no obs-conditional tracing —
+            # these are present whenever the policy scales, observed or not)
+            metrics["loss_scale"] = scale_state.scale
+            metrics["meta_skipped"] = 1.0 - meta_ok.astype(jnp.float32)
+        return new_state, metrics
 
     return meta_step
 
 
-def run_loop(step_fn, state, batch_iter, num_steps: int, log_every: int = 0, on_step=None):
+def run_loop(step_fn, state, batch_iter, num_steps: int, log_every: int = 0,
+             on_step=None, obs=None):
     """The shared training loop: drive ``step_fn`` over an iterator of
     (base_batches[K], meta_batch), collecting float-cast metric history at
     ``log_every`` cadence. Used by both Engine.run and MetaLearner.fit so
     the logging semantics cannot diverge. ``on_step(i, state)`` runs after
-    every step (checkpoint hooks)."""
+    every step (checkpoint hooks).
+
+    Metric reads happen ONLY at the log cadence and fetch the whole dict
+    in one ``jax.device_get`` (``obs.metrics.packed_read``) — one D2H
+    transfer per logged step instead of one blocking ``float(v)`` per
+    key. ``obs`` (a ``repro.obs.Obs``) receives the same host dict via
+    ``observe_step`` at the same boundary, so observability adds no sync
+    points to the hot loop; ``obs=None`` logs nothing extra."""
 
     history = []
     for i in range(num_steps):
         base_batches, meta_batch = next(batch_iter)
         state, metrics = step_fn(state, base_batches, meta_batch)
         if log_every and (i % log_every == 0 or i == num_steps - 1):
-            history.append({k: float(v) for k, v in metrics.items()} | {"step": i})
+            row = {k: float(v)
+                   for k, v in obs_metrics.packed_read(metrics).items()}
+            history.append(row | {"step": i})
+            if obs is not None and obs.enabled:
+                obs.observe_step(i, row)
         if on_step is not None:
             on_step(i, state)
     return state, history
@@ -333,7 +360,9 @@ class Engine:
         return init_state(theta, lam, self.base_opt, self.meta_opt,
                           scale=self.cfg.scale)
 
-    def run(self, state: EngineState, batch_iter, num_meta_steps: int, log_every: int = 0):
+    def run(self, state: EngineState, batch_iter, num_meta_steps: int,
+            log_every: int = 0, obs=None):
         """batch_iter yields (base_batches[K], meta_batch)."""
 
-        return run_loop(self.step_fn, state, batch_iter, num_meta_steps, log_every)
+        return run_loop(self.step_fn, state, batch_iter, num_meta_steps,
+                        log_every, obs=obs)

@@ -35,6 +35,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.bilevel import BilevelSpec
+from repro.obs import trace as obs_trace
 from repro.optim import Optimizer, OptState
 
 PyTree = Any
@@ -129,9 +130,10 @@ def perturbation_direction(
     meta loss before its backward pass so low-precision cotangents stay
     representable; the returned loss and gradient are unscaled."""
 
-    meta_loss, g_meta = scaled_value_and_grad(spec.meta_scalar, 0, loss_scale)(
-        theta, lam, meta_batch)
-    v, v_sumsq = adaptation_product(base_opt, base_opt_state, theta, g_base, g_meta, cfg)
+    with obs_trace.phase("meta_pass"):
+        meta_loss, g_meta = scaled_value_and_grad(spec.meta_scalar, 0, loss_scale)(
+            theta, lam, meta_batch)
+        v, v_sumsq = adaptation_product(base_opt, base_opt_state, theta, g_base, g_meta, cfg)
     return meta_loss, v, v_sumsq
 
 
@@ -174,11 +176,12 @@ def central_difference_hypergrad(
     skips the separate ``global_norm`` pass over v when provided.
     """
 
-    eps = step_size(v, v_sumsq, cfg)
-    theta_p, theta_m = perturbed_params(theta, v, eps)
-    delta = central_difference_delta(spec, theta_p, theta_m, lam, base_batch,
-                                     loss_scale=loss_scale)
-    hyper = _tmap(lambda d: -d / (2.0 * eps), delta)
+    with obs_trace.phase("cd_passes"):
+        eps = step_size(v, v_sumsq, cfg)
+        theta_p, theta_m = perturbed_params(theta, v, eps)
+        delta = central_difference_delta(spec, theta_p, theta_m, lam, base_batch,
+                                         loss_scale=loss_scale)
+        hyper = _tmap(lambda d: -d / (2.0 * eps), delta)
     return hyper, eps
 
 

@@ -53,6 +53,7 @@ class DataOptimizer:
         batch_size: int = 128,
         seed: int = 0,
         theta: Optional[PyTree] = None,
+        obs=None,
         **scorer_knobs,
     ):
         if train is None:
@@ -68,11 +69,16 @@ class DataOptimizer:
         if num_classes is None and model is not None:
             num_classes = getattr(model.cfg, "num_labels", None)
 
+        if obs is None:
+            from repro.obs import NULL_OBS
+            obs = NULL_OBS
+        self.obs = obs
         self.model = model
         self.ctx = ScoreContext(
             per_example_fn=per_example_fn, init_fn=init_fn, train=train,
             meta=meta, fields=fields, mesh=mesh, batch_size=batch_size,
             seed=seed, theta=theta, num_classes=num_classes,
+            obs=obs if obs.enabled else None,
         )
         self.scorer_name = scorer if isinstance(scorer, str) else getattr(scorer, "name", "custom")
         self.scorer = resolve_scorer(scorer, **scorer_knobs)
@@ -84,6 +90,9 @@ class DataOptimizer:
         """Run the scorer over the full train set (sharded under a mesh).
         Caches and returns the (N,) keep-priority array."""
 
+        import time
+
+        t0 = time.perf_counter()
         scores = np.asarray(self.scorer(self.ctx), np.float32)
         if scores.shape != (self.ctx.n,):
             raise ValueError(
@@ -91,6 +100,15 @@ class DataOptimizer:
                 f"expected ({self.ctx.n},)"
             )
         self.scores = scores
+        if self.obs.enabled:
+            self.obs.histogram("dataopt_fit_scores_us").observe(
+                (time.perf_counter() - t0) * 1e6)
+            self.obs.counter("dataopt_scores_fitted").inc(
+                labels={"scorer": self.scorer_name})
+            self.obs.emit("log", "dataopt_scores", data={
+                "scorer": self.scorer_name, "n": int(scores.size),
+                "mean": float(scores.mean()) if scores.size else 0.0,
+                "finite": bool(np.isfinite(scores).all())})
         return scores
 
     def _require_scores(self) -> np.ndarray:
@@ -131,6 +149,7 @@ class DataOptimizer:
                     num_classes=self.ctx.num_classes, fields=self.ctx.fields,
                     mesh=self.ctx.mesh, batch_size=self.ctx.batch_size,
                     seed=self.ctx.seed + r, theta=self.ctx.theta,
+                    obs=self.obs,
                 )
                 scores = sub_opt.fit_scores()
             # the fraction of CURRENT survivors to drop so the kept count
@@ -148,6 +167,14 @@ class DataOptimizer:
             next_mask = np.zeros(n, dtype=bool)
             next_mask[np.flatnonzero(mask)[sub_mask]] = True
             mask = next_mask
+            if self.obs.enabled:
+                self.obs.emit("log", "dataopt_prune_round", data={
+                    "round": r + 1, "rounds": rounds,
+                    "kept": int(mask.sum()), "n": n,
+                    "class_balanced": class_balanced})
+        if self.obs.enabled:
+            self.obs.counter("dataopt_pruned_examples").inc(
+                int(n - mask.sum()))
         return prune_mod.apply_mask(train, mask), mask
 
     # -- retraining / evaluation ------------------------------------------
@@ -157,11 +184,16 @@ class DataOptimizer:
         """Fresh-init training on the kept subset (``mask=None`` = full data
         baseline)."""
 
-        return prune_mod.retrain(
+        theta = prune_mod.retrain(
             self.ctx.per_example_fn, self.ctx.init_fn, self.ctx.train,
             mask=mask, steps=steps, seed=seed, batch=batch, lr=lr,
             fields=self.ctx.fields,
         )
+        if self.obs.enabled:
+            kept = self.ctx.n if mask is None else int(np.asarray(mask).sum())
+            self.obs.emit("log", "dataopt_retrain", data={
+                "steps": steps, "kept": kept, "n": self.ctx.n})
+        return theta
 
     def evaluate(self, theta: PyTree, test: Dict[str, np.ndarray], *,
                  label_key: str = "y_true") -> float:

@@ -117,6 +117,7 @@ class ScoreContext:
     seed: int = 0
     theta: Optional[PyTree] = None  # pre-trained params, reused when given
     num_classes: Optional[int] = None  # needed by label correction
+    obs: Any = None  # repro.obs.Obs; None = silent (legacy print fallback)
 
     @property
     def n(self) -> int:
@@ -399,6 +400,8 @@ def fit_meta(
     kwargs = {"mesh": ctx.mesh, **(learner_kwargs or {})}
     if scale is not None:  # repro.scale knobs for the scoring meta-train
         kwargs.setdefault("scale", scale)
+    if ctx.obs is not None:  # scoring meta-train reports through the caller's obs
+        kwargs.setdefault("obs", ctx.obs)
     learner = MetaLearner(
         spec, base_opt="adam", base_lr=base_lr, meta_opt="adam", meta_lr=meta_lr,
         method=method, unroll_steps=unroll, schedule=schedule,
@@ -410,12 +413,18 @@ def fit_meta(
                        meta_batch_size=meta_batch, unroll=unroll, seed=ctx.seed,
                        fields=ctx.fields)
 
+    obs = ctx.obs
+    obs_on = obs is not None and obs.enabled
+
     def fit_chunk(n_steps):
-        # run_loop only collects history; printing it here is what makes
-        # log_every observable through the dataopt API (a stalled meta-train
-        # must be distinguishable from a healthy one)
-        for row in learner.fit(it, n_steps, log_every=log_every):
-            print({k: round(v, 4) for k, v in row.items()})
+        # a stalled meta-train must be distinguishable from a healthy one:
+        # with an obs pipeline, run_loop already emits metrics/scale/gate
+        # events at the log_every cadence (the console sink renders them);
+        # without one, keep the legacy history print
+        history = learner.fit(it, n_steps, log_every=log_every)
+        if not obs_on:
+            for row in history:
+                print({k: round(v, 4) for k, v in row.items()})
 
     if ema_decay <= 0.0:
         fit_chunk(steps)

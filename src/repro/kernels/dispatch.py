@@ -156,6 +156,22 @@ def backend_order(backend: Optional[str] = None) -> Tuple[str, ...]:
     return ("ref",)
 
 
+def _observe_dispatch(name: str, cand: str, reason: str) -> None:
+    """Mirror one dispatch decision into the process-global obs pipeline
+    (counter keyed by kernel/backend/reason + a ``dispatch`` event).
+    Dispatch happens at trace time, so per-decision cost is per-compile,
+    not per-step; the NULL_OBS default makes this a two-attribute check."""
+
+    from repro import obs as obs_mod
+
+    obs = obs_mod.get_default()
+    if not obs.enabled:
+        return
+    obs.counter("dispatch_total").inc(
+        labels={"kernel": name, "backend": cand, "reason": reason})
+    obs.emit("dispatch", name, data={"backend": cand, "reason": reason})
+
+
 def dispatch_log() -> List[Tuple[str, str, str]]:
     """Trace-time decisions so far (most recent 4096): (kernel, backend,
     reason)."""
@@ -197,6 +213,7 @@ def get_kernel(name: str, *, backend: Optional[str] = None) -> Callable[..., Any
                 continue
             reason = "selected" if not tried else "fallback(" + ",".join(tried) + ")"
             _DISPATCH_LOG.append((name, cand, reason))
+            _observe_dispatch(name, cand, reason)
             return impl.fn(*args, **kwargs)
         raise RuntimeError(  # unreachable while every kernel registers a ref impl
             f"no eligible implementation for kernel {name!r}: tried {tried}"

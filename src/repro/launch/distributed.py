@@ -52,6 +52,7 @@ from repro.core.engine import (
     step_metrics,
 )
 from repro.launch.mesh import data_axes, shard_map
+from repro.obs import trace as obs_trace
 from repro.optim import Optimizer
 from repro.scale import accum as accum_mod
 from repro.scale import policy as policy_mod
@@ -59,7 +60,10 @@ from repro.scale import policy as policy_mod
 PyTree = Any
 
 #: What the manual schedule emits per step (static for shard_map out_specs).
+#: Under a dynamic-scaling policy the automaton scalars ride along too
+#: (see make_manual_step's ``metric_keys``).
 METRIC_KEYS = ("base_loss", "meta_loss", "hypergrad_norm", "eps")
+SCALE_METRIC_KEYS = ("loss_scale", "meta_skipped")
 
 
 def flat_pmean(tree: PyTree, axes) -> PyTree:
@@ -156,6 +160,11 @@ def make_manual_step(
     policy = cfg.scale.resolve()
     spec = policy_mod.apply_to_spec(spec, policy)
     micro = cfg.scale.microbatch
+    # static metric set (shard_map out_specs): the quartet, plus the
+    # loss-scale automaton scalars whenever the policy scales — a config
+    # property, NOT an obs switch, so observability never changes the HLO
+    metric_keys = METRIC_KEYS + (SCALE_METRIC_KEYS if policy.dynamic_scaling
+                                 else ())
     contract = method.reduce_contract
     if not contract.linear and not allow_nonlinear:
         raise ValueError(
@@ -180,12 +189,13 @@ def make_manual_step(
         # ---- base unroll: standard DDP (one pmean per base step), shared
         # with the Engine path — microbatch accumulation, precision casts
         # and loss-scale skip semantics are engine._unroll_base's ----
-        (theta, b_state, g_base, st_at_g, losses, scale_state,
-         base_ok) = _unroll_base(
-            spec, base_opt, state.theta, state.base_opt_state, lam,
-            base_batches, scale_cfg=cfg.scale, scale_state=state.scale,
-            grad_reduce=ddp_grad_reduce,
-        )
+        with obs_trace.phase("base_unroll"):
+            (theta, b_state, g_base, st_at_g, losses, scale_state,
+             base_ok) = _unroll_base(
+                spec, base_opt, state.theta, state.base_opt_state, lam,
+                base_batches, scale_cfg=cfg.scale, scale_state=state.scale,
+                grad_reduce=ddp_grad_reduce,
+            )
 
         # ---- method stage 1: strictly LOCAL terms (no collective) ----
         ctx = make_context(
@@ -203,25 +213,31 @@ def make_manual_step(
         # promotes only sub-f32 leaves (see its docstring for why).
         bucket = {k: terms[k] for k in contract.terms}
         bucket["__base_loss__"] = jnp.mean(losses)
-        reduced = bucket_pmean(cast_for_reduce(bucket), dp)
+        with obs_trace.phase("allreduce_flat"):
+            reduced = bucket_pmean(cast_for_reduce(bucket), dp)
         base_loss = reduced.pop("__base_loss__")
         terms = dict(terms, **reduced)
 
         # ---- method stage 3: finalize on replica-consistent terms ----
-        hyper, theta_post = method.finalize(terms, ctx)
+        with obs_trace.phase("finalize"):
+            hyper, theta_post = method.finalize(terms, ctx)
 
-        lam, m_state, theta_post, meta_ok = guarded_meta_update(
-            meta_opt, hyper, theta_post, state,
-            theta_pre=theta, guard=policy.dynamic_scaling, base_ok=base_ok,
-        )
-        if meta_ok is not None:  # hypergrad overflow must back the scale off
-            scale_state = policy_mod.backoff_on(scale_state, meta_ok, policy)
+        with obs_trace.phase("meta_update"):
+            lam, m_state, theta_post, meta_ok = guarded_meta_update(
+                meta_opt, hyper, theta_post, state,
+                theta_pre=theta, guard=policy.dynamic_scaling, base_ok=base_ok,
+            )
+            if meta_ok is not None:  # hypergrad overflow must back the scale off
+                scale_state = policy_mod.backoff_on(scale_state, meta_ok, policy)
 
         metrics = step_metrics(method, terms, hyper, losses)
         metrics["base_loss"] = base_loss
-        # the manual schedule reports the standard metric quartet only (its
-        # out_specs are static); extra per-method metrics live on the Engine path
-        metrics = {k: metrics[k] for k in METRIC_KEYS}
+        if meta_ok is not None:  # see engine.make_meta_step: automaton scalars
+            metrics["loss_scale"] = scale_state.scale
+            metrics["meta_skipped"] = 1.0 - meta_ok.astype(jnp.float32)
+        # the manual schedule reports a static metric set (its out_specs
+        # are static); extra per-method metrics live on the Engine path
+        metrics = {k: metrics[k] for k in metric_keys}
         new_state = EngineState(
             theta=theta_post, base_opt_state=b_state, lam=lam,
             meta_opt_state=m_state, step=state.step + 1, scale=scale_state,
@@ -244,7 +260,7 @@ def make_manual_step(
         )
         out_specs = (
             jax.tree_util.tree_map(lambda _: P(), state),
-            {k: P() for k in METRIC_KEYS},
+            {k: P() for k in metric_keys},
         )
         fn = shard_map(
             local_step, mesh, in_specs=in_specs, out_specs=out_specs,

@@ -21,6 +21,7 @@ import traceback
 import jax
 
 from repro import configs
+from repro import obs as obs_mod
 from repro.configs import INPUT_SHAPES
 from repro.launch import specs as specs_mod
 from repro.launch.mesh import make_production_mesh
@@ -30,6 +31,18 @@ from repro.models import transformer as tf
 from repro.models.common import dtype_of
 
 OUT_DIR = "experiments/dryrun"
+
+
+def _log(name: str, text: str, **data) -> None:
+    """Route a report line through the process-global obs pipeline when one
+    is installed (main() installs a console sink, so stdout is unchanged);
+    plain print when run_job is used as a library with obs off."""
+
+    obs = obs_mod.get_default()
+    if obs.enabled:
+        obs.log(name, text, **data)
+    else:
+        print(text)
 
 
 def run_job(arch: str, shape_name: str, *, multi_pod: bool = False, save: bool = True,
@@ -60,10 +73,17 @@ def run_job(arch: str, shape_name: str, *, multi_pod: bool = False, save: bool =
             compiled = lowered.compile()
             t_compile = time.time() - t0 - t_lower
             mem = compiled.memory_analysis()
-            print(f"[{job.name}@{mesh_name}] memory_analysis: {mem}")
+            _log("dryrun_memory",
+                 f"[{job.name}@{mesh_name}] memory_analysis: {mem}",
+                 job=job.name, mesh=mesh_name)
             cost = cost_analysis_dict(compiled)
-            print(f"[{job.name}@{mesh_name}] cost_analysis flops={cost.get('flops', 0):.3e} "
-                  f"bytes={cost.get('bytes accessed', 0):.3e}")
+            _log("dryrun_cost",
+                 f"[{job.name}@{mesh_name}] cost_analysis "
+                 f"flops={cost.get('flops', 0):.3e} "
+                 f"bytes={cost.get('bytes accessed', 0):.3e}",
+                 job=job.name, mesh=mesh_name,
+                 flops=cost.get("flops", 0),
+                 bytes_accessed=cost.get("bytes accessed", 0))
 
             dry_cfg = cfg.replace(param_dtype="bfloat16", dtype="bfloat16")
             if variant in ("sharded_ce", "opt", "opt_manual"):
@@ -104,7 +124,9 @@ def run_job(arch: str, shape_name: str, *, multi_pod: bool = False, save: bool =
 
 def _emit(result, save, arch, shape_name, mesh_name):
     line = {k: v for k, v in result.items() if k not in ("collectives", "traceback")}
-    print(json.dumps(line, default=str))
+    _log("dryrun_result", json.dumps(line, default=str),
+         arch=arch, shape=shape_name, mesh=mesh_name,
+         status=result.get("status"))
     if save:
         os.makedirs(OUT_DIR, exist_ok=True)
         fname = f"{OUT_DIR}/{arch}_{shape_name}_{mesh_name}.json"
@@ -119,7 +141,13 @@ def main():
     ap.add_argument("--all", action="store_true", help="run every (arch x shape)")
     ap.add_argument("--multi-pod", action="store_true", help="use the 2x16x16 512-chip mesh")
     ap.add_argument("--variant", default="baseline", choices=list(specs_mod.VARIANTS))
+    ap.add_argument("--obs-log", default=None, metavar="PATH",
+                    help="append structured events (JSONL) for "
+                         "`python -m repro.obs.report`")
     args = ap.parse_args()
+
+    obs_mod.set_default(obs_mod.make_obs(log_path=args.obs_log, console=True,
+                                         run_id="dryrun"))
 
     assert len(jax.devices()) == 512, "dry-run needs the forced 512 host devices"
 

@@ -41,8 +41,9 @@ def make_requests(cfg, n: int, prompt_len: int, gen: int, seed: int = 0):
             for L in lens], [gen] * n
 
 
-def run_continuous(model, params, prompts, gens, scfg: serve.ServeConfig):
-    ex = serve.ServeExecutor(model, params, scfg)
+def run_continuous(model, params, prompts, gens, scfg: serve.ServeConfig,
+                   obs=None):
+    ex = serve.ServeExecutor(model, params, scfg, obs=obs)
     ids = [ex.submit(p, max_new_tokens=g) for p, g in zip(prompts, gens)]
     stats = ex.run()
     return ex, ids, stats
@@ -66,6 +67,9 @@ def main():
                     help="serial dense-cache reference loop instead of "
                          "continuous batching")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--obs-log", default=None, metavar="PATH",
+                    help="append structured events (JSONL) for "
+                         "`python -m repro.obs.report`")
     args = ap.parse_args()
 
     cfg = configs.get_smoke_config(args.arch) if args.smoke else configs.get_config(args.arch)
@@ -75,6 +79,17 @@ def main():
     params = model.init(jax.random.PRNGKey(0))
     prompts, gens = make_requests(cfg, args.requests, args.prompt_len,
                                   args.gen, args.seed)
+
+    obs = None
+    if args.obs_log:
+        from repro import obs as obs_mod
+        obs = obs_mod.make_obs(log_path=args.obs_log,
+                               run_id=f"serve-{cfg.name}")
+        obs_mod.set_default(obs)
+        obs.emit("run", "run_start", data={
+            "cli": "serve", "arch": cfg.name,
+            "mode": "serial" if args.serial else "continuous",
+            "requests": args.requests})
 
     pg = args.page_size
     max_len = args.max_len or pg * ((args.prompt_len + args.gen + pg - 1) // pg)
@@ -99,7 +114,11 @@ def main():
             "sample": outs[0],
         }
         record = perf.PerfRecord(
-            name=f"serve_serial_{cfg.name}", latency=latency.as_dict(),
+            name=f"serve_serial_{cfg.name}",
+            # n == 0 (no requests survived to decode): the payload still
+            # shows the zeroed stats, but a PerfRecord latency section
+            # must carry real percentiles (validate_record), so omit it
+            latency=latency.as_dict() if latency.n else None,
             samples_per_s=args.requests / elapsed,
             extra={"requests": args.requests, "gen": args.gen},
         )
@@ -108,20 +127,21 @@ def main():
             slots=args.slots, page_size=pg, max_len=max_len,
             max_new_tokens=args.gen, default_timeout_s=args.timeout_s,
         )
-        ex, ids, stats = run_continuous(model, params, prompts, gens, scfg)
+        ex, ids, stats = run_continuous(model, params, prompts, gens, scfg,
+                                        obs=obs)
         payload = {
             "mode": "continuous", "arch": cfg.name, "requests": args.requests,
             "statuses": {s: sum(ex.results[i].status == s for i in ids)
                          for s in set(ex.results[i].status for i in ids)},
             "qps": round(stats.qps, 2),
-            "latency_us": None if stats.latency is None else stats.latency.as_dict(),
+            "latency_us": stats.latency.as_dict(),
             "decode_steps": stats.steps,
             "memory": stats.memory,
             "sample": ex.results[ids[0]].tokens,
         }
         record = perf.PerfRecord(
             name=f"serve_{cfg.name}",
-            latency=None if stats.latency is None else stats.latency.as_dict(),
+            latency=stats.latency.as_dict() if stats.latency.n else None,
             samples_per_s=stats.qps if np.isfinite(stats.qps) else None,
             extra={"requests": args.requests, "gen": args.gen,
                    "slots": args.slots, "decode_steps": stats.steps,
@@ -129,6 +149,11 @@ def main():
         )
     payload["perf"] = record.as_dict()
     print(json.dumps(payload))
+    if obs is not None:
+        obs.emit("metrics", "registry_snapshot", data=obs.metrics.snapshot())
+        obs.emit("run", "run_end",
+                 data={"qps": payload["qps"], "health": obs.health.status})
+        obs.close()
 
 
 if __name__ == "__main__":

@@ -20,7 +20,6 @@ smallest M whose compiled step fits that per-device budget instead.
 from __future__ import annotations
 
 import argparse
-import json
 import time
 
 import jax
@@ -28,6 +27,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import api, configs, data, scale
+from repro import obs as obs_mod
 from repro.core import available_methods, problems
 from repro.launch.mesh import make_host_mesh, make_production_mesh
 from repro.models import Model
@@ -57,7 +57,20 @@ def main():
                     help="let repro.scale.plan_microbatch pick the smallest M "
                          "whose compiled step fits this per-device budget "
                          "(overrides --microbatch)")
+    ap.add_argument("--obs-log", default=None, metavar="PATH",
+                    help="append structured events (JSONL) for "
+                         "`python -m repro.obs.report`")
+    ap.add_argument("--chrome-trace", default=None, metavar="PATH",
+                    help="write a chrome://tracing file of the per-phase "
+                         "span profile")
     args = ap.parse_args()
+
+    # All reporting flows through one obs pipeline: the ConsoleSink keeps
+    # stdout identical to the pre-obs prints; --obs-log adds the durable
+    # JSONL the report CLI consumes.
+    obs = obs_mod.make_obs(log_path=args.obs_log, console=True,
+                           run_id=f"train-{args.arch}-{args.method}")
+    obs_mod.set_default(obs)
 
     cfg = configs.get_smoke_config(args.arch) if args.smoke else configs.get_config(args.arch)
     mesh = make_production_mesh() if args.production_mesh else make_host_mesh()
@@ -75,6 +88,7 @@ def main():
         mesh=mesh,
         schedule="single_sync" if args.manual_collectives else "pjit",
         checkpoint_dir=args.ckpt,
+        obs=obs,
     )
     learner = api.MetaLearner(spec, scale=scale_cfg, **learner_args)
 
@@ -116,17 +130,43 @@ def main():
             schedule="single_sync" if args.manual_collectives else "pjit",
         )
         peak_mb = plan.peak_bytes / 2 ** 20 if plan.peak_bytes is not None else float("nan")
-        print(f"planner: microbatch={plan.microbatch} fits={plan.fits} "
-              f"peak={peak_mb:.1f}MB budget={args.hbm_budget_gb}GB source={plan.source}")
+        obs.log("planner",
+                f"planner: microbatch={plan.microbatch} fits={plan.fits} "
+                f"peak={peak_mb:.1f}MB budget={args.hbm_budget_gb}GB "
+                f"source={plan.source}",
+                microbatch=plan.microbatch, fits=plan.fits,
+                peak_bytes=plan.peak_bytes, source=plan.source,
+                budget_gb=args.hbm_budget_gb)
         if plan.microbatch != scale_cfg.microbatch:
             scale_cfg = plan.scale
             learner = api.MetaLearner(spec, scale=scale_cfg, **learner_args)
             learner.init(theta, lam)
 
-    print(f"arch={cfg.name} params={model.num_params(theta):,} method={args.method} "
-          f"schedule={learner.schedule} precision={args.precision} "
-          f"microbatch={scale_cfg.microbatch} "
-          f"mesh={dict(zip(mesh.axis_names, mesh.devices.shape))}")
+    n_params = model.num_params(theta)
+    mesh_shape = dict(zip(mesh.axis_names, mesh.devices.shape))
+    obs.emit("run", "run_start", data={
+        "cli": "train", "arch": cfg.name, "method": args.method,
+        "steps": args.steps, "unroll": args.unroll, "params": n_params,
+        "schedule": learner.schedule, "precision": args.precision,
+        "microbatch": scale_cfg.microbatch, "mesh": mesh_shape})
+    obs.log("run_header",
+            f"arch={cfg.name} params={n_params:,} method={args.method} "
+            f"schedule={learner.schedule} precision={args.precision} "
+            f"microbatch={scale_cfg.microbatch} mesh={mesh_shape}")
+
+    if args.obs_log or args.chrome_trace:
+        # One eager step under the span tracer: real per-phase wall times
+        # for the report / chrome trace. A dedicated RNG keeps the training
+        # data stream identical to an un-profiled run; state is untouched.
+        prof_rng = np.random.default_rng(2 ** 20)
+        spans = learner.phase_profile(
+            make_batch(args.batch, args.unroll, rng=prof_rng),
+            make_batch(max(args.batch // 2, 1), rng=prof_rng))
+        if args.chrome_trace:
+            obs_mod.write_chrome_trace(args.chrome_trace, spans)
+            obs.log("chrome_trace",
+                    f"chrome trace ({len(spans)} spans) written to "
+                    f"{args.chrome_trace}", path=args.chrome_trace)
 
     t0 = time.time()
     for i in range(args.steps):
@@ -134,13 +174,30 @@ def main():
         meta = make_batch(max(args.batch // 2, 1))
         metrics = learner.step(base, meta)
         if i % args.log_every == 0 or i == args.steps - 1:
-            m = {k: round(float(v), 4) for k, v in metrics.items()}
-            m.update(step=i, elapsed_s=round(time.time() - t0, 1))
-            print(json.dumps(m))
+            # one packed D2H read for the whole metric dict, then the same
+            # greppable JSON line the CLI always printed (ConsoleSink)
+            row = {k: round(v, 4)
+                   for k, v in obs_mod.packed_read(metrics).items()}
+            row["elapsed_s"] = round(time.time() - t0, 1)
+            obs.observe_step(i, row)
+
+    if args.manual_collectives and args.obs_log:
+        census = learner.verify_census(base, meta)
+        obs.log("census",
+                f"census: all_reduces={census.get('all-reduce_count', 0)} "
+                f"expected={census['expected_all_reduces']} "
+                f"ok={census['single_sync_ok']}")
 
     if args.ckpt:
         path = learner.save(meta={"arch": cfg.name})
-        print(f"checkpoint written to {path}")
+        obs.log("checkpoint", f"checkpoint written to {path}", path=path)
+
+    if args.obs_log:  # snapshot is for the report CLI, not the console
+        obs.emit("metrics", "registry_snapshot", data=obs.metrics.snapshot())
+    obs.emit("run", "run_end", data={
+        "elapsed_s": round(time.time() - t0, 1), "steps": args.steps,
+        "health": obs.health.status})
+    obs.close()
 
 
 if __name__ == "__main__":

@@ -1,0 +1,233 @@
+"""repro.obs — runtime tracing, metrics, and health telemetry.
+
+The facade is :class:`Obs`: one object bundling an event sink
+(`events.py`), a metric registry (`metrics.py`), a span tracer
+(`trace.py`), and health monitors (`health.py`). Subsystems take an
+``obs=`` knob; when it is omitted they fall back to :data:`NULL_OBS`,
+whose ``enabled`` flag is False — every instrumentation site guards on
+that flag first, so a run without observability does zero per-event
+work and (because in-graph annotations are unconditional metadata-only
+``jax.named_scope``) compiles to byte-identical HLO. Both guarantees
+are pinned in ``tests/test_obs.py``.
+
+Typical wiring (what ``launch/train.py --obs-log run.jsonl`` does)::
+
+    from repro import obs as obs_mod
+    obs = obs_mod.make_obs(log_path="run.jsonl", console=True)
+    obs_mod.set_default(obs)          # deep call sites (kernel dispatch)
+    ...
+    learner.fit(batches, steps=200, obs=obs)
+    obs.emit("run", "run_end", data=obs.health.summary())
+    obs.close()
+
+Then offline::
+
+    python -m repro.obs.report run.jsonl
+
+There is also a process-global default (:func:`set_default` /
+:func:`get_default`) for call sites too deep to thread a knob through —
+kernel dispatch decisions, launch-script logging. It starts as
+:data:`NULL_OBS`; nothing is observed unless a CLI or a user opts in.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, List, Optional
+
+from . import events as events_mod
+from . import health as health_mod
+from . import metrics as metrics_mod
+from . import trace as trace_mod
+from .events import (ConsoleSink, Event, JsonlSink, NullSink, RingSink, Sink,
+                     TeeSink, make_event, read_jsonl, validate_event,
+                     validate_jsonl)
+from .health import Alert, HealthMonitor
+from .metrics import Counter, Gauge, Histogram, MetricsRegistry, packed_read
+from .trace import PHASES, Span, Tracer, activate, chrome_trace, phase, \
+    span_tree_summary, write_chrome_trace
+
+__all__ = [
+    "Obs", "NULL_OBS", "make_obs", "set_default", "get_default",
+    "Event", "Sink", "NullSink", "JsonlSink", "RingSink", "ConsoleSink",
+    "TeeSink", "make_event", "read_jsonl", "validate_event", "validate_jsonl",
+    "Counter", "Gauge", "Histogram", "MetricsRegistry", "packed_read",
+    "Tracer", "Span", "phase", "activate", "chrome_trace",
+    "write_chrome_trace", "span_tree_summary", "PHASES",
+    "HealthMonitor", "Alert",
+]
+
+
+class Obs:
+    """One observability pipeline: events → [health] → sink, plus a
+    metric registry and a span tracer sharing the same sink.
+
+    ``enabled=False`` (or the :data:`NULL_OBS` singleton) is the
+    contract for "off": ``emit`` returns before constructing anything,
+    and instrumented code guards loops/dict-building on ``obs.enabled``.
+    """
+
+    def __init__(self, sink: Optional[Sink] = None, *, enabled: bool = True,
+                 run_id: Optional[str] = None,
+                 health: Optional[HealthMonitor] = None,
+                 monitor: bool = True):
+        self.sink: Sink = sink if sink is not None else RingSink()
+        self.enabled = enabled
+        self.run_id = run_id
+        self.metrics = MetricsRegistry()
+        self.health: Optional[HealthMonitor] = (
+            health if health is not None
+            else (HealthMonitor() if monitor else None))
+        self.tracer = Tracer(obs=self)
+        self._last_loss_scale: Optional[float] = None
+
+    # -- event pipeline ----------------------------------------------------
+
+    def emit(self, kind: str, name: str, *, data: Optional[Dict[str, Any]] = None,
+             step: Optional[int] = None) -> Optional[Event]:
+        """Build, monitor, and sink one event. No-op when disabled."""
+
+        if not self.enabled:
+            return None
+        event = make_event(kind, name, data=data, step=step)
+        self.sink.write(event)
+        if self.health is not None:
+            for alert in self.health.observe(event):
+                # alerts are themselves events, but bypass health to keep
+                # the pipeline loop-free
+                self.sink.write(make_event(
+                    "alert", alert.monitor, step=alert.step,
+                    data={"severity": alert.severity, "message": alert.message,
+                          **alert.data}))
+        return event
+
+    def log(self, name: str, text: Optional[str] = None,
+            step: Optional[int] = None, **data: Any) -> None:
+        """Structured replacement for ``print()``: a ``log`` event whose
+        console rendering is the original line."""
+
+        if not self.enabled:
+            return
+        if text is not None:
+            data = {"text": text, **data}
+        self.emit("log", name, data=data, step=step)
+
+    # -- metrics convenience ----------------------------------------------
+
+    def counter(self, name: str, help: str = "") -> Counter:
+        return self.metrics.counter(name, help)
+
+    def gauge(self, name: str, help: str = "") -> Gauge:
+        return self.metrics.gauge(name, help)
+
+    def histogram(self, name: str, help: str = "", bounds=None) -> Histogram:
+        return self.metrics.histogram(name, help, bounds=bounds)
+
+    # -- step / domain observation helpers --------------------------------
+
+    def observe_step(self, step: int, metrics: Dict[str, float]) -> None:
+        """Ingest one training step's metric dict (already host floats —
+        see :func:`repro.obs.metrics.packed_read`).
+
+        Emits the ``metrics`` event and derives the loss-scale/gate
+        events host-side from the ``loss_scale`` / ``meta_skipped``
+        scalars the engine exposes under dynamic scaling, so the traced
+        step function needs no obs-conditional code at all.
+        """
+
+        if not self.enabled:
+            return
+        self.emit("metrics", "step", data=dict(metrics), step=step)
+        scale = metrics.get("loss_scale")
+        if scale is not None:
+            prev = self._last_loss_scale
+            if prev is not None and scale != prev:
+                name = "backoff" if scale < prev else "growth"
+                self.emit("scale", name, data={"scale": scale, "prev": prev},
+                          step=step)
+                self.counter("loss_scale_transitions").inc(labels={"kind": name})
+            self._last_loss_scale = scale
+        skipped = metrics.get("meta_skipped")
+        if skipped is not None and skipped:
+            self.emit("gate", "meta_update",
+                      data={"finite": False, "reason": "nonfinite_hypergrad"},
+                      step=step)
+            self.counter("meta_updates_skipped").inc()
+        hg = metrics.get("hypergrad_norm")
+        if isinstance(hg, float) and not math.isfinite(hg):
+            self.emit("gate", "meta_update",
+                      data={"finite": False, "reason": "nonfinite_hypergrad_norm"},
+                      step=step)
+
+    def observe_census(self, observed: int, expected: int,
+                       detail: Optional[Dict[str, Any]] = None) -> None:
+        """Record a collective-census check against the pinned
+        ``unroll+1`` expectation; mismatch trips CensusMonitor."""
+
+        if not self.enabled:
+            return
+        data = {"observed": int(observed), "expected": int(expected),
+                "ok": int(observed) == int(expected)}
+        if detail:
+            data.update(detail)
+        self.emit("census", "all_reduce", data=data)
+
+    # -- lifecycle ---------------------------------------------------------
+
+    def summary(self) -> Dict[str, Any]:
+        out: Dict[str, Any] = {"run_id": self.run_id,
+                               "metrics": self.metrics.snapshot()}
+        if self.health is not None:
+            out["health"] = self.health.summary()
+        return out
+
+    def flush(self) -> None:
+        if self.enabled:
+            self.sink.flush()
+
+    def close(self) -> None:
+        if self.enabled:
+            self.sink.close()
+
+
+#: The disabled pipeline every ``obs=``-knob defaults to. Shared and
+#: stateless-by-construction: emit() returns immediately, so nothing is
+#: ever written to its NullSink.
+NULL_OBS = Obs(sink=NullSink(), enabled=False, monitor=False)
+
+
+def make_obs(log_path: Optional[str] = None, *, console: bool = False,
+             ring: int = 0, run_id: Optional[str] = None,
+             monitor: bool = True) -> Obs:
+    """Build an enabled Obs from CLI-ish knobs: JSONL file sink
+    (``log_path``), legacy-stdout console sink, and/or a ring buffer.
+    With no sinks requested you get a 1024-event ring (events are kept,
+    nothing is printed or written)."""
+
+    sinks: List[Sink] = []
+    if log_path:
+        sinks.append(JsonlSink(log_path))
+    if console:
+        sinks.append(ConsoleSink())
+    if ring:
+        sinks.append(RingSink(ring))
+    if not sinks:
+        sinks.append(RingSink())
+    sink: Sink = sinks[0] if len(sinks) == 1 else TeeSink(sinks)
+    return Obs(sink=sink, run_id=run_id, monitor=monitor)
+
+
+_default_obs: Obs = NULL_OBS
+
+
+def set_default(obs: Optional[Obs]) -> None:
+    """Install the process-global default pipeline (None resets to
+    :data:`NULL_OBS`). Used by call sites too deep for an ``obs=`` knob
+    — e.g. kernel dispatch decisions."""
+
+    global _default_obs
+    _default_obs = obs if obs is not None else NULL_OBS
+
+
+def get_default() -> Obs:
+    return _default_obs

@@ -1,0 +1,311 @@
+"""The versioned structured-event schema and its sinks (docs/observability.md).
+
+One :class:`Event` is one timestamped fact about a running system — a
+metric snapshot, a completed span, a loss-scale backoff, a shed request,
+a health alert. Every event the repo emits flows through a sink:
+
+* :class:`NullSink`      — the disabled path. Writing is a constant-time
+  no-op; the hot loops additionally guard on ``obs.enabled`` so a
+  disabled run performs ZERO per-event work (and, because all engine
+  instrumentation is host-side or metadata-only, lowers to byte-identical
+  HLO — pinned in tests/test_obs.py).
+* :class:`JsonlSink`     — append-only JSON Lines file, one event per
+  line, flushed per write so a killed run keeps everything it logged.
+  This is the durable format ``repro.obs.report`` consumes.
+* :class:`RingSink`      — fixed-capacity in-memory ring buffer (oldest
+  evicted first); the cheap always-on option for post-hoc inspection
+  and tests.
+* :class:`ConsoleSink`   — renders selected event kinds back into the
+  greppable stdout lines the launch CLIs printed before observability
+  existed (``log`` events print their text, ``metrics`` events print the
+  same JSON dict ``launch/train.py`` always printed).
+* :class:`TeeSink`       — fan-out to several sinks.
+
+Schema v1 (validated by :func:`validate_event`; the CI obs-smoke job
+runs every logged event through it)::
+
+    {"v": 1, "t": <unix seconds>, "kind": <KINDS>, "name": str,
+     "step": int | null, "data": {...}}
+
+``kind`` is the coarse router (what machinery produced it), ``name`` the
+fine label, ``data`` the payload. Unknown *names* are fine — monitors
+and the report CLI key on (kind, name) pairs they know and ignore the
+rest — but unknown *kinds* are schema errors: every emitter in-repo
+picks from :data:`KINDS`, so a novel kind means a corrupted log or a
+version skew worth failing loudly on.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import sys
+import time
+from collections import deque
+from typing import Any, Callable, Dict, Iterator, List, Optional, Tuple
+
+SCHEMA_VERSION = 1
+
+#: The closed set of event kinds (coarse categories; ``name`` is open).
+KINDS = (
+    "run",        # run_start / run_end lifecycle markers
+    "log",        # structured replacement for ad-hoc print() reporting
+    "metrics",    # a step's metric scalars (or a registry snapshot)
+    "span",       # a completed trace.Span (host wall time)
+    "scale",      # loss-scale automaton transitions (backoff / growth)
+    "gate",       # skip-on-nonfinite gates (guarded_meta_update etc.)
+    "census",     # collective-census observation (all-reduce counts)
+    "serve",      # serving-plane events (sheds, ticks, queue depth)
+    "dispatch",   # kernel backend-dispatch decisions
+    "checkpoint", # save / restore
+    "alert",      # health-monitor firings
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class Event:
+    """One structured observation. Immutable; ``data`` values must be
+    JSON-serializable (the JsonlSink enforces this at write time by
+    stringifying anything ``json`` refuses)."""
+
+    kind: str
+    name: str
+    t: float
+    data: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    step: Optional[int] = None
+    v: int = SCHEMA_VERSION
+
+    def as_dict(self) -> Dict[str, Any]:
+        return {"v": self.v, "t": self.t, "kind": self.kind, "name": self.name,
+                "step": self.step, "data": self.data}
+
+    @staticmethod
+    def from_dict(d: Dict[str, Any]) -> "Event":
+        return Event(kind=d["kind"], name=d["name"], t=d["t"],
+                     data=dict(d.get("data") or {}), step=d.get("step"),
+                     v=d.get("v", SCHEMA_VERSION))
+
+
+def make_event(kind: str, name: str, *, data: Optional[Dict[str, Any]] = None,
+               step: Optional[int] = None, t: Optional[float] = None) -> Event:
+    if kind not in KINDS:
+        raise ValueError(f"unknown event kind {kind!r}; have {KINDS}")
+    return Event(kind=kind, name=name, t=time.time() if t is None else t,
+                 data=dict(data or {}), step=step)
+
+
+def validate_event(d: Any) -> List[str]:
+    """Schema errors for one event dict ([] = valid)."""
+
+    if not isinstance(d, dict):
+        return [f"event must be a dict, got {type(d).__name__}"]
+    errors: List[str] = []
+    if d.get("v") != SCHEMA_VERSION:
+        errors.append(f"event.v must be {SCHEMA_VERSION}, got {d.get('v')!r}")
+    if d.get("kind") not in KINDS:
+        errors.append(f"event.kind {d.get('kind')!r} not in {KINDS}")
+    if not isinstance(d.get("name"), str) or not d.get("name"):
+        errors.append("event.name must be a non-empty string")
+    if not isinstance(d.get("t"), (int, float)):
+        errors.append("event.t must be a number (unix seconds)")
+    step = d.get("step")
+    if step is not None and not isinstance(step, int):
+        errors.append("event.step must be an int or null")
+    if not isinstance(d.get("data"), dict):
+        errors.append("event.data must be a dict")
+    return errors
+
+
+# ---------------------------------------------------------------------------
+# sinks
+# ---------------------------------------------------------------------------
+
+
+class Sink:
+    """Protocol anchor: ``write(event)``, ``flush()``, ``close()``."""
+
+    def write(self, event: Event) -> None:
+        raise NotImplementedError
+
+    def flush(self) -> None:  # pragma: no cover - default no-op
+        pass
+
+    def close(self) -> None:  # pragma: no cover - default no-op
+        pass
+
+
+class NullSink(Sink):
+    """Discards everything. ``Obs`` short-circuits before even building
+    Event objects when disabled, so this sink exists for API symmetry
+    (and as the terminal guarantee that a disabled pipeline stays
+    zero-overhead if something writes anyway)."""
+
+    def write(self, event: Event) -> None:
+        pass
+
+
+class RingSink(Sink):
+    """Keep the most recent ``capacity`` events in memory (FIFO eviction,
+    pinned in tests). ``events()`` returns oldest-first."""
+
+    def __init__(self, capacity: int = 1024):
+        if capacity < 1:
+            raise ValueError(f"capacity must be >= 1, got {capacity}")
+        self.capacity = capacity
+        self._ring: "deque[Event]" = deque(maxlen=capacity)
+        self.dropped = 0  # count of evicted events (observability of the ring itself)
+
+    def write(self, event: Event) -> None:
+        if len(self._ring) == self._ring.maxlen:
+            self.dropped += 1
+        self._ring.append(event)
+
+    def events(self) -> List[Event]:
+        return list(self._ring)
+
+    def clear(self) -> None:
+        self._ring.clear()
+
+
+class JsonlSink(Sink):
+    """Append-only JSON Lines file. One ``json.dumps`` per event, flushed
+    immediately — the event rate is bounded by the host-side cadence
+    (log_every for training, per-request for serving), so durability wins
+    over batching. Non-JSON-serializable data values are stringified
+    rather than crashing the run being observed."""
+
+    def __init__(self, path: str):
+        self.path = path
+        directory = os.path.dirname(os.path.abspath(path))
+        os.makedirs(directory, exist_ok=True)
+        self._f = open(path, "a", encoding="utf-8")
+
+    def write(self, event: Event) -> None:
+        self._f.write(json.dumps(event.as_dict(), default=str) + "\n")
+        self._f.flush()
+
+    def flush(self) -> None:
+        self._f.flush()
+
+    def close(self) -> None:
+        if not self._f.closed:
+            self._f.close()
+
+
+#: ConsoleSink's default renderers; kind -> fn(event) -> printed line.
+def _render_log(e: Event) -> str:
+    text = e.data.get("text")
+    if text is not None:
+        return str(text)
+    return f"{e.name}: " + json.dumps(
+        {k: v for k, v in e.data.items() if k != "text"}, default=str)
+
+
+def _render_metrics(e: Event) -> str:
+    # the exact greppable shape launch/train.py always printed
+    d = dict(e.data)
+    if e.step is not None:
+        d.setdefault("step", e.step)
+    return json.dumps(d, default=str)
+
+
+def _render_alert(e: Event) -> str:
+    return (f"[obs:{e.data.get('severity', 'warn')}] {e.name}: "
+            f"{e.data.get('message', '')}")
+
+
+class ConsoleSink(Sink):
+    """Renders selected kinds back into the legacy stdout lines so CLI
+    output stays greppable when reporting is routed through events.
+    Span/serve/dispatch chatter is NOT printed by default — the console
+    shows what the pre-obs CLIs showed, the JSONL keeps everything."""
+
+    RENDERERS: Dict[str, Callable[[Event], str]] = {
+        "log": _render_log,
+        "metrics": _render_metrics,
+        "alert": _render_alert,
+    }
+
+    #: metrics-kind names worth a console line; registry snapshots and
+    #: other bulk dumps stay JSONL-only
+    METRIC_NAMES = ("step",)
+
+    def __init__(self, stream=None, kinds: Optional[Tuple[str, ...]] = None):
+        self.stream = stream if stream is not None else sys.stdout
+        self.kinds = tuple(kinds) if kinds is not None else tuple(self.RENDERERS)
+
+    def write(self, event: Event) -> None:
+        if event.kind not in self.kinds:
+            return
+        if event.kind == "metrics" and event.name not in self.METRIC_NAMES:
+            return
+        render = self.RENDERERS.get(event.kind, _render_log)
+        print(render(event), file=self.stream)
+
+    def flush(self) -> None:
+        self.stream.flush()
+
+
+class TeeSink(Sink):
+    def __init__(self, sinks: List[Sink]):
+        self.sinks = list(sinks)
+
+    def write(self, event: Event) -> None:
+        for s in self.sinks:
+            s.write(event)
+
+    def flush(self) -> None:
+        for s in self.sinks:
+            s.flush()
+
+    def close(self) -> None:
+        for s in self.sinks:
+            s.close()
+
+
+# ---------------------------------------------------------------------------
+# reading logs back
+# ---------------------------------------------------------------------------
+
+
+def read_jsonl(path: str, *, strict: bool = False) -> Iterator[Event]:
+    """Iterate the events of a JSONL log. ``strict`` raises on the first
+    malformed line / schema violation; otherwise bad lines are skipped
+    (a crashed writer can leave a torn final line)."""
+
+    with open(path, encoding="utf-8") as f:
+        for lineno, line in enumerate(f, 1):
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                d = json.loads(line)
+            except json.JSONDecodeError as e:
+                if strict:
+                    raise ValueError(f"{path}:{lineno}: not JSON: {e}") from e
+                continue
+            errors = validate_event(d)
+            if errors:
+                if strict:
+                    raise ValueError(f"{path}:{lineno}: " + "; ".join(errors))
+                continue
+            yield Event.from_dict(d)
+
+
+def validate_jsonl(path: str) -> List[str]:
+    """Schema errors across a whole log file ([] = every line valid)."""
+
+    errors: List[str] = []
+    with open(path, encoding="utf-8") as f:
+        for lineno, line in enumerate(f, 1):
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                d = json.loads(line)
+            except json.JSONDecodeError as e:
+                errors.append(f"line {lineno}: not JSON: {e}")
+                continue
+            errors.extend(f"line {lineno}: {e}" for e in validate_event(d))
+    return errors

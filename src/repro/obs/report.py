@@ -1,0 +1,281 @@
+"""``python -m repro.obs.report run.jsonl`` — render a run summary.
+
+Reads an event log written by a JsonlSink (``--obs-log`` on the launch
+CLIs), replays the health monitors over it, and prints:
+
+* the run header (who/when/how many events of each kind),
+* per-phase span times (runtime spans preferred; trace-time spans —
+  phases captured while jit was tracing — reported separately),
+* the metric trajectory (first/last step scalars),
+* loss-scale and skip history (every backoff/growth + gated update),
+* serving SLO numbers when serve events are present,
+* kernel dispatch decisions keyed by (kernel, backend, reason),
+* health verdicts per monitor plus the fired alerts.
+
+``--json`` emits the same summary machine-readable; ``--validate``
+exits non-zero if any line fails schema validation (the CI obs-smoke
+job runs this over its artifact).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from collections import Counter as TallyCounter
+from typing import Any, Dict, List, Optional
+
+from .events import Event, read_jsonl, validate_jsonl
+from .health import replay
+from .trace import PHASES
+
+
+def _fmt_us(us: float) -> str:
+    if us >= 1e6:
+        return f"{us / 1e6:.2f}s"
+    if us >= 1e3:
+        return f"{us / 1e3:.1f}ms"
+    return f"{us:.0f}us"
+
+
+def _span_table(events: List[Event], traced: bool) -> List[Dict[str, Any]]:
+    agg: Dict[str, Dict[str, Any]] = {}
+    order: List[str] = []
+    for e in events:
+        if e.kind != "span" or bool(e.data.get("traced")) != traced:
+            continue
+        name = e.name
+        if name not in agg:
+            order.append(name)
+            agg[name] = {"name": name, "n": 0, "total_us": 0.0, "max_us": 0.0}
+        a = agg[name]
+        dur = float(e.data.get("dur_us", 0.0))
+        a["n"] += 1
+        a["total_us"] += dur
+        a["max_us"] = max(a["max_us"], dur)
+    for a in agg.values():
+        a["mean_us"] = a["total_us"] / a["n"]
+
+    def _rank(name: str):
+        try:
+            return (0, PHASES.index(name))
+        except ValueError:
+            return (1, order.index(name))
+
+    return [agg[n] for n in sorted(agg, key=_rank)]
+
+
+def summarize(events: List[Event]) -> Dict[str, Any]:
+    """Machine-readable run summary (the ``--json`` payload)."""
+
+    kinds = TallyCounter(e.kind for e in events)
+    t = [e.t for e in events]
+    summary: Dict[str, Any] = {
+        "events": len(events),
+        "kinds": dict(sorted(kinds.items())),
+        "t_start": min(t) if t else None,
+        "t_end": max(t) if t else None,
+    }
+
+    run_meta = [e for e in events if e.kind == "run"]
+    if run_meta:
+        summary["run"] = {e.name: e.data for e in run_meta}
+
+    summary["phases"] = _span_table(events, traced=False)
+    summary["phases_trace_time"] = _span_table(events, traced=True)
+
+    steps = [e for e in events if e.kind == "metrics" and e.name == "step"]
+    if steps:
+        summary["steps"] = {
+            "n": len(steps),
+            "first": {"step": steps[0].step, **steps[0].data},
+            "last": {"step": steps[-1].step, **steps[-1].data},
+        }
+
+    scale_events = [e for e in events if e.kind == "scale"]
+    gate_events = [e for e in events
+                   if e.kind == "gate" and not e.data.get("finite", True)]
+    summary["scale_history"] = [
+        {"step": e.step, "event": e.name, "scale": e.data.get("scale"),
+         "prev": e.data.get("prev")} for e in scale_events]
+    summary["skip_history"] = [
+        {"step": e.step, "gate": e.name, "reason": e.data.get("reason")}
+        for e in gate_events]
+
+    serve_term = TallyCounter(
+        e.name for e in events
+        if e.kind == "serve" and e.name in ("done", "deadline_miss", "shed"))
+    ticks = [e for e in events if e.kind == "serve" and e.name == "tick"]
+    if serve_term or ticks:
+        tick_us = sorted(float(e.data["dur_us"]) for e in ticks
+                         if "dur_us" in e.data)
+
+        def _pct(q: float) -> Optional[float]:
+            if not tick_us:
+                return None
+            i = min(len(tick_us) - 1, int(q * len(tick_us)))
+            return tick_us[i]
+
+        summary["serve"] = {
+            "terminal": dict(sorted(serve_term.items())),
+            "ticks": len(ticks),
+            "tick_p50_us": _pct(0.50),
+            "tick_p99_us": _pct(0.99),
+            "max_queue_depth": max(
+                (e.data.get("queue_depth", 0) for e in ticks), default=0),
+        }
+
+    dispatch = TallyCounter(
+        (e.data.get("kernel", e.name), e.data.get("backend", "?"),
+         e.data.get("reason", "?"))
+        for e in events if e.kind == "dispatch")
+    if dispatch:
+        summary["dispatch"] = [
+            {"kernel": k, "backend": b, "reason": r, "n": n}
+            for (k, b, r), n in sorted(dispatch.items())]
+
+    census = [e for e in events if e.kind == "census"]
+    if census:
+        last = census[-1]
+        summary["census"] = {"observed": last.data.get("observed"),
+                             "expected": last.data.get("expected"),
+                             "ok": last.data.get("ok")}
+
+    health = replay(events)
+    summary["health"] = health.summary()
+    # replaying re-derives alerts; drop the duplicate alert events' echo
+    summary["health"]["alerts"] = [a.as_dict() for a in health.alerts]
+    return summary
+
+
+def render(summary: Dict[str, Any]) -> str:
+    """Human-readable rendering of :func:`summarize`'s output."""
+
+    lines: List[str] = []
+    add = lines.append
+
+    add("== repro.obs run report ==")
+    dur = None
+    if summary.get("t_start") is not None and summary.get("t_end") is not None:
+        dur = summary["t_end"] - summary["t_start"]
+    add(f"events: {summary['events']}"
+        + (f"  wall: {dur:.1f}s" if dur is not None else ""))
+    add("kinds:  " + ", ".join(f"{k}={n}" for k, n in summary["kinds"].items()))
+
+    for key, title in (("phases", "phase spans (runtime)"),
+                       ("phases_trace_time", "phase spans (jit trace time)")):
+        rows = summary.get(key) or []
+        if not rows:
+            continue
+        add("")
+        add(f"-- {title} --")
+        add(f"{'phase':<18} {'n':>5} {'mean':>10} {'max':>10} {'total':>10}")
+        for r in rows:
+            add(f"{r['name']:<18} {r['n']:>5} {_fmt_us(r['mean_us']):>10} "
+                f"{_fmt_us(r['max_us']):>10} {_fmt_us(r['total_us']):>10}")
+
+    steps = summary.get("steps")
+    if steps:
+        add("")
+        add(f"-- metrics ({steps['n']} logged steps) --")
+        for label in ("first", "last"):
+            row = steps[label]
+            scalars = ", ".join(
+                f"{k}={v:.4g}" if isinstance(v, float) else f"{k}={v}"
+                for k, v in row.items() if k != "step")
+            add(f"{label:<6} step {row.get('step')}: {scalars}")
+
+    scale_hist = summary.get("scale_history") or []
+    skip_hist = summary.get("skip_history") or []
+    if scale_hist or skip_hist:
+        add("")
+        add("-- loss-scale / skip history --")
+        for r in scale_hist:
+            add(f"step {r['step']}: loss scale {r['event']} "
+                f"{r['prev']} -> {r['scale']}")
+        for r in skip_hist:
+            add(f"step {r['step']}: {r['gate']} skipped ({r['reason']})")
+        if not scale_hist:
+            add("(no loss-scale transitions)")
+    elif any(k in summary["kinds"] for k in ("metrics",)):
+        add("")
+        add("-- loss-scale / skip history --")
+        add("(no transitions, no skips)")
+
+    serve = summary.get("serve")
+    if serve:
+        add("")
+        add("-- serve --")
+        term = ", ".join(f"{k}={n}" for k, n in serve["terminal"].items()) or "none"
+        add(f"requests: {term}")
+        if serve["ticks"]:
+            p50 = serve.get("tick_p50_us")
+            p99 = serve.get("tick_p99_us")
+            add(f"ticks: {serve['ticks']}  tick p50 "
+                f"{_fmt_us(p50) if p50 is not None else '-'}  p99 "
+                f"{_fmt_us(p99) if p99 is not None else '-'}  "
+                f"max queue depth {serve['max_queue_depth']}")
+
+    dispatch = summary.get("dispatch")
+    if dispatch:
+        add("")
+        add("-- kernel dispatch --")
+        for r in dispatch:
+            add(f"{r['kernel']:<24} {r['backend']:<18} {r['reason']:<24} "
+                f"x{r['n']}")
+
+    census = summary.get("census")
+    if census:
+        add("")
+        add("-- collective census --")
+        mark = "OK" if census.get("ok") else "MISMATCH"
+        add(f"all-reduces: {census.get('observed')} "
+            f"(expected {census.get('expected')}) {mark}")
+
+    health = summary["health"]
+    add("")
+    add(f"-- health: {health['status'].upper()} --")
+    for name, v in health["monitors"].items():
+        add(f"{name:<12} {v['status']:<9} {v.get('detail', '')}")
+    alerts = health.get("alerts") or []
+    if alerts:
+        add("")
+        add(f"alerts ({len(alerts)}):")
+        for a in alerts:
+            step = f" step {a['step']}" if a.get("step") is not None else ""
+            add(f"  [{a['severity']}] {a['monitor']}{step}: {a['message']}")
+    return "\n".join(lines)
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="python -m repro.obs.report",
+        description="Summarize a repro.obs JSONL event log.")
+    parser.add_argument("log", help="path to the JSONL event log")
+    parser.add_argument("--json", action="store_true",
+                        help="emit the machine-readable summary instead")
+    parser.add_argument("--validate", action="store_true",
+                        help="fail (exit 1) if any line violates the schema")
+    args = parser.parse_args(argv)
+
+    if args.validate:
+        errors = validate_jsonl(args.log)
+        if errors:
+            for e in errors:
+                print(f"{args.log}: {e}", file=sys.stderr)
+            return 1
+
+    events = list(read_jsonl(args.log))
+    if not events:
+        print(f"{args.log}: no valid events", file=sys.stderr)
+        return 1
+    summary = summarize(events)
+    if args.json:
+        print(json.dumps(summary, indent=2, default=str))
+    else:
+        print(render(summary))
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,240 @@
+"""Nested span timing over the engine's phases, with Chrome-trace export.
+
+Two layers cooperate here, and keeping them straight is what makes the
+"byte-identical HLO when disabled" guarantee hold (tests/test_obs.py):
+
+1. **In-graph phase names** — :func:`phase` wraps each engine phase in
+   ``jax.named_scope`` *unconditionally*. named_scope only attaches
+   name metadata to the ops traced under it; it is applied whether or
+   not observability is on, so the lowered HLO text is identical either
+   way (and the `unroll+1` collective census is untouched).
+2. **Host span capture** — when a :class:`Tracer` is activated (a
+   contextvar, see :func:`activate`), :func:`phase` ALSO records a host
+   wall-time span and enters ``jax.profiler.TraceAnnotation`` so native
+   JAX profiles carry the same labels. With no tracer active the extra
+   cost is one contextvar read at Python execution time — which for
+   jitted code means once per compilation, not per step.
+
+What a span's duration *means* depends on where Python ran:
+
+* under ``jax.jit`` tracing, the phase body executes once at trace time
+  — the span measures tracing cost and is tagged ``traced=True``;
+* eagerly (``MetaLearner.phase_profile()`` runs one step un-jitted),
+  the span measures real dispatch+compute wall time per phase — these
+  are the per-phase numbers ``repro.obs.report`` prints.
+
+Spans nest: ``depth`` and ``parent`` reconstruct the tree, and
+:func:`chrome_trace` emits ``traceEvents`` (``ph="X"``, µs timestamps)
+loadable in chrome://tracing or Perfetto.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import dataclasses
+import json
+import os
+import time
+from typing import Any, Dict, Iterator, List, Optional, Sequence
+
+#: Engine phase names, in execution order. Used by report.py to order
+#: the span table; emitting other names is fine.
+PHASES = (
+    "base_unroll",      # K-step inner unroll (core/engine._unroll_base)
+    "meta_pass",        # SAMA perturbation direction (core/sama.py)
+    "cd_passes",        # central-difference hypergradient passes
+    "finalize",         # method.finalize / hypergrad assembly
+    "meta_update",      # guarded_meta_update (gate + optimizer apply)
+    "allreduce_flat",   # flat-bucket all-reduce (launch/distributed.py)
+)
+
+
+@dataclasses.dataclass
+class Span:
+    name: str
+    start_s: float          # perf_counter seconds (monotonic, not unix)
+    dur_s: float
+    depth: int
+    parent: Optional[str]
+    traced: bool            # True if recorded while jax was tracing (compile-time span)
+    step: Optional[int] = None
+
+    @property
+    def dur_us(self) -> float:
+        return self.dur_s * 1e6
+
+    def as_dict(self) -> Dict[str, Any]:
+        return {"name": self.name, "start_s": self.start_s, "dur_s": self.dur_s,
+                "dur_us": self.dur_us, "depth": self.depth, "parent": self.parent,
+                "traced": self.traced, "step": self.step}
+
+
+def _in_jax_trace() -> bool:
+    try:
+        import jax
+        return not jax.core.trace_state_clean()
+    except Exception:  # pragma: no cover - jax absent or API moved
+        return False
+
+
+class Tracer:
+    """Collects nested spans; optionally mirrors each completed span as
+    a ``span`` event into an obs pipeline."""
+
+    def __init__(self, obs=None, use_profiler: bool = True):
+        self.spans: List[Span] = []
+        self._stack: List[str] = []
+        self._obs = obs
+        self._use_profiler = use_profiler
+        self.step: Optional[int] = None  # callers set this per step for labeling
+
+    @contextlib.contextmanager
+    def span(self, name: str) -> Iterator[None]:
+        annotation = None
+        if self._use_profiler:
+            try:
+                import jax
+                annotation = jax.profiler.TraceAnnotation(name)
+            except Exception:  # pragma: no cover - profiler unavailable
+                annotation = None
+        parent = self._stack[-1] if self._stack else None
+        depth = len(self._stack)
+        self._stack.append(name)
+        traced = _in_jax_trace()
+        t0 = time.perf_counter()
+        try:
+            if annotation is not None:
+                with annotation:
+                    yield
+            else:
+                yield
+        finally:
+            dur = time.perf_counter() - t0
+            self._stack.pop()
+            sp = Span(name=name, start_s=t0, dur_s=dur, depth=depth,
+                      parent=parent, traced=traced, step=self.step)
+            self.spans.append(sp)
+            if self._obs is not None and self._obs.enabled:
+                self._obs.emit("span", name, data={
+                    "dur_us": sp.dur_us, "depth": depth, "parent": parent,
+                    "traced": traced}, step=self.step)
+
+    def runtime_spans(self) -> List[Span]:
+        """Spans measured during real execution (not jit tracing)."""
+
+        return [s for s in self.spans if not s.traced]
+
+    def clear(self) -> None:
+        self.spans.clear()
+
+
+_ACTIVE: "contextvars.ContextVar[Optional[Tracer]]" = contextvars.ContextVar(
+    "repro_obs_tracer", default=None)
+
+
+def active_tracer() -> Optional[Tracer]:
+    return _ACTIVE.get()
+
+
+@contextlib.contextmanager
+def activate(tracer: Tracer) -> Iterator[Tracer]:
+    """Make ``tracer`` the target of :func:`phase` spans in this context."""
+
+    token = _ACTIVE.set(tracer)
+    try:
+        yield tracer
+    finally:
+        _ACTIVE.reset(token)
+
+
+@contextlib.contextmanager
+def phase(name: str) -> Iterator[None]:
+    """Annotate an engine phase.
+
+    Always applies ``jax.named_scope(name)`` (metadata-only, identical
+    HLO with obs on or off). Additionally records a host span iff a
+    Tracer is activated in the current context.
+    """
+
+    try:
+        import jax
+        scope = jax.named_scope(name)
+    except Exception:  # pragma: no cover - jax absent
+        scope = contextlib.nullcontext()
+    tracer = _ACTIVE.get()
+    with scope:
+        if tracer is None:
+            yield
+        else:
+            with tracer.span(name):
+                yield
+
+
+# ---------------------------------------------------------------------------
+# Chrome trace export
+# ---------------------------------------------------------------------------
+
+
+def chrome_trace(spans: Sequence[Span]) -> Dict[str, Any]:
+    """Render spans as a Chrome-trace/Perfetto ``traceEvents`` document.
+
+    Complete events (``ph="X"``) with µs timestamps relative to the
+    earliest span; trace-time spans land on a separate "tid" row so
+    compile-time work is visually distinct from runtime phases.
+    """
+
+    events: List[Dict[str, Any]] = []
+    t0 = min((s.start_s for s in spans), default=0.0)
+    for s in spans:
+        events.append({
+            "name": s.name,
+            "ph": "X",
+            "ts": (s.start_s - t0) * 1e6,
+            "dur": s.dur_us,
+            "pid": 0,
+            "tid": 1 if s.traced else 0,
+            "args": {k: v for k, v in (("step", s.step), ("parent", s.parent),
+                                       ("traced", s.traced)) if v is not None},
+        })
+    return {
+        "traceEvents": events,
+        "displayTimeUnit": "ms",
+        "metadata": {"producer": "repro.obs.trace", "schema": 1},
+    }
+
+
+def write_chrome_trace(path: str, spans: Sequence[Span]) -> str:
+    parent = os.path.dirname(os.path.abspath(path))
+    os.makedirs(parent, exist_ok=True)
+    with open(path, "w", encoding="utf-8") as f:
+        json.dump(chrome_trace(spans), f)
+    return path
+
+
+def span_tree_summary(spans: Sequence[Span]) -> List[Dict[str, Any]]:
+    """Aggregate spans by name → {name, n, total_us, mean_us, max_us,
+    depth, parent}, ordered by PHASES then first appearance. Used by the
+    report CLI's per-phase table."""
+
+    order: List[str] = []
+    agg: Dict[str, Dict[str, Any]] = {}
+    for s in spans:
+        if s.name not in agg:
+            order.append(s.name)
+            agg[s.name] = {"name": s.name, "n": 0, "total_us": 0.0,
+                           "max_us": 0.0, "depth": s.depth, "parent": s.parent}
+        a = agg[s.name]
+        a["n"] += 1
+        a["total_us"] += s.dur_us
+        a["max_us"] = max(a["max_us"], s.dur_us)
+    for a in agg.values():
+        a["mean_us"] = a["total_us"] / a["n"]
+
+    def _rank(name: str) -> tuple:
+        try:
+            return (0, PHASES.index(name))
+        except ValueError:
+            return (1, order.index(name))
+
+    return [agg[name] for name in sorted(agg, key=_rank)]

@@ -70,9 +70,22 @@ class LatencyStats:
         return dataclasses.asdict(self)
 
     @staticmethod
+    def empty() -> "LatencyStats":
+        """The zero-request value (n=0, all percentiles 0.0).
+
+        A serve run where every request is shed before decode has no
+        latency samples but still needs a final report; callers check
+        ``n == 0`` before treating the percentiles as measurements (and
+        must NOT embed an empty section into a PerfRecord —
+        ``validate_record`` requires positive percentiles there)."""
+
+        return LatencyStats(p50_us=0.0, p90_us=0.0, p99_us=0.0,
+                            mean_us=0.0, max_us=0.0, n=0)
+
+    @staticmethod
     def from_samples(samples_s: Sequence[float]) -> "LatencyStats":
         if len(samples_s) == 0:
-            raise ValueError("LatencyStats needs at least one sample")
+            return LatencyStats.empty()
         us = np.asarray(samples_s, dtype=np.float64) * 1e6
         p50, p90, p99 = np.percentile(us, [50, 90, 99])
         return LatencyStats(

@@ -85,25 +85,53 @@ class ServeStats:
     errors: int
     steps: int
     qps: float
-    latency: Optional[LatencyStats]
-    queue_wait: Optional[LatencyStats]
+    latency: LatencyStats       # n == 0 when nothing completed
+    queue_wait: LatencyStats
     memory: Dict[str, Any]
 
 
 class ServeExecutor:
     """Owns the queue, the batcher, and every request's terminal status."""
 
+    #: terminal status -> serve-event name (the health monitors' SLO
+    #: vocabulary: "done"/"deadline_miss"/"shed" count toward the miss
+    #: rate; "rejected"/"error" are bugs or impossibilities, not load)
+    TERMINAL_EVENT = {
+        STATUS_OK: "done",
+        STATUS_FALLBACK: "done",
+        STATUS_SHED_DEADLINE: "deadline_miss",
+        STATUS_SHED_OVERFLOW: "shed",
+        STATUS_REJECTED: "rejected",
+        STATUS_ERROR: "error",
+    }
+
     def __init__(self, model, params, cfg: Optional[ServeConfig] = None, *,
-                 clock: Callable[[], float] = time.monotonic):
+                 clock: Callable[[], float] = time.monotonic, obs=None):
         cfg = cfg or ServeConfig()
         self.cfg = cfg
+        if obs is None:
+            from repro.obs import NULL_OBS
+            obs = NULL_OBS
+        self._obs = obs
         self.batcher = ContinuousBatcher(model, params, cfg)  # rejects encoders
         self.queue = RequestQueue(cfg.queue_depth,
                                   default_timeout_s=cfg.default_timeout_s,
-                                  clock=clock)
+                                  clock=clock, obs=obs)
         self._clock = clock
         self.results: Dict[int, RequestResult] = {}
         self._stalled: Optional[Request] = None
+
+    def _observe_terminal(self, result: RequestResult) -> None:
+        if not self._obs.enabled:
+            return
+        name = self.TERMINAL_EVENT.get(result.status, result.status)
+        data: Dict[str, Any] = {"request_id": result.id,
+                                "status": result.status}
+        if result.latency_s is not None:
+            data["latency_us"] = result.latency_s * 1e6
+            self._obs.histogram("serve_request_us").observe(result.latency_s * 1e6)
+        self._obs.counter("serve_requests").inc(labels={"status": result.status})
+        self._obs.emit("serve", name, data=data)
 
     # -- submission ----------------------------------------------------------
 
@@ -141,6 +169,7 @@ class ServeExecutor:
             finish_t=now if status in OK_STATUSES + (STATUS_ERROR,) else None,
             detail=detail,
         )
+        self._observe_terminal(self.results[req.id])
 
     def _resolve_shed(self) -> None:
         for ev in self.queue.drain_shed():
@@ -148,6 +177,7 @@ class ServeExecutor:
                 id=ev.request.id, status=ev.reason, tokens=[],
                 submit_t=ev.request.submit_t,
             )
+            self._observe_terminal(self.results[ev.request.id])
 
     # -- the loop ------------------------------------------------------------
 
@@ -166,6 +196,7 @@ class ServeExecutor:
             tokens=list(lane.tokens), submit_t=lane.request.submit_t,
             admitted_t=lane.admitted_t,
         )
+        self._observe_terminal(self.results[lane.request.id])
 
     def _fallback(self, lane: Lane) -> None:
         """Nonfinite logits in the batched path: retire the lane and replay
@@ -218,7 +249,9 @@ class ServeExecutor:
         threads — async overlap comes from JAX's dispatch model."""
 
         pending = None
+        observe = self._obs.enabled  # hoisted: zero per-tick work when off
         while True:
+            tick_t0 = time.perf_counter() if observe else 0.0
             now = self._clock()
             self._resolve_shed()
             for lane in self.batcher.live_lanes():
@@ -232,12 +265,31 @@ class ServeExecutor:
                     elif self.batcher.lane_done(lane):
                         self._finalize(lane, STATUS_OK)
                 pending = None
-            if self.batcher.live_lanes():
+            live = self.batcher.live_lanes()
+            if live:
                 pending = self.batcher.dispatch()
-            elif len(self.queue) == 0 and self._stalled is None:
+            if observe:
+                self._observe_tick(tick_t0, len(live))
+            if not live and len(self.queue) == 0 and self._stalled is None:
                 break
         self._resolve_shed()
         return self.stats()
+
+    def _observe_tick(self, tick_t0: float, active_lanes: int) -> None:
+        """Per-tick telemetry: tick latency histogram, lane-occupancy and
+        queue-depth gauges, and the ``serve/tick`` event the queue-depth
+        health monitor consumes. Called only when obs is enabled."""
+
+        dur_us = (time.perf_counter() - tick_t0) * 1e6
+        depth = len(self.queue)
+        lanes = self.cfg.slots
+        self._obs.histogram("serve_tick_us").observe(dur_us)
+        self._obs.gauge("serve_active_lanes").set(active_lanes)
+        self._obs.gauge("serve_queue_depth").set(depth)
+        self._obs.emit("serve", "tick", data={
+            "dur_us": dur_us, "active_lanes": active_lanes, "lanes": lanes,
+            "queue_depth": depth, "capacity": self.queue.max_depth,
+        })
 
     # -- telemetry -----------------------------------------------------------
 
@@ -259,7 +311,10 @@ class ServeExecutor:
             errors=sum(r.status == STATUS_ERROR for r in res),
             steps=self.batcher.steps_dispatched,
             qps=qps,
-            latency=LatencyStats.from_samples(lat) if lat else None,
-            queue_wait=LatencyStats.from_samples(qwait) if qwait else None,
+            # always a LatencyStats: zero completed requests (everything
+            # shed) reports LatencyStats.empty() (n=0) instead of crashing
+            # or going None — consumers branch on `.n`
+            latency=LatencyStats.from_samples(lat),
+            queue_wait=LatencyStats.from_samples(qwait),
             memory=self.batcher.memory_stats(),
         )

@@ -77,13 +77,18 @@ class RequestQueue:
     def __init__(self, max_depth: int = 64, *,
                  default_timeout_s: Optional[float] = None,
                  validator: Optional[Callable[[Any], None]] = None,
-                 clock: Callable[[], float] = time.monotonic):
+                 clock: Callable[[], float] = time.monotonic,
+                 obs=None):
         if max_depth < 1:
             raise ValueError("max_depth must be >= 1")
         self.max_depth = max_depth
         self.default_timeout_s = default_timeout_s
         self._validator = validator
         self._clock = clock
+        if obs is None:
+            from repro.obs import NULL_OBS
+            obs = NULL_OBS
+        self._obs = obs
         self._ids = itertools.count()
         self._q: Deque[Request] = deque()
         self._shed: List[ShedEvent] = []
@@ -121,6 +126,7 @@ class RequestQueue:
                 self._n_shed_overflow += 1
                 ev = ShedEvent(req, SHED_OVERFLOW, now)
                 self._shed.append(ev)
+                self._observe_shed(ev)
                 err = QueueFull(
                     f"queue depth {len(self._q)} at max_depth={self.max_depth}")
                 err.event = ev
@@ -148,7 +154,9 @@ class RequestQueue:
                 req = self._q.popleft()
                 if req.expired(now):
                     self._n_shed_deadline += 1
-                    self._shed.append(ShedEvent(req, SHED_DEADLINE, now))
+                    ev = ShedEvent(req, SHED_DEADLINE, now)
+                    self._shed.append(ev)
+                    self._observe_shed(ev)
                     continue
                 out.append(req)
         return out
@@ -162,6 +170,17 @@ class RequestQueue:
                 return bool(self._q)
             self._nonempty.wait(timeout=timeout_s)
             return bool(self._q)
+
+    def _observe_shed(self, ev: ShedEvent) -> None:
+        """Mirror a shed into the obs pipeline: a counter keyed by reason
+        plus the queue-level shed fact (the executor emits the request's
+        TERMINAL serve event — this is the queue's own accounting)."""
+
+        if not self._obs.enabled:
+            return
+        self._obs.counter("queue_sheds").inc(labels={"reason": ev.reason})
+        self._obs.emit("serve", "queue_shed",
+                       data={"reason": ev.reason, "request_id": ev.request.id})
 
     def drain_shed(self) -> List[ShedEvent]:
         """Return-and-clear shed events (the executor resolves each into a

@@ -181,7 +181,6 @@ class ScoreAPI:
         return ScoreAPIStats(
             answered=self.answered,
             batches=self.batches,
-            latency=(LatencyStats.from_samples(self._latency_s)
-                     if self._latency_s else None),
+            latency=LatencyStats.from_samples(self._latency_s),  # n=0 when none
             queue=self.queue.stats(),
         )

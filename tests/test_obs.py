@@ -1,0 +1,609 @@
+"""repro.obs tests (ISSUE 7 acceptance pins).
+
+The two load-bearing guarantees:
+
+1. **Zero overhead when disabled** — a run without observability emits
+   zero events and performs zero per-event work (NULL_OBS short-circuits
+   before building Event objects).
+2. **Byte-identical HLO** — the engine's phase annotations are
+   unconditional metadata-only ``jax.named_scope``, so the lowered step
+   is bitwise identical whether or not a tracer/obs pipeline is active
+   during tracing.
+
+Plus: event schema + sinks (ring eviction order, JSONL round-trip
+through the report CLI), metric instruments, span tracing, every health
+monitor on a synthetic stream, kernel-dispatch counter mirroring, and
+the serve-plane queue/executor instrumentation hooks.
+"""
+
+import io
+import json
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import obs as obs_mod
+from repro import optim
+from repro.core import EngineConfig, init_state, make_meta_step, problems
+from repro.core.engine import run_loop
+from repro.obs import events as events_mod
+from repro.obs import health as health_mod
+from repro.obs import metrics as metrics_mod
+from repro.obs import report as report_mod
+from repro.obs import trace as trace_mod
+
+
+# ---------------------------------------------------------------------------
+# fixtures: the tiny classifier bilevel problem every core test uses
+# ---------------------------------------------------------------------------
+
+
+def apply_fn(theta, x):
+    return jnp.tanh(x @ theta["w1"]) @ theta["w2"]
+
+
+def make_problem(seed=0, d=6, h=8, C=3):
+    per_ex = problems.softmax_per_example(apply_fn)
+    spec = problems.make_data_optimization_spec(per_ex, reweight=True)
+    theta = {
+        "w1": jax.random.normal(jax.random.PRNGKey(seed), (d, h)) * 0.3,
+        "w2": jax.random.normal(jax.random.PRNGKey(seed + 1), (h, C)) * 0.3,
+    }
+    lam = problems.init_data_optimization_lam(jax.random.PRNGKey(seed + 2),
+                                              reweight=True)
+    return spec, theta, lam
+
+
+def make_batches(seed, K, B, MB, d=6, C=3):
+    bb = {"x": jax.random.normal(jax.random.PRNGKey(seed + 3), (K, B, d)),
+          "y": jax.random.randint(jax.random.PRNGKey(seed + 4), (K, B), 0, C)}
+    mb = {"x": jax.random.normal(jax.random.PRNGKey(seed + 5), (MB, d)),
+          "y": jax.random.randint(jax.random.PRNGKey(seed + 6), (MB,), 0, C)}
+    return bb, mb
+
+
+def ring_obs(capacity=256, monitor=True):
+    sink = events_mod.RingSink(capacity)
+    return obs_mod.Obs(sink=sink, monitor=monitor), sink
+
+
+def ev(kind, name, data=None, step=None):
+    return events_mod.make_event(kind, name, data=data, step=step)
+
+
+# ---------------------------------------------------------------------------
+# events + sinks
+# ---------------------------------------------------------------------------
+
+
+def test_make_event_rejects_unknown_kind():
+    with pytest.raises(ValueError, match="unknown event kind"):
+        events_mod.make_event("nonsense", "x")
+
+
+def test_validate_event_catalogs_errors():
+    good = ev("log", "hello", data={"text": "hi"}).as_dict()
+    assert events_mod.validate_event(good) == []
+    bad = {"v": 99, "kind": "nope", "name": "", "t": "later",
+           "step": 1.5, "data": None}
+    errors = events_mod.validate_event(bad)
+    assert len(errors) == 6
+    assert events_mod.validate_event("not a dict")
+
+
+def test_ring_sink_eviction_order():
+    ring = events_mod.RingSink(capacity=3)
+    for i in range(5):
+        ring.write(ev("log", f"e{i}"))
+    names = [e.name for e in ring.events()]
+    assert names == ["e2", "e3", "e4"]  # FIFO eviction, oldest-first read
+    assert ring.dropped == 2
+    with pytest.raises(ValueError, match="capacity"):
+        events_mod.RingSink(0)
+
+
+def test_jsonl_round_trip(tmp_path):
+    path = str(tmp_path / "run.jsonl")
+    sink = events_mod.JsonlSink(path)
+    wrote = [ev("run", "run_start", data={"cli": "test"}),
+             ev("metrics", "step", data={"loss": 1.5}, step=0),
+             ev("alert", "nonfinite", data={"severity": "warn"})]
+    for e in wrote:
+        sink.write(e)
+    sink.close()
+    assert events_mod.validate_jsonl(path) == []
+    back = list(events_mod.read_jsonl(path))
+    assert [(e.kind, e.name, e.step, e.data) for e in back] == \
+        [(e.kind, e.name, e.step, e.data) for e in wrote]
+
+
+def test_read_jsonl_skips_torn_line(tmp_path):
+    path = str(tmp_path / "torn.jsonl")
+    sink = events_mod.JsonlSink(path)
+    sink.write(ev("log", "whole"))
+    sink.close()
+    with open(path, "a") as f:
+        f.write('{"v": 1, "kind": "log", "na')  # crashed writer
+    assert [e.name for e in events_mod.read_jsonl(path)] == ["whole"]
+    with pytest.raises(ValueError, match="not JSON"):
+        list(events_mod.read_jsonl(path, strict=True))
+    assert events_mod.validate_jsonl(path)  # non-strict validation reports it
+
+
+def test_console_sink_renders_legacy_lines():
+    buf = io.StringIO()
+    console = events_mod.ConsoleSink(stream=buf)
+    console.write(ev("log", "header", data={"text": "arch=x params=3"}))
+    console.write(ev("metrics", "step", data={"loss": 1.25}, step=4))
+    console.write(ev("metrics", "registry_snapshot", data={"big": "dump"}))
+    console.write(ev("span", "base_unroll", data={"dur_us": 5.0}))
+    console.write(ev("alert", "nonfinite",
+                     data={"severity": "warn", "message": "skipped"}))
+    lines = buf.getvalue().splitlines()
+    assert lines[0] == "arch=x params=3"
+    assert json.loads(lines[1]) == {"loss": 1.25, "step": 4}  # the train.py shape
+    assert lines[2] == "[obs:warn] nonfinite: skipped"
+    assert len(lines) == 3  # snapshots and span chatter stay off the console
+
+
+# ---------------------------------------------------------------------------
+# metric instruments
+# ---------------------------------------------------------------------------
+
+
+def test_counter_monotone_and_labeled():
+    c = metrics_mod.Counter("dispatch_total")
+    c.inc()
+    c.inc(2, labels={"backend": "ref"})
+    c.inc(labels={"backend": "ref"})
+    assert c.value() == 1.0
+    assert c.value(labels={"backend": "ref"}) == 3.0
+    assert c.total() == 4.0
+    with pytest.raises(ValueError, match="cannot decrease"):
+        c.inc(-1)
+
+
+def test_gauge_tracks_excursions():
+    g = metrics_mod.Gauge("queue_depth")
+    for v in (3, 9, 1):
+        g.set(v)
+    assert g.value() == 1.0
+    snap = g.snapshot()["values"][0]
+    assert (snap["min"], snap["max"]) == (1.0, 9.0)
+
+
+def test_histogram_quantiles_and_snapshot():
+    h = metrics_mod.Histogram("lat_us", bounds=[10.0, 100.0, 1000.0])
+    for v in [5.0] * 50 + [50.0] * 40 + [5000.0] * 10:
+        h.observe(v)
+    assert h.n == 100
+    assert h.quantile(0.5) <= 10.0          # median in the first bucket
+    assert 10.0 < h.quantile(0.9) <= 100.0
+    assert h.quantile(1.0) == 5000.0        # overflow bucket reports the max
+    assert h.quantile(0.0) == 0.0 or h.quantile(0.0) <= 10.0
+    snap = h.snapshot()
+    assert snap["n"] == 100 and snap["max"] == 5000.0
+    assert metrics_mod.Histogram("empty").quantile(0.99) == 0.0
+    with pytest.raises(ValueError, match="sorted"):
+        metrics_mod.Histogram("bad", bounds=[2.0, 1.0])
+
+
+def test_registry_get_or_create_and_kind_conflict():
+    reg = metrics_mod.MetricsRegistry()
+    assert reg.counter("a") is reg.counter("a")
+    with pytest.raises(TypeError, match="already registered"):
+        reg.gauge("a")
+    reg.gauge("b").set(1.0)
+    assert set(reg.snapshot()) == {"a", "b"}
+
+
+def test_packed_read_unwraps_device_scalars():
+    tree = {"loss": jnp.float32(1.5), "n": jnp.int32(3), "plain": 2.0}
+    out = metrics_mod.packed_read(tree)
+    assert out == {"loss": 1.5, "n": 3, "plain": 2.0}
+    assert isinstance(out["loss"], float) and isinstance(out["n"], int)
+
+
+# ---------------------------------------------------------------------------
+# span tracing
+# ---------------------------------------------------------------------------
+
+
+def test_phase_without_tracer_records_nothing():
+    with trace_mod.phase("base_unroll"):
+        pass
+    assert trace_mod.active_tracer() is None
+
+
+def test_tracer_nested_spans_and_chrome_trace():
+    tracer = trace_mod.Tracer()
+    with trace_mod.activate(tracer):
+        with trace_mod.phase("meta_update"):
+            with trace_mod.phase("cd_passes"):
+                pass
+    inner, outer = tracer.spans  # completion order: inner first
+    assert (inner.name, inner.depth, inner.parent) == ("cd_passes", 1, "meta_update")
+    assert (outer.name, outer.depth, outer.parent) == ("meta_update", 0, None)
+    assert not inner.traced and outer.dur_s >= inner.dur_s
+    doc = trace_mod.chrome_trace(tracer.spans)
+    assert {e["name"] for e in doc["traceEvents"]} == {"cd_passes", "meta_update"}
+    assert all(e["ph"] == "X" and e["tid"] == 0 for e in doc["traceEvents"])
+    rows = trace_mod.span_tree_summary(tracer.spans)
+    assert [r["name"] for r in rows] == ["cd_passes", "meta_update"]  # PHASES order
+
+
+def test_tracer_marks_trace_time_spans():
+    tracer = trace_mod.Tracer()
+
+    @jax.jit
+    def f(x):
+        with trace_mod.phase("base_unroll"):
+            return x * 2
+
+    with trace_mod.activate(tracer):
+        f(jnp.ones(3)).block_until_ready()
+    assert [s.traced for s in tracer.spans] == [True]
+    assert tracer.runtime_spans() == []
+    doc = trace_mod.chrome_trace(tracer.spans)
+    assert doc["traceEvents"][0]["tid"] == 1  # trace-time spans on their own row
+
+
+def test_tracer_mirrors_spans_into_obs():
+    obs, sink = ring_obs()
+    tracer = trace_mod.Tracer(obs=obs)
+    with trace_mod.activate(tracer):
+        with trace_mod.phase("finalize"):
+            pass
+    spans = [e for e in sink.events() if e.kind == "span"]
+    assert [e.name for e in spans] == ["finalize"]
+    assert spans[0].data["dur_us"] > 0
+
+
+# ---------------------------------------------------------------------------
+# the acceptance pins: zero events when disabled, byte-identical HLO
+# ---------------------------------------------------------------------------
+
+
+def test_null_obs_is_inert():
+    before = obs_mod.NULL_OBS.sink
+    assert obs_mod.NULL_OBS.emit("log", "x", data={"a": 1}) is None
+    obs_mod.NULL_OBS.log("x", "text")
+    obs_mod.NULL_OBS.observe_step(0, {"loss": float("nan")})
+    obs_mod.NULL_OBS.observe_census(5, 3)
+    obs_mod.NULL_OBS.flush()
+    assert obs_mod.NULL_OBS.sink is before
+    assert not obs_mod.NULL_OBS.enabled
+
+
+def test_disabled_run_emits_zero_events():
+    spec, theta, lam = make_problem()
+    base_opt, meta_opt = optim.sgd(0.1), optim.sgd(0.1)
+    cfg = EngineConfig(method="sama", unroll_steps=2)
+    step = jax.jit(make_meta_step(spec, base_opt, meta_opt, cfg))
+    state = init_state(theta, lam, base_opt, meta_opt, scale=cfg.scale)
+    bb, mb = make_batches(0, K=2, B=8, MB=4)
+    batches = iter([(bb, mb)] * 3)
+    obs, sink = ring_obs()
+    obs.enabled = False  # the off switch, not a different wiring
+    _, history = run_loop(step, state, batches, 3, log_every=1, obs=obs)
+    assert len(history) == 3
+    assert sink.events() == []
+
+
+def test_hlo_identical_with_and_without_tracer():
+    """The tentpole guarantee: activating the span tracer (what an enabled
+    obs does) cannot change what the step compiles to."""
+
+    spec, theta, lam = make_problem()
+    base_opt, meta_opt = optim.sgd(0.1), optim.sgd(0.1)
+    cfg = EngineConfig(method="sama", unroll_steps=2)
+    state = init_state(theta, lam, base_opt, meta_opt, scale=cfg.scale)
+    bb, mb = make_batches(0, K=2, B=8, MB=4)
+
+    def lowered():
+        step = make_meta_step(spec, base_opt, meta_opt, cfg)
+        return jax.jit(step).lower(state, bb, mb)
+
+    plain = lowered()
+    with trace_mod.activate(trace_mod.Tracer(obs=ring_obs()[0])):
+        traced = lowered()
+    assert plain.as_text() == traced.as_text()
+    # named_scope metadata is ALWAYS present (it lives in the location info,
+    # which the default as_text strips — invisible to the byte-compare above)
+    debug_asm = plain.compiler_ir().operation.get_asm(enable_debug_info=True)
+    assert "base_unroll" in debug_asm
+
+
+def test_run_loop_emits_metrics_events():
+    spec, theta, lam = make_problem()
+    base_opt, meta_opt = optim.sgd(0.1), optim.sgd(0.1)
+    cfg = EngineConfig(method="sama", unroll_steps=2)
+    step = jax.jit(make_meta_step(spec, base_opt, meta_opt, cfg))
+    state = init_state(theta, lam, base_opt, meta_opt, scale=cfg.scale)
+    bb, mb = make_batches(0, K=2, B=8, MB=4)
+    obs, sink = ring_obs()
+    _, history = run_loop(step, state, iter([(bb, mb)] * 4), 4,
+                          log_every=2, obs=obs)
+    steps = [e for e in sink.events() if e.kind == "metrics"]
+    assert [e.step for e in steps] == [0, 2, 3]  # log cadence + final step
+    assert steps[0].data.keys() == {k for k in history[0] if k != "step"}
+    assert all(math.isfinite(v) for v in steps[0].data.values())
+
+
+# ---------------------------------------------------------------------------
+# the Obs facade: derived scale/gate events, census, alerts
+# ---------------------------------------------------------------------------
+
+
+def test_observe_step_derives_scale_and_gate_events():
+    obs, sink = ring_obs()
+    obs.observe_step(0, {"loss": 1.0, "loss_scale": 1024.0, "meta_skipped": 0.0})
+    obs.observe_step(1, {"loss": 1.1, "loss_scale": 512.0, "meta_skipped": 1.0})
+    obs.observe_step(2, {"loss": 1.2, "loss_scale": 1024.0, "meta_skipped": 0.0})
+    kinds = [(e.kind, e.name, e.step) for e in sink.events()
+             if e.kind in ("scale", "gate")]
+    assert ("scale", "backoff", 1) in kinds
+    assert ("scale", "growth", 2) in kinds
+    assert ("gate", "meta_update", 1) in kinds
+    assert obs.counter("loss_scale_transitions").value(
+        labels={"kind": "backoff"}) == 1.0
+    assert obs.counter("meta_updates_skipped").value() == 1.0
+
+
+def test_observe_census_and_monitor_trip():
+    obs, sink = ring_obs()
+    obs.observe_census(3, 3, detail={"schedule": "single_sync"})
+    assert obs.health.status == "ok"
+    obs.observe_census(5, 3)
+    assert obs.health.status == "degraded"
+    alerts = [e for e in sink.events() if e.kind == "alert"]
+    assert alerts and alerts[0].name == "census"
+
+
+def test_alerts_reach_sink_and_callbacks():
+    fired = []
+    obs, sink = ring_obs()
+    obs.health.add_callback(fired.append)
+    for s in range(3):
+        obs.emit("gate", "meta_update", data={"finite": False}, step=s)
+    severities = [e.data["severity"] for e in sink.events() if e.kind == "alert"]
+    assert severities == ["warn", "degraded"]
+    assert [a.severity for a in fired] == ["warn", "degraded"]
+    assert obs.health.status == "degraded"
+
+
+def test_make_obs_sink_selection(tmp_path):
+    path = str(tmp_path / "log.jsonl")
+    multi = obs_mod.make_obs(log_path=path, console=True, ring=8)
+    assert isinstance(multi.sink, events_mod.TeeSink)
+    assert len(multi.sink.sinks) == 3
+    solo = obs_mod.make_obs()
+    assert isinstance(solo.sink, events_mod.RingSink)
+    multi.close()
+
+
+def test_default_obs_process_global():
+    assert obs_mod.get_default() is obs_mod.NULL_OBS
+    obs, _ = ring_obs()
+    try:
+        obs_mod.set_default(obs)
+        assert obs_mod.get_default() is obs
+    finally:
+        obs_mod.set_default(None)
+    assert obs_mod.get_default() is obs_mod.NULL_OBS
+
+
+# ---------------------------------------------------------------------------
+# health monitors on synthetic streams
+# ---------------------------------------------------------------------------
+
+
+def test_nonfinite_monitor_consecutive_and_rate():
+    m = health_mod.NonfiniteMonitor(consecutive_limit=3, window=10,
+                                    rate_limit=0.25)
+    alerts = []
+    for s in range(3):
+        alerts += m.observe(ev("gate", "meta_update",
+                               data={"finite": False}, step=s))
+    assert [a.severity for a in alerts] == ["warn", "degraded"]
+    assert m.verdict()["status"] == "degraded"
+    # rate path: 4 bad of 10 in the window trips the 25% limit
+    m2 = health_mod.NonfiniteMonitor(consecutive_limit=99, window=10,
+                                     rate_limit=0.25)
+    out = []
+    for s in range(10):
+        bad = s % 3 == 0  # 4/10
+        out += m2.observe(ev("metrics", "step",
+                             data={"meta_skipped": 1.0 if bad else 0.0}, step=s))
+    assert any(a.severity == "degraded" for a in out)
+
+
+def test_nonfinite_monitor_ignores_gate_echo_of_metrics_step():
+    """Live streams emit metrics/step AND a gate event for the same skipped
+    step; the step must count once."""
+
+    m = health_mod.NonfiniteMonitor()
+    m.observe(ev("metrics", "step", data={"meta_skipped": 1.0}, step=0))
+    m.observe(ev("gate", "meta_update", data={"finite": False}, step=0))
+    m.observe(ev("metrics", "registry_snapshot", data={}))  # not a step
+    assert m.total_steps == 1 and m.total_bad == 1
+
+
+def test_loss_scale_thrash_monitor():
+    m = health_mod.LossScaleThrashMonitor(window_steps=200, warn_backoffs=3,
+                                          degraded_backoffs=6)
+    alerts = []
+    scale = 2.0 ** 15
+    for s in range(6):
+        alerts += m.observe(ev("scale", "backoff",
+                               data={"scale": scale / 2, "prev": scale},
+                               step=s * 10))
+        scale /= 2
+    assert [a.severity for a in alerts] == ["warn", "degraded"]
+    assert m.total_backoffs == 6
+    # backoffs spread far apart never accumulate in the window
+    m2 = health_mod.LossScaleThrashMonitor(window_steps=200)
+    for s in range(6):
+        assert m2.observe(ev("scale", "backoff", data={"scale": 1.0},
+                             step=s * 500)) == []
+    assert m2.verdict()["status"] == "ok"
+
+
+def test_serve_slo_monitor():
+    m = health_mod.ServeSLOMonitor(window=100, min_events=10)
+    alerts = []
+    for i in range(10):
+        name = "deadline_miss" if i < 4 else "done"
+        alerts += m.observe(ev("serve", name, data={}))
+    assert alerts and alerts[-1].severity == "degraded"  # 40% > 30%
+    assert m.observe(ev("serve", "rejected", data={})) == []  # not load
+    v = m.verdict()
+    assert v["deadline_miss"] == 4 and v["done"] == 6
+
+
+def test_queue_depth_monitor_needs_sustained_saturation():
+    m = health_mod.QueueDepthMonitor(sustain=5)
+    tick = lambda d: ev("serve", "tick", data={"queue_depth": d, "capacity": 100})
+    for _ in range(4):
+        assert m.observe(tick(96)) == []
+    assert m.observe(tick(50)) == []  # run broken before sustain
+    alerts = []
+    for _ in range(5):
+        alerts += m.observe(tick(96))
+    assert [a.severity for a in alerts] == ["degraded"]
+    assert m.max_frac == 0.96
+
+
+def test_replay_equals_live():
+    stream = [ev("gate", "meta_update", data={"finite": False}, step=s)
+              for s in range(3)]
+    stream.append(ev("census", "all_reduce",
+                     data={"observed": 4, "expected": 3, "ok": False}))
+    live = health_mod.HealthMonitor()
+    for e in stream:
+        live.observe(e)
+    offline = health_mod.replay(stream)
+    assert live.status == offline.status == "degraded"
+    assert [a.monitor for a in live.alerts] == [a.monitor for a in offline.alerts]
+
+
+# ---------------------------------------------------------------------------
+# report CLI
+# ---------------------------------------------------------------------------
+
+
+def _write_run_log(path):
+    sink = events_mod.JsonlSink(path)
+    sink.write(ev("run", "run_start", data={"cli": "test"}))
+    sink.write(ev("span", "base_unroll", data={"dur_us": 100.0, "traced": False}))
+    sink.write(ev("span", "meta_pass", data={"dur_us": 40.0, "traced": False}))
+    sink.write(ev("metrics", "step", data={"loss": 2.0}, step=0))
+    sink.write(ev("scale", "backoff", data={"scale": 512.0, "prev": 1024.0},
+                  step=1))
+    sink.write(ev("metrics", "step", data={"loss": 1.0}, step=9))
+    sink.write(ev("dispatch", "adam_adapt",
+                  data={"backend": "ref", "reason": "selected"}))
+    sink.write(ev("census", "all_reduce",
+                  data={"observed": 3, "expected": 3, "ok": True}))
+    sink.write(ev("serve", "done", data={}))
+    sink.write(ev("run", "run_end", data={}))
+    sink.close()
+
+
+def test_report_summarize_and_render(tmp_path):
+    path = str(tmp_path / "run.jsonl")
+    _write_run_log(path)
+    events = list(events_mod.read_jsonl(path))
+    s = report_mod.summarize(events)
+    assert s["events"] == 10
+    assert [p["name"] for p in s["phases"]] == ["base_unroll", "meta_pass"]
+    assert s["steps"]["first"]["loss"] == 2.0 and s["steps"]["last"]["step"] == 9
+    assert s["scale_history"][0]["event"] == "backoff"
+    assert s["dispatch"][0] == {"kernel": "adam_adapt", "backend": "ref",
+                                "reason": "selected", "n": 1}
+    assert s["census"]["ok"] is True
+    assert s["health"]["status"] == "ok"
+    text = report_mod.render(s)
+    for needle in ("base_unroll", "backoff", "adam_adapt", "health: OK"):
+        assert needle in text
+
+
+def test_report_main_validate_and_json(tmp_path, capsys):
+    path = str(tmp_path / "run.jsonl")
+    _write_run_log(path)
+    assert report_mod.main([path, "--validate"]) == 0
+    capsys.readouterr()
+    assert report_mod.main([path, "--json"]) == 0
+    out = json.loads(capsys.readouterr().out)
+    assert out["events"] == 10
+    # a schema-violating line fails --validate but not the lenient path
+    with open(path, "a") as f:
+        f.write(json.dumps({"v": 1, "kind": "bogus", "name": "x", "t": 0.0,
+                            "step": None, "data": {}}) + "\n")
+    assert report_mod.main([path, "--validate"]) == 1
+    assert report_mod.main([path]) == 0
+    missing = str(tmp_path / "empty.jsonl")
+    open(missing, "w").close()
+    assert report_mod.main([missing]) == 1
+
+
+# ---------------------------------------------------------------------------
+# kernel dispatch mirroring + serve queue hooks
+# ---------------------------------------------------------------------------
+
+
+def test_dispatch_decisions_mirrored_to_obs():
+    from repro.kernels import dispatch
+
+    obs, sink = ring_obs()
+    n = 64
+    args = tuple(jnp.ones((n,), jnp.float32) for _ in range(4))
+    kw = dict(t=1, b1=0.9, b2=0.999, eps=1e-8, lr=1e-3)
+    try:
+        obs_mod.set_default(obs)
+        dispatch.get_kernel("adam_adapt")(*args, **kw)
+        dispatch.get_kernel("adam_adapt", backend="ref")(*args, **kw)
+    finally:
+        obs_mod.set_default(None)
+        dispatch.clear_dispatch_log()
+    decisions = [e for e in sink.events() if e.kind == "dispatch"]
+    assert len(decisions) == 2
+    assert decisions[0].name == "adam_adapt"
+    assert decisions[0].data["backend"] == "ref"
+    total = obs.counter("dispatch_total")
+    assert total.value(labels={"kernel": "adam_adapt", "backend": "ref",
+                               "reason": "selected"}) == 2.0
+    # and with no default installed, dispatch observes nothing
+    dispatch.get_kernel("adam_adapt")(*args, **kw)
+    assert len([e for e in sink.events() if e.kind == "dispatch"]) == 2
+
+
+def test_request_queue_emits_shed_events():
+    from repro.serve.queue import RequestQueue
+
+    obs, sink = ring_obs()
+    t = [0.0]
+    q = RequestQueue(max_depth=1, clock=lambda: t[0], obs=obs)
+    q.submit({"p": 1}, timeout_s=1.0)
+    with pytest.raises(Exception):
+        q.submit({"p": 2})  # overflow shed
+    t[0] = 5.0
+    q.pop(4)  # p1's deadline passed -> deadline shed at pop
+    sheds = [e for e in sink.events() if e.kind == "serve"]
+    assert [e.name for e in sheds] == ["queue_shed", "queue_shed"]
+    reasons = {e.data["reason"] for e in sheds}
+    assert reasons == {"shed_overflow", "shed_deadline"}
+    assert obs.counter("queue_sheds").total() == 2.0
+
+
+def test_executor_terminal_vocabulary_matches_monitor():
+    """The executor's event names ARE the SLO monitor's vocabulary —
+    renaming either side silently blinds the health check."""
+
+    from repro.serve.executor import ServeExecutor
+
+    names = set(ServeExecutor.TERMINAL_EVENT.values())
+    assert set(health_mod.ServeSLOMonitor.TERMINAL) <= names

@@ -435,8 +435,11 @@ def test_latency_stats_percentiles():
     assert s.p50_us == pytest.approx(50500.0, rel=0.01)
     assert s.p99_us <= s.max_us == pytest.approx(100000.0, rel=1e-6)
     assert s.p50_us <= s.p90_us <= s.p99_us
-    with pytest.raises(ValueError):
-        perf.LatencyStats.from_samples([])
+    # zero samples (every request shed before decode) is a reportable
+    # value, not a crash: explicit empty stats with n == 0
+    empty = perf.LatencyStats.from_samples([])
+    assert empty == perf.LatencyStats.empty()
+    assert empty.n == 0 and empty.p99_us == 0.0 and empty.mean_us == 0.0
 
 
 def test_perf_record_latency_section():
