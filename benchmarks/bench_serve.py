@@ -120,14 +120,20 @@ def main(fast: bool = True):
         extra={"arch": ARCH, "requests": n_req, "gen": gen,
                "mode": "serial"},
     ))
-    emit_record(perf.PerfRecord(
+    # attribute the fused decode step at the worst-case bucket: the whole
+    # gather->decode->scatter program lowers under one "serve_step" scope
+    from repro.obs import profile as profile_mod
+    cb_rec = perf.PerfRecord(
         name="serve_continuous", us_per_step=t_cb.as_dict(),
         samples_per_s=qps_cb, latency=stats.latency.as_dict(),
         extra={"arch": ARCH, "requests": n_req, "gen": gen, "slots": SLOTS,
                "mode": "continuous", "decode_steps": stats.steps,
                "cache_peak_bytes": paged_peak, "dense_cache_bytes": dense,
                "buckets": stats.memory["buckets"]},
-    ))
+    )
+    cb_rec.attribution = profile_mod.attribute(
+        ex.batcher.lower_step().compile())
+    emit_record(cb_rec)
     emit("serve_serial", t_serial.median_us,
          f"qps={qps_serial:.3f};p50_us={lat_serial.p50_us:.0f};"
          f"p99_us={lat_serial.p99_us:.0f}")

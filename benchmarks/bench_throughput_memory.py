@@ -47,6 +47,7 @@ def main(fast: bool = True):
             f"table2_{method}", jax.jit(step), state, base_b, meta_b,
             samples_per_step=batch * unroll, warmup=1, repeats=3,
             extra={"method": method, "batch": batch, "unroll": unroll},
+            attribution=True,  # per-phase FLOP partition rides the record
         )
         emit_record(rec)
         peak = (rec.memory or {}).get("per_device", {}).get("peak_bytes")

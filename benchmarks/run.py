@@ -38,6 +38,7 @@ BENCHES = [
     "bench_scale",  # repro.scale: memory vs microbatch M + census under accumulation
     "bench_serve",  # repro.serve: continuous-batch QPS vs serial + paged-cache memory
     "bench_obs",  # repro.obs: instrumented-loop overhead <= 3% + census with obs on
+    "bench_attribution",  # repro.obs.profile: per-phase FLOP coverage + top sink
 ]
 
 #: benches whose rows are produced by the repro.dataopt subsystem

@@ -188,11 +188,18 @@ class MetaLearner:
     # -- telemetry ---------------------------------------------------------
 
     def profile(self, base_batches, meta_batch, *, warmup: int = 2,
-                repeats: int = 5, name: Optional[str] = None):
+                repeats: int = 5, name: Optional[str] = None,
+                attribution: bool = False, attribution_spans=None):
         """Measure this learner's step on example batches through
         ``repro.perf``: warmup/repeat/block run timing with the compile
         split, per-device memory breakdown, and the trip-scaled collective
         census of the compiled step. Returns a ``perf.PerfRecord``.
+
+        ``attribution=True`` additionally partitions the compiled step's
+        FLOPs/bytes/collectives by engine phase (``repro.obs.profile``)
+        into the record's ``attribution`` section; pass the spans from
+        ``phase_profile`` as ``attribution_spans`` to join measured wall
+        time and roofline utilization per phase.
 
         Always profiles the JIT-COMPILED step (memory/collective accounting
         needs the compiled executable) — for a ``jit=False`` learner these
@@ -214,9 +221,13 @@ class MetaLearner:
         if self.mesh is not None:
             with self.mesh:
                 return perf.profile_step(rec_name, fn, *args, warmup=warmup,
-                                         repeats=repeats, extra=extra)
+                                         repeats=repeats, extra=extra,
+                                         attribution=attribution,
+                                         attribution_spans=attribution_spans)
         return perf.profile_step(rec_name, fn, *args, warmup=warmup,
-                                 repeats=repeats, extra=extra)
+                                 repeats=repeats, extra=extra,
+                                 attribution=attribution,
+                                 attribution_spans=attribution_spans)
 
     def phase_profile(self, base_batches, meta_batch):
         """Per-phase host wall times: run ONE step eagerly (un-jitted)

@@ -279,9 +279,13 @@ def make_meta_step(
             theta=theta, base_opt_state=st_at_g, g_base=g_base,
             loss_scale=scale_state.scale if scale_state is not None else None,
         )
-        terms = methods_mod.validate_terms(
-            method, accum_mod.microbatch_local_terms(method, spec, ctx, micro,
-                                                     policy.accum_jnp))
+        # local_terms is the phase every method shares (attribution for the
+        # baselines); SAMA's own meta_pass/cd_passes scopes nest inside it
+        # and win the innermost-phase match in obs.profile
+        with obs_trace.phase("local_terms"):
+            terms = methods_mod.validate_terms(
+                method, accum_mod.microbatch_local_terms(method, spec, ctx, micro,
+                                                         policy.accum_jnp))
         # single-device / pjit path: identity reduce between stages 2 and 3
         with obs_trace.phase("finalize"):
             hyper, theta_post = method.finalize(terms, ctx)

@@ -14,6 +14,7 @@ Outputs one JSON per job under experiments/dryrun/.
 """
 
 import argparse
+import contextlib as _contextlib
 import json
 import time
 import traceback
@@ -65,12 +66,26 @@ def run_job(arch: str, shape_name: str, *, multi_pod: bool = False, save: bool =
         _emit(result, save, arch, shape_name, mesh_name)
         return result
 
+    # tracer.span (NOT trace.phase): spans must not add named_scope
+    # metadata to the dry-run HLO the roofline analysis reads
+    tracer = obs_mod.active_tracer()
+
+    @_contextlib.contextmanager
+    def _span(name):
+        if tracer is None:
+            yield
+        else:
+            with tracer.span(name):
+                yield
+
     t0 = time.time()
     try:
         with mesh:
-            lowered = jax.jit(job.step_fn).lower(*job.args)
+            with _span(f"lower:{job.name}"):
+                lowered = jax.jit(job.step_fn).lower(*job.args)
             t_lower = time.time() - t0
-            compiled = lowered.compile()
+            with _span(f"compile:{job.name}"):
+                compiled = lowered.compile()
             t_compile = time.time() - t0 - t_lower
             mem = compiled.memory_analysis()
             _log("dryrun_memory",
@@ -144,10 +159,14 @@ def main():
     ap.add_argument("--obs-log", default=None, metavar="PATH",
                     help="append structured events (JSONL) for "
                          "`python -m repro.obs.report`")
+    ap.add_argument("--chrome-trace", default=None, metavar="PATH",
+                    help="write a Perfetto timeline of per-job lower/compile "
+                         "spans")
     args = ap.parse_args()
 
-    obs_mod.set_default(obs_mod.make_obs(log_path=args.obs_log, console=True,
-                                         run_id="dryrun"))
+    obs = obs_mod.make_obs(log_path=args.obs_log, console=True,
+                           run_id="dryrun")
+    obs_mod.set_default(obs)
 
     assert len(jax.devices()) == 512, "dry-run needs the forced 512 host devices"
 
@@ -158,11 +177,20 @@ def main():
         assert args.arch and args.shape, "--arch and --shape (or --all)"
         archs, shapes = [args.arch], [args.shape]
 
+    tracer = obs_mod.Tracer(obs=obs) if args.chrome_trace else None
     failures = 0
-    for arch in archs:
-        for shape_name in shapes:
-            r = run_job(arch, shape_name, multi_pod=args.multi_pod, variant=args.variant)
-            failures += r["status"] == "error"
+    with (obs_mod.activate(tracer) if tracer is not None
+          else _contextlib.nullcontext()):
+        for arch in archs:
+            for shape_name in shapes:
+                r = run_job(arch, shape_name, multi_pod=args.multi_pod,
+                            variant=args.variant)
+                failures += r["status"] == "error"
+    if tracer is not None:
+        obs_mod.write_chrome_trace(args.chrome_trace, tracer.spans)
+        obs.log("chrome_trace",
+                f"chrome trace ({len(tracer.spans)} spans) written to "
+                f"{args.chrome_trace}", path=args.chrome_trace)
     if failures:
         raise SystemExit(f"{failures} dry-run jobs failed")
 

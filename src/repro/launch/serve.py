@@ -70,6 +70,9 @@ def main():
     ap.add_argument("--obs-log", default=None, metavar="PATH",
                     help="append structured events (JSONL) for "
                          "`python -m repro.obs.report`")
+    ap.add_argument("--chrome-trace", default=None, metavar="PATH",
+                    help="write a Perfetto/chrome://tracing span timeline "
+                         "(serve ticks, or per-request spans under --serial)")
     args = ap.parse_args()
 
     cfg = configs.get_smoke_config(args.arch) if args.smoke else configs.get_config(args.arch)
@@ -94,15 +97,26 @@ def main():
     pg = args.page_size
     max_len = args.max_len or pg * ((args.prompt_len + args.gen + pg - 1) // pg)
 
+    tracer = None
+    if args.chrome_trace:
+        from repro import obs as obs_mod
+        # executor.run() picks the tracer up via active_tracer() and spans
+        # each tick; the serial arm spans each request explicitly
+        tracer = obs_mod.Tracer(obs=obs)
+
     if args.serial:
+        import contextlib
         import time
         lat = []
         outs = []
         t0 = time.perf_counter()
         for p, g in zip(prompts, gens):
             s0 = time.perf_counter()
-            toks = greedy_generate(model, params, np.asarray(p)[None], g, max_len)
-            jax.block_until_ready(toks)
+            with (tracer.span("serial_request") if tracer is not None
+                  else contextlib.nullcontext()):
+                toks = greedy_generate(model, params, np.asarray(p)[None], g,
+                                       max_len)
+                jax.block_until_ready(toks)
             lat.append(time.perf_counter() - s0)
             outs.append([int(t) for t in toks[0]])
         elapsed = time.perf_counter() - t0
@@ -127,8 +141,14 @@ def main():
             slots=args.slots, page_size=pg, max_len=max_len,
             max_new_tokens=args.gen, default_timeout_s=args.timeout_s,
         )
-        ex, ids, stats = run_continuous(model, params, prompts, gens, scfg,
-                                        obs=obs)
+        if tracer is not None:
+            from repro import obs as obs_mod
+            with obs_mod.activate(tracer):
+                ex, ids, stats = run_continuous(model, params, prompts, gens,
+                                                scfg, obs=obs)
+        else:
+            ex, ids, stats = run_continuous(model, params, prompts, gens, scfg,
+                                            obs=obs)
         payload = {
             "mode": "continuous", "arch": cfg.name, "requests": args.requests,
             "statuses": {s: sum(ex.results[i].status == s for i in ids)
@@ -147,12 +167,18 @@ def main():
                    "slots": args.slots, "decode_steps": stats.steps,
                    "cache_peak_bytes": stats.memory["peak_bytes"]},
         )
+    if tracer is not None:
+        from repro import obs as obs_mod
+        obs_mod.write_chrome_trace(args.chrome_trace, tracer.spans)
+        payload["chrome_trace"] = {"path": args.chrome_trace,
+                                   "spans": len(tracer.spans)}
     payload["perf"] = record.as_dict()
     print(json.dumps(payload))
     if obs is not None:
         obs.emit("metrics", "registry_snapshot", data=obs.metrics.snapshot())
         obs.emit("run", "run_end",
-                 data={"qps": payload["qps"], "health": obs.health.status})
+                 data={"qps": payload["qps"], "health": obs.health.status,
+                       "ring_dropped": obs.sink_dropped()})
         obs.close()
 
 

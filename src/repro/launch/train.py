@@ -196,7 +196,7 @@ def main():
         obs.emit("metrics", "registry_snapshot", data=obs.metrics.snapshot())
     obs.emit("run", "run_end", data={
         "elapsed_s": round(time.time() - t0, 1), "steps": args.steps,
-        "health": obs.health.status})
+        "health": obs.health.status, "ring_dropped": obs.sink_dropped()})
     obs.close()
 
 

@@ -40,19 +40,20 @@ from . import health as health_mod
 from . import metrics as metrics_mod
 from . import trace as trace_mod
 from .events import (ConsoleSink, Event, JsonlSink, NullSink, RingSink, Sink,
-                     TeeSink, make_event, read_jsonl, validate_event,
-                     validate_jsonl)
+                     TeeSink, make_event, read_jsonl, read_jsonl_stats,
+                     validate_event, validate_jsonl)
 from .health import Alert, HealthMonitor
 from .metrics import Counter, Gauge, Histogram, MetricsRegistry, packed_read
-from .trace import PHASES, Span, Tracer, activate, chrome_trace, phase, \
-    span_tree_summary, write_chrome_trace
+from .trace import PHASES, Span, Tracer, activate, active_tracer, \
+    chrome_trace, phase, span_tree_summary, write_chrome_trace
 
 __all__ = [
     "Obs", "NULL_OBS", "make_obs", "set_default", "get_default",
     "Event", "Sink", "NullSink", "JsonlSink", "RingSink", "ConsoleSink",
-    "TeeSink", "make_event", "read_jsonl", "validate_event", "validate_jsonl",
+    "TeeSink", "make_event", "read_jsonl", "read_jsonl_stats",
+    "validate_event", "validate_jsonl",
     "Counter", "Gauge", "Histogram", "MetricsRegistry", "packed_read",
-    "Tracer", "Span", "phase", "activate", "chrome_trace",
+    "Tracer", "Span", "phase", "activate", "active_tracer", "chrome_trace",
     "write_chrome_trace", "span_tree_summary", "PHASES",
     "HealthMonitor", "Alert",
 ]
@@ -171,6 +172,20 @@ class Obs:
         if detail:
             data.update(detail)
         self.emit("census", "all_reduce", data=data)
+
+    def sink_dropped(self) -> int:
+        """Events evicted by any RingSink in this pipeline (recursing
+        through TeeSink fan-outs). The CLIs report this at run_end so a
+        too-small ring shows up as a number, not silently missing data."""
+
+        def count(sink: Sink) -> int:
+            if isinstance(sink, RingSink):
+                return sink.dropped
+            if isinstance(sink, TeeSink):
+                return sum(count(s) for s in sink.sinks)
+            return 0
+
+        return count(self.sink)
 
     # -- lifecycle ---------------------------------------------------------
 

@@ -1,0 +1,205 @@
+"""Phase-level regression diff between two runs (``repro.obs.diff``).
+
+    PYTHONPATH=src python -m repro.obs.diff BASELINE CURRENT \
+        [--fail-over PCT] [--json]
+
+Each side is either a JSONL event stream (``--obs-log`` output: per-phase
+cost = mean runtime-span µs) or a BENCH/PerfRecord JSON carrying
+``attribution`` sections (per-phase cost = measured ``wall_us`` when the
+records have it, attributed FLOPs otherwise). The two sides must be the
+same kind of file — µs vs FLOPs is not a comparison.
+
+Output: a ranked table of per-phase deltas (worst absolute regression
+first) and a one-line verdict naming the top regressor. ``--fail-over
+PCT`` exits non-zero when the top regressor grew by more than PCT% — the
+CI hook. Also callable from the report CLI:
+``python -m repro.obs.report run.jsonl --diff other.jsonl``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+from typing import Any, Dict, List, Optional, Tuple
+
+from .events import read_jsonl
+
+
+@dataclasses.dataclass
+class PhaseDelta:
+    phase: str
+    baseline: Optional[float]
+    current: Optional[float]
+    delta: float          # current - baseline (0-filled for one-sided phases)
+    ratio: Optional[float]  # current / baseline; None when baseline is 0/absent
+
+    def as_dict(self) -> Dict[str, Any]:
+        return dataclasses.asdict(self)
+
+
+def phase_costs_from_events(events) -> Dict[str, float]:
+    """Mean runtime-span µs per phase name (mean, not total, so streams
+    of different lengths compare)."""
+
+    total: Dict[str, float] = {}
+    n: Dict[str, int] = {}
+    for e in events:
+        if e.kind != "span" or e.data.get("traced"):
+            continue
+        total[e.name] = total.get(e.name, 0.0) + float(e.data.get("dur_us", 0.0))
+        n[e.name] = n.get(e.name, 0) + 1
+    return {name: total[name] / n[name] for name in total}
+
+
+def phase_costs_from_bench(payload: Dict[str, Any]) -> Tuple[Dict[str, float], str]:
+    """Per-phase cost summed over a BENCH payload's (or single record's)
+    ``attribution`` sections. Prefers measured ``wall_us``; falls back to
+    attributed FLOPs when no record carries wall times. Returns
+    (costs, unit)."""
+
+    records = payload.get("records", [payload])
+    attrs = [r["attribution"] for r in records if r.get("attribution")]
+    if not attrs and payload.get("phases"):
+        attrs = [payload]  # a bare attribution dict
+    walls: Dict[str, float] = {}
+    flops: Dict[str, float] = {}
+    for attr in attrs:
+        for ph, b in (attr.get("phases") or {}).items():
+            if b.get("wall_us") is not None:
+                walls[ph] = walls.get(ph, 0.0) + float(b["wall_us"])
+            flops[ph] = flops.get(ph, 0.0) + float(b.get("flops", 0.0))
+    if walls:
+        return walls, "us"
+    return flops, "flops"
+
+
+def load_phase_costs(path: str) -> Tuple[Dict[str, float], str]:
+    """Sniff ``path`` (JSONL event stream vs JSON record/bench) and
+    return (per-phase costs, unit)."""
+
+    with open(path, encoding="utf-8") as f:
+        head = f.read(1).strip()
+    if path.endswith(".jsonl"):
+        return phase_costs_from_events(read_jsonl(path)), "us"
+    if head in ("{", "["):
+        try:
+            with open(path, encoding="utf-8") as f:
+                payload = json.load(f)
+        except json.JSONDecodeError:
+            # multiple JSON lines -> treat as an event stream
+            return phase_costs_from_events(read_jsonl(path)), "us"
+        if isinstance(payload, dict):
+            return phase_costs_from_bench(payload)
+    return phase_costs_from_events(read_jsonl(path)), "us"
+
+
+def diff_costs(baseline: Dict[str, float],
+               current: Dict[str, float]) -> List[PhaseDelta]:
+    """Ranked per-phase deltas, worst absolute regression first."""
+
+    rows: List[PhaseDelta] = []
+    for ph in sorted(set(baseline) | set(current)):
+        b = baseline.get(ph)
+        c = current.get(ph)
+        delta = (c or 0.0) - (b or 0.0)
+        ratio = (c / b) if (b and c is not None) else None
+        rows.append(PhaseDelta(phase=ph, baseline=b, current=c,
+                               delta=delta, ratio=ratio))
+    rows.sort(key=lambda r: -r.delta)
+    return rows
+
+
+def top_regressor(rows: List[PhaseDelta]) -> Optional[PhaseDelta]:
+    worst = next(iter(rows), None)
+    return worst if worst is not None and worst.delta > 0 else None
+
+
+def _fmt(v: Optional[float], unit: str) -> str:
+    if v is None:
+        return "-"
+    if unit == "us":
+        if v >= 1e6:
+            return f"{v / 1e6:.2f}s"
+        if v >= 1e3:
+            return f"{v / 1e3:.1f}ms"
+        return f"{v:.0f}us"
+    return f"{v:.3e}"
+
+
+def render_diff(rows: List[PhaseDelta], unit: str) -> str:
+    lines: List[str] = []
+    add = lines.append
+    add("== phase diff (baseline -> current) ==")
+    add(f"{'phase':<18} {'baseline':>12} {'current':>12} {'delta':>12} {'ratio':>8}")
+    for r in rows:
+        ratio = f"{r.ratio:.2f}x" if r.ratio is not None else "-"
+        sign = "+" if r.delta > 0 else ("-" if r.delta < 0 else "")
+        add(f"{r.phase:<18} {_fmt(r.baseline, unit):>12} "
+            f"{_fmt(r.current, unit):>12} {sign + _fmt(abs(r.delta), unit):>12} "
+            f"{ratio:>8}")
+    worst = top_regressor(rows)
+    add("")
+    if worst is None:
+        add("verdict: no phase regressed")
+    else:
+        pct = (f" (+{(worst.ratio - 1) * 100:.0f}%)"
+               if worst.ratio is not None else " (new phase)")
+        add(f"verdict: top regressor is {worst.phase}{pct}, "
+            f"+{_fmt(worst.delta, unit)}")
+    return "\n".join(lines)
+
+
+def diff_paths(baseline_path: str, current_path: str
+               ) -> Tuple[List[PhaseDelta], str]:
+    base, base_unit = load_phase_costs(baseline_path)
+    cur, cur_unit = load_phase_costs(current_path)
+    if base_unit != cur_unit:
+        raise ValueError(
+            f"cannot diff {base_unit} ({baseline_path}) against "
+            f"{cur_unit} ({current_path}) — one side has measured wall "
+            "times, the other only FLOPs")
+    if not base and not cur:
+        raise ValueError("no per-phase costs found on either side "
+                         "(no spans / no attribution sections)")
+    return diff_costs(base, cur), base_unit
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.obs.diff",
+        description="Rank phase-level deltas between two runs.")
+    ap.add_argument("baseline", help="JSONL event stream or BENCH/record JSON")
+    ap.add_argument("current", help="same kind of file as baseline")
+    ap.add_argument("--fail-over", type=float, default=None, metavar="PCT",
+                    help="exit 1 when the top regressor grew more than PCT%%")
+    ap.add_argument("--json", action="store_true",
+                    help="emit machine-readable rows instead of the table")
+    args = ap.parse_args(argv)
+
+    try:
+        rows, unit = diff_paths(args.baseline, args.current)
+    except (ValueError, FileNotFoundError) as e:
+        print(f"obs.diff: ERROR {e}")
+        return 2
+    if args.json:
+        worst = top_regressor(rows)
+        print(json.dumps({
+            "unit": unit,
+            "phases": [r.as_dict() for r in rows],
+            "top_regressor": worst.as_dict() if worst else None,
+        }, indent=2))
+    else:
+        print(render_diff(rows, unit))
+    if args.fail_over is not None:
+        worst = top_regressor(rows)
+        if worst is not None and worst.ratio is not None \
+                and (worst.ratio - 1) * 100 > args.fail_over:
+            print(f"obs.diff: FAIL {worst.phase} regressed "
+                  f"{(worst.ratio - 1) * 100:.1f}% > {args.fail_over}%")
+            return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -293,6 +293,31 @@ def read_jsonl(path: str, *, strict: bool = False) -> Iterator[Event]:
             yield Event.from_dict(d)
 
 
+def read_jsonl_stats(path: str) -> Tuple[List[Event], Dict[str, int]]:
+    """Like :func:`read_jsonl` (lenient mode), but also count what was
+    skipped: ``torn_lines`` (not JSON — a crashed writer's torn tail) and
+    ``invalid_lines`` (JSON but schema-invalid). The report CLI surfaces
+    these so silent log loss is visible instead of silently absorbed."""
+
+    events: List[Event] = []
+    stats = {"torn_lines": 0, "invalid_lines": 0}
+    with open(path, encoding="utf-8") as f:
+        for line in f:
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                d = json.loads(line)
+            except json.JSONDecodeError:
+                stats["torn_lines"] += 1
+                continue
+            if validate_event(d):
+                stats["invalid_lines"] += 1
+                continue
+            events.append(Event.from_dict(d))
+    return events, stats
+
+
 def validate_jsonl(path: str) -> List[str]:
     """Schema errors across a whole log file ([] = every line valid)."""
 

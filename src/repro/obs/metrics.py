@@ -137,6 +137,7 @@ class Histogram:
         self._sum = 0.0
         self._n = 0
         self._max = float("-inf")
+        self._min = float("inf")
         self._lock = threading.Lock()
 
     def observe(self, v: float) -> None:
@@ -154,6 +155,7 @@ class Histogram:
             self._sum += v
             self._n += 1
             self._max = max(self._max, v)
+            self._min = min(self._min, v)
 
     @property
     def n(self) -> int:
@@ -178,13 +180,19 @@ class Histogram:
                 lower = self.bounds[i - 1] if i > 0 else 0.0
                 upper = self.bounds[i]
                 frac = (rank - seen) / c
-                return lower + frac * (upper - lower)
+                # clamp into the observed range: a single sample (or a
+                # value landing exactly on a bucket bound) must not
+                # report a quantile below the smallest / above the
+                # largest value actually seen
+                return min(max(lower + frac * (upper - lower), self._min),
+                           self._max)
             seen += c
         return self._max if self._max != float("-inf") else 0.0
 
     def snapshot(self) -> Dict[str, Any]:
         return {"kind": self.kind, "name": self.name, "n": self._n,
                 "sum": self._sum, "mean": self.mean(),
+                "min": self._min if self._n else 0.0,
                 "max": self._max if self._n else 0.0,
                 "p50": self.quantile(0.50), "p90": self.quantile(0.90),
                 "p99": self.quantile(0.99),

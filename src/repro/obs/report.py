@@ -25,7 +25,7 @@ import sys
 from collections import Counter as TallyCounter
 from typing import Any, Dict, List, Optional
 
-from .events import Event, read_jsonl, validate_jsonl
+from .events import Event, read_jsonl_stats, validate_jsonl
 from .health import replay
 from .trace import PHASES
 
@@ -65,8 +65,10 @@ def _span_table(events: List[Event], traced: bool) -> List[Dict[str, Any]]:
     return [agg[n] for n in sorted(agg, key=_rank)]
 
 
-def summarize(events: List[Event]) -> Dict[str, Any]:
-    """Machine-readable run summary (the ``--json`` payload)."""
+def summarize(events: List[Event],
+              io: Optional[Dict[str, int]] = None) -> Dict[str, Any]:
+    """Machine-readable run summary (the ``--json`` payload). ``io``
+    (the stats of ``read_jsonl_stats``) surfaces skipped log lines."""
 
     kinds = TallyCounter(e.kind for e in events)
     t = [e.t for e in events]
@@ -80,6 +82,17 @@ def summarize(events: List[Event]) -> Dict[str, Any]:
     run_meta = [e for e in events if e.kind == "run"]
     if run_meta:
         summary["run"] = {e.name: e.data for e in run_meta}
+
+    # log-integrity accounting: torn/invalid lines skipped at read time
+    # plus ring-buffer evictions the producer reported at run_end
+    run_end = next((e for e in reversed(events)
+                    if e.kind == "run" and e.name == "run_end"), None)
+    summary["io"] = {
+        "torn_lines": int((io or {}).get("torn_lines", 0)),
+        "invalid_lines": int((io or {}).get("invalid_lines", 0)),
+        "ring_dropped": int(run_end.data.get("ring_dropped", 0))
+        if run_end is not None else 0,
+    }
 
     summary["phases"] = _span_table(events, traced=False)
     summary["phases_trace_time"] = _span_table(events, traced=True)
@@ -161,6 +174,10 @@ def render(summary: Dict[str, Any]) -> str:
     add(f"events: {summary['events']}"
         + (f"  wall: {dur:.1f}s" if dur is not None else ""))
     add("kinds:  " + ", ".join(f"{k}={n}" for k, n in summary["kinds"].items()))
+    io = summary.get("io") or {}
+    if any(io.values()):
+        add("io:     " + ", ".join(f"{k}={v}" for k, v in io.items())
+            + "  (log loss — lines skipped or ring-evicted)")
 
     for key, title in (("phases", "phase spans (runtime)"),
                        ("phases_trace_time", "phase spans (jit trace time)")):
@@ -256,6 +273,9 @@ def main(argv: Optional[List[str]] = None) -> int:
                         help="emit the machine-readable summary instead")
     parser.add_argument("--validate", action="store_true",
                         help="fail (exit 1) if any line violates the schema")
+    parser.add_argument("--diff", default=None, metavar="BASELINE",
+                        help="also print a per-phase cost diff against a "
+                             "baseline log/record (repro.obs.diff)")
     args = parser.parse_args(argv)
 
     if args.validate:
@@ -265,15 +285,23 @@ def main(argv: Optional[List[str]] = None) -> int:
                 print(f"{args.log}: {e}", file=sys.stderr)
             return 1
 
-    events = list(read_jsonl(args.log))
+    events, io = read_jsonl_stats(args.log)
     if not events:
         print(f"{args.log}: no valid events", file=sys.stderr)
         return 1
-    summary = summarize(events)
+    summary = summarize(events, io=io)
+    if args.diff:
+        from . import diff as diff_mod
+        rows, unit = diff_mod.diff_paths(args.diff, args.log)
+        summary["diff"] = {"baseline": args.diff, "unit": unit,
+                           "phases": [r.as_dict() for r in rows]}
     if args.json:
         print(json.dumps(summary, indent=2, default=str))
     else:
         print(render(summary))
+        if args.diff:
+            print()
+            print(diff_mod.render_diff(rows, summary["diff"]["unit"]))
     return 0
 
 

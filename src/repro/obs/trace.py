@@ -42,6 +42,8 @@ from typing import Any, Dict, Iterator, List, Optional, Sequence
 #: the span table; emitting other names is fine.
 PHASES = (
     "base_unroll",      # K-step inner unroll (core/engine._unroll_base)
+    "local_terms",      # per-method local hypergrad terms (any method);
+                        # SAMA's meta_pass/cd_passes nest inside it
     "meta_pass",        # SAMA perturbation direction (core/sama.py)
     "cd_passes",        # central-difference hypergradient passes
     "finalize",         # method.finalize / hypergrad assembly

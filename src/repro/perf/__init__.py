@@ -34,6 +34,7 @@ from repro.perf.record import (
     bench_payload,
     env_info,
     load_bench,
+    validate_attribution,
     validate_bench,
     validate_record,
     write_bench,
@@ -51,20 +52,35 @@ from repro.perf.timers import (
 
 def profile_step(name: str, fn, *args, samples_per_step: Optional[float] = None,
                  warmup: int = 2, repeats: int = 5,
-                 extra: Optional[Dict[str, Any]] = None) -> PerfRecord:
+                 extra: Optional[Dict[str, Any]] = None,
+                 attribution: bool = False,
+                 attribution_spans=None) -> PerfRecord:
     """The full protocol on one step function: compile split + run timing
     + per-device memory + trip-scaled collective census, as a PerfRecord.
-    Call under the owning mesh context when the step is sharded."""
+    Call under the owning mesh context when the step is sharded.
+
+    ``attribution=True`` additionally partitions the compiled HLO's
+    FLOPs/bytes/collectives by engine phase (``repro.obs.profile``) into
+    the record's optional ``attribution`` section;
+    ``attribution_spans`` (measured ``Tracer`` spans, e.g. from
+    ``MetaLearner.phase_profile``) joins per-phase wall time and
+    roofline utilization into it."""
 
     m = measure(fn, *args, warmup=warmup, repeats=repeats)
     mem = coll = None
     if m.compiled is not None:
         mem = memory_report(m.compiled, example_args=args)
         coll = census(m.compiled)
-    return PerfRecord.from_measurement(
+    rec = PerfRecord.from_measurement(
         name, m, samples_per_step=samples_per_step, memory=mem,
         collectives=coll, extra=extra,
     )
+    if attribution and m.compiled is not None:
+        from repro.obs import profile as profile_mod  # lazy: obs imports perf
+
+        rec.attribution = profile_mod.attribute(m.compiled,
+                                                spans=attribution_spans)
+    return rec
 
 
 __all__ = [
@@ -73,6 +89,6 @@ __all__ = [
     "bench_payload", "census", "census_of", "compare_dirs", "compare_record",
     "compile_split", "compiled_memory", "device_memory", "env_info",
     "load_bench", "measure", "memory_report", "profile_step", "time_callable",
-    "tree_bytes", "validate_bench", "validate_record", "verify_single_sync",
-    "write_bench", "write_json_atomic",
+    "tree_bytes", "validate_attribution", "validate_bench", "validate_record",
+    "verify_single_sync", "write_bench", "write_json_atomic",
 ]

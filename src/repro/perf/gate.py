@@ -43,6 +43,9 @@ class Tolerance:
     throughput_ratio: float = 2.5
     memory_ratio: float = 1.15
     collective_bytes_ratio: float = 1.10
+    #: per-phase attributed FLOPs are deterministic given the jax pin
+    #: (perf-gate CI pins it); 10% absorbs compiler-churn refusion only
+    attribution_flops_ratio: float = 1.10
 
 
 @dataclasses.dataclass(frozen=True)
@@ -115,6 +118,26 @@ def compare_record(bench: str, current: Dict[str, Any], baseline: Dict[str, Any]
             if cur_c["total_bytes"] > limit:
                 out.append(Violation(bench, name, "collectives.total_bytes",
                                      base_c["total_bytes"], cur_c["total_bytes"], limit))
+
+    # per-phase attribution bands: FLOPs (tight — deterministic counts)
+    # and measured wall time (the noisy time band). A CI failure here
+    # names the phase, not just the record.
+    cur_a = (current.get("attribution") or {}).get("phases") or {}
+    base_a = (baseline.get("attribution") or {}).get("phases") or {}
+    for ph in sorted(set(cur_a) & set(base_a)):
+        cb, bb = cur_a[ph], base_a[ph]
+        base_fl = float(bb.get("flops") or 0.0)
+        if base_fl > 0 and cb.get("flops") is not None:
+            limit = base_fl * tol.attribution_flops_ratio
+            if float(cb["flops"]) > limit:
+                out.append(Violation(bench, name, f"attribution.{ph}.flops",
+                                     base_fl, float(cb["flops"]), limit))
+        base_w = bb.get("wall_us")
+        if base_w and cb.get("wall_us") is not None:
+            limit = float(base_w) * tol.time_ratio
+            if float(cb["wall_us"]) > limit:
+                out.append(Violation(bench, name, f"attribution.{ph}.wall_us",
+                                     float(base_w), float(cb["wall_us"]), limit))
     return out
 
 
@@ -212,6 +235,9 @@ def main(argv: Optional[List[str]] = None) -> int:
     ap.add_argument("--tol-memory", type=float, default=Tolerance.memory_ratio)
     ap.add_argument("--tol-collective-bytes", type=float,
                     default=Tolerance.collective_bytes_ratio)
+    ap.add_argument("--tol-attr-flops", type=float,
+                    default=Tolerance.attribution_flops_ratio,
+                    help="ratio band on per-phase attributed FLOPs")
     ap.add_argument("--strict-missing", action="store_true",
                     help="fail when ANY baselined bench/record was not re-measured "
                          "(full-run mode)")
@@ -222,7 +248,8 @@ def main(argv: Optional[List[str]] = None) -> int:
 
     tol = Tolerance(time_ratio=args.tol_time, throughput_ratio=args.tol_throughput,
                     memory_ratio=args.tol_memory,
-                    collective_bytes_ratio=args.tol_collective_bytes)
+                    collective_bytes_ratio=args.tol_collective_bytes,
+                    attribution_flops_ratio=args.tol_attr_flops)
     try:
         report = compare_dirs(args.records, args.baselines, tol)
     except (FileNotFoundError, ValueError) as e:

@@ -44,6 +44,7 @@ class PerfRecord:
     memory: Optional[Dict[str, Any]] = None  # memory.memory_report()
     collectives: Optional[Dict[str, Any]] = None  # collectives.census()
     latency: Optional[Dict[str, Any]] = None  # timers.LatencyStats.as_dict()
+    attribution: Optional[Dict[str, Any]] = None  # obs.profile.attribute()
     extra: Dict[str, Any] = dataclasses.field(default_factory=dict)
     schema_version: int = SCHEMA_VERSION
 
@@ -74,6 +75,48 @@ class PerfRecord:
         if self.us_per_step is None:
             return None
         return TimingStats(**{k: self.us_per_step[k] for k in _TIMING_KEYS})
+
+
+def validate_attribution(d: Dict[str, Any]) -> List[str]:
+    """Schema errors for one ``attribution`` section ([] = valid).
+
+    The section is additive to schema v1 (like ``latency``): an optional
+    dict produced by ``repro.obs.profile.attribute`` — per-phase FLOP /
+    bytes / collective partition of one compiled step, with optional
+    measured ``wall_us`` / ``utilization`` per phase. Lives here (not in
+    obs) so the schema home stays one module."""
+
+    errors: List[str] = []
+    if not isinstance(d, dict):
+        return [f"attribution must be a dict, got {type(d).__name__}"]
+    phases = d.get("phases")
+    if not isinstance(phases, dict) or not phases:
+        return ["attribution.phases must be a non-empty dict"]
+    frac_sum = 0.0
+    for name, b in phases.items():
+        if not isinstance(b, dict):
+            errors.append(f"attribution.phases[{name!r}] must be a dict")
+            continue
+        for key in ("flops", "flop_frac"):
+            v = b.get(key)
+            if not isinstance(v, (int, float)) or v < 0:
+                errors.append(f"attribution.phases[{name!r}].{key} must be "
+                              "a non-negative number")
+        frac_sum += float(b.get("flop_frac") or 0.0)
+        wall = b.get("wall_us")
+        if wall is not None and (not isinstance(wall, (int, float)) or wall <= 0):
+            errors.append(f"attribution.phases[{name!r}].wall_us must be > 0")
+    total = d.get("total")
+    if not isinstance(total, dict) or "flops" not in total:
+        errors.append("attribution.total must carry at least flops")
+    cov = d.get("coverage")
+    if not isinstance(cov, (int, float)) or not (0.0 <= cov <= 1.0 + 1e-9):
+        errors.append("attribution.coverage must be a number in [0, 1]")
+    total_flops = (total or {}).get("flops") or 0.0
+    if total_flops > 0 and abs(frac_sum - 1.0) > 1e-3:
+        errors.append(f"attribution phase flop_fracs sum to {frac_sum:.6f}, "
+                      "expected ~1")
+    return errors
 
 
 def validate_record(d: Dict[str, Any]) -> List[str]:
@@ -115,10 +158,15 @@ def validate_record(d: Dict[str, Any]) -> List[str]:
             errors.append(f"record.latency must carry {sorted(_LATENCY_KEYS)}")
         elif lat["p50_us"] <= 0 or lat["p99_us"] < lat["p50_us"]:
             errors.append("record.latency needs p50_us > 0 and p99_us >= p50_us")
+    attr = d.get("attribution")
+    if attr is not None:
+        errors.extend(f"record {d.get('name')!r}: {e}"
+                      for e in validate_attribution(attr))
     if d.get("us_per_step") is None and mem is None and coll is None \
-            and lat is None:
+            and lat is None and attr is None:
         errors.append(f"record {d.get('name')!r} carries no measured section "
-                      "(us_per_step / memory / collectives / latency)")
+                      "(us_per_step / memory / collectives / latency / "
+                      "attribution)")
     return errors
 
 

@@ -31,6 +31,13 @@ _SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
 _COMP_HEADER = re.compile(r"^\s*(?:ENTRY\s+)?%([^\s(]+)\s*\(.*\)\s*->.*\{\s*$")
 _WHILE_RE = re.compile(r"while\(.*?\).*?body=%([^\s,]+)")
 _TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+#: every way one computation invokes another in HLO text: loop body /
+#: condition, fusion/call targets, reducer lambdas, conditional branches
+_CALLEE_RE = re.compile(
+    r"(?:body|condition|calls|to_apply|true_computation|false_computation)"
+    r"=%([\w.\-]+)")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_COMP_REF_RE = re.compile(r"%([\w.\-]+)")
 
 
 def shape_bytes(segment: str) -> int:
@@ -68,8 +75,17 @@ def split_computations(text: str) -> Dict[str, List[str]]:
     return comps
 
 
-def computation_multipliers(comps: Dict[str, List[str]]) -> Dict[str, float]:
-    """Multiplier per computation = product of enclosing loop trip counts."""
+def computation_multipliers(comps: Dict[str, List[str]],
+                            follow_calls: bool = False) -> Dict[str, float]:
+    """Multiplier per computation = product of enclosing loop trip counts.
+
+    By default only while ``body=`` edges are followed (what the
+    collective census needs — collectives never hide inside fusions).
+    ``follow_calls=True`` additionally walks ``calls=``/``to_apply=``/
+    condition/branch edges at trip 1, so fused computations *inside* a
+    scanned loop body inherit the body's trip multiplier — required for
+    FLOP attribution (obs.profile), where most compute lives in fusions.
+    """
 
     # edges: computation -> [(callee_body, trip)]
     edges: Dict[str, List[Tuple[str, int]]] = {}
@@ -77,13 +93,24 @@ def computation_multipliers(comps: Dict[str, List[str]]) -> Dict[str, float]:
         if name == "__entry__":
             continue
         for line in lines:
-            if " while(" in line:
+            is_while = " while(" in line
+            if is_while:
                 mb = _WHILE_RE.search(line)
-                if not mb:
-                    continue
-                mt = _TRIP_RE.search(line)
-                trip = int(mt.group(1)) if mt else 1
-                edges.setdefault(name, []).append((mb.group(1), trip))
+                if mb:
+                    mt = _TRIP_RE.search(line)
+                    trip = int(mt.group(1)) if mt else 1
+                    edges.setdefault(name, []).append((mb.group(1), trip))
+            if not follow_calls:
+                continue
+            body = _WHILE_RE.search(line).group(1) if is_while and _WHILE_RE.search(line) else None
+            for callee in _CALLEE_RE.findall(line):
+                if callee == body:
+                    continue  # trip-scaled edge already added above
+                edges.setdefault(name, []).append((callee, 1))
+            mbr = _BRANCHES_RE.search(line)
+            if mbr:
+                for callee in _COMP_REF_RE.findall(mbr.group(1)):
+                    edges.setdefault(name, []).append((callee, 1))
 
     entry = None
     for name, lines in comps.items():

@@ -34,6 +34,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models import common as cm
+from repro.obs import trace as obs_trace
 from repro.serve import prefill as prefill_mod
 from repro.serve.cache import CacheSpec, PagedCache, gather_dense, scatter_token
 from repro.serve.queue import Request
@@ -90,14 +91,18 @@ def _fused_step(model, spec):       # batchers over the same model share
     buffers donated so XLA updates pages in place."""
 
     def step(params, pools, states, table_view, pos, tokens, active):
-        dense = gather_dense(spec, pools, states, table_view)
-        logits, new_cache = model.decode_step(params, dense,
-                                              tokens[:, None], pos)
-        pools, states = scatter_token(spec, pools, states, new_cache,
-                                      table_view, pos, active)
-        lg = logits[:, 0].astype(jnp.float32)
-        next_tok = jnp.argmax(lg, axis=-1).astype(jnp.int32)
-        finite = jnp.all(jnp.isfinite(lg), axis=-1)
+        # phase() = metadata-only named_scope (identical HLO with obs on
+        # or off) — it makes the fused step attributable as "serve_step"
+        # by repro.obs.profile
+        with obs_trace.phase("serve_step"):
+            dense = gather_dense(spec, pools, states, table_view)
+            logits, new_cache = model.decode_step(params, dense,
+                                                  tokens[:, None], pos)
+            pools, states = scatter_token(spec, pools, states, new_cache,
+                                          table_view, pos, active)
+            lg = logits[:, 0].astype(jnp.float32)
+            next_tok = jnp.argmax(lg, axis=-1).astype(jnp.int32)
+            finite = jnp.all(jnp.isfinite(lg), axis=-1)
         return pools, states, next_tok, finite
 
     return jax.jit(step, donate_argnums=(1, 2))
@@ -268,6 +273,24 @@ class ContinuousBatcher:
         self.lanes[lane.slot] = None
 
     # -- telemetry -----------------------------------------------------------
+
+    def lower_step(self, bucket: Optional[int] = None):
+        """Lower (not run) the fused step at one bucket's shapes — the
+        input of ``repro.obs.profile.attribute`` for serve-side cost
+        attribution. Abstract avals only: nothing executes and the
+        donated pool buffers are untouched. Defaults to the largest
+        bucket (the worst-case decode view)."""
+
+        bucket = self.buckets[-1] if bucket is None else bucket
+        S = self.cfg.slots
+        args = (self.params, self.cache.pools, self.cache.states,
+                self.cache.table_view(bucket),
+                jnp.zeros((S,), jnp.int32), jnp.zeros((S,), jnp.int32),
+                jnp.zeros((S,), bool))
+        abstract = jax.tree_util.tree_map(
+            lambda x: jax.ShapeDtypeStruct(jnp.shape(x), jnp.result_type(x)),
+            args)
+        return self._step_fn.lower(*abstract)
 
     def memory_stats(self) -> Dict[str, Any]:
         return {

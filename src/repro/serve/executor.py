@@ -19,6 +19,7 @@ rather than poisoning the batch or crashing the loop.
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import math
 import time
@@ -27,6 +28,7 @@ from typing import Any, Callable, Dict, List, Optional
 import jax.numpy as jnp
 import numpy as np
 
+from repro.obs import trace as trace_mod
 from repro.perf.timers import LatencyStats
 from repro.serve.batcher import ContinuousBatcher, Lane, ServeConfig
 from repro.serve.cache import PagedCacheError
@@ -250,26 +252,32 @@ class ServeExecutor:
 
         pending = None
         observe = self._obs.enabled  # hoisted: zero per-tick work when off
+        tracer = trace_mod.active_tracer()  # hoisted: contextvar read once
         while True:
-            tick_t0 = time.perf_counter() if observe else 0.0
-            now = self._clock()
-            self._resolve_shed()
-            for lane in self.batcher.live_lanes():
-                if lane.request.expired(now):
-                    self._shed_lane(lane)
-            self._admissions(now)  # host + prefill work overlapping `pending`
-            if pending is not None:
-                for lane, _tok, ok in self.batcher.harvest(pending):
-                    if not ok:
-                        self._fallback(lane)
-                    elif self.batcher.lane_done(lane):
-                        self._finalize(lane, STATUS_OK)
-                pending = None
-            live = self.batcher.live_lanes()
-            if live:
-                pending = self.batcher.dispatch()
-            if observe:
-                self._observe_tick(tick_t0, len(live))
+            # --chrome-trace: each tick is one span on the Perfetto
+            # timeline; nullcontext (no tracer) costs nothing per tick
+            span = (tracer.span("serve_tick") if tracer is not None
+                    else contextlib.nullcontext())
+            with span:
+                tick_t0 = time.perf_counter() if observe else 0.0
+                now = self._clock()
+                self._resolve_shed()
+                for lane in self.batcher.live_lanes():
+                    if lane.request.expired(now):
+                        self._shed_lane(lane)
+                self._admissions(now)  # host + prefill work overlapping `pending`
+                if pending is not None:
+                    for lane, _tok, ok in self.batcher.harvest(pending):
+                        if not ok:
+                            self._fallback(lane)
+                        elif self.batcher.lane_done(lane):
+                            self._finalize(lane, STATUS_OK)
+                    pending = None
+                live = self.batcher.live_lanes()
+                if live:
+                    pending = self.batcher.dispatch()
+                if observe:
+                    self._observe_tick(tick_t0, len(live))
             if not live and len(self.queue) == 0 and self._stalled is None:
                 break
         self._resolve_shed()

@@ -607,3 +607,91 @@ def test_executor_terminal_vocabulary_matches_monitor():
 
     names = set(ServeExecutor.TERMINAL_EVENT.values())
     assert set(health_mod.ServeSLOMonitor.TERMINAL) <= names
+
+
+# ---------------------------------------------------------------------------
+# ISSUE 8 satellites: histogram percentile edges, log-loss surfacing
+# ---------------------------------------------------------------------------
+
+
+def test_histogram_single_sample_quantiles():
+    # one sample: every percentile IS that sample, not a bucket-interior
+    # interpolation below/above the only value ever seen
+    h = metrics_mod.Histogram("one", bounds=[10.0, 100.0, 1000.0])
+    h.observe(50.0)
+    assert h.quantile(0.5) == 50.0
+    assert h.quantile(0.99) == 50.0
+    assert h.quantile(0.0) == 50.0
+    snap = h.snapshot()
+    assert snap["min"] == 50.0 and snap["max"] == 50.0
+    assert snap["p50"] == 50.0 and snap["p99"] == 50.0
+
+
+def test_histogram_value_exactly_on_bucket_bound():
+    # a value landing exactly on a bound goes to the bucket it closes,
+    # and quantiles stay clamped inside [min, max] observed
+    h = metrics_mod.Histogram("edge", bounds=[10.0, 100.0, 1000.0])
+    for _ in range(3):
+        h.observe(1000.0)               # exactly the last finite bound
+    assert h.quantile(0.5) == 1000.0
+    assert h.quantile(0.99) == 1000.0
+    h2 = metrics_mod.Histogram("edge2", bounds=[10.0, 100.0, 1000.0])
+    h2.observe(10.0)
+    h2.observe(100.0)
+    assert h2.quantile(0.0) >= 10.0     # never below the observed min
+    assert h2.quantile(1.0) <= 100.0    # never above the observed max
+    assert h2.snapshot()["min"] == 10.0
+
+
+def test_read_jsonl_stats_counts_torn_and_invalid(tmp_path):
+    path = str(tmp_path / "run.jsonl")
+    sink = events_mod.JsonlSink(path)
+    sink.write(ev("run", "run_start", data={}))
+    sink.write(ev("span", "base_unroll", data={"dur_us": 5.0, "traced": False}))
+    sink.close()
+    with open(path, "a") as f:
+        f.write(json.dumps({"v": 1, "kind": "bogus", "name": "x", "t": 0.0,
+                            "step": None, "data": {}}) + "\n")
+        f.write('{"v": 1, "kind": "log", "na')  # torn tail
+    events, stats = events_mod.read_jsonl_stats(path)
+    assert len(events) == 2
+    assert stats == {"torn_lines": 1, "invalid_lines": 1}
+
+
+def test_report_surfaces_log_loss(tmp_path, capsys):
+    path = str(tmp_path / "run.jsonl")
+    sink = events_mod.JsonlSink(path)
+    sink.write(ev("run", "run_start", data={}))
+    sink.write(ev("span", "meta_pass", data={"dur_us": 9.0, "traced": False}))
+    sink.write(ev("run", "run_end", data={"ring_dropped": 7}))
+    sink.close()
+    with open(path, "a") as f:
+        f.write('{"torn":')               # torn tail from a crashed writer
+    assert report_mod.main([path, "--json"]) == 0
+    out = json.loads(capsys.readouterr().out)
+    assert out["io"] == {"torn_lines": 1, "invalid_lines": 0,
+                         "ring_dropped": 7}
+    assert report_mod.main([path]) == 0
+    text = capsys.readouterr().out
+    assert "torn_lines=1" in text and "ring_dropped=7" in text
+
+
+def test_report_io_silent_when_clean(tmp_path, capsys):
+    path = str(tmp_path / "run.jsonl")
+    _write_run_log(path)
+    events, stats = events_mod.read_jsonl_stats(path)
+    s = report_mod.summarize(events, io=stats)
+    assert s["io"] == {"torn_lines": 0, "invalid_lines": 0, "ring_dropped": 0}
+    assert "torn_lines" not in report_mod.render(s)  # no noise when clean
+
+
+def test_obs_sink_dropped_recurses_tee():
+    ring = events_mod.RingSink(capacity=2)
+    obs = obs_mod.Obs(sink=events_mod.TeeSink([events_mod.NullSink(), ring]),
+                      monitor=False)
+    for i in range(5):
+        obs.emit("log", f"m{i}", data={"msg": "x"})
+    assert ring.dropped == 3
+    assert obs.sink_dropped() == 3
+    assert obs_mod.Obs(sink=events_mod.NullSink(),
+                       monitor=False).sink_dropped() == 0
