@@ -1,0 +1,289 @@
+"""Attention kernel bench (ISSUE 9): flash Pallas kernels vs the jnp ref.
+
+Ordering is deliberate — parity is HARD-ASSERTED before any number is
+recorded, so a baseline can never be minted from a kernel that drifted
+off the oracle:
+
+1. kernel-level parity: the pallas path (interpret off-TPU, compiled on
+   TPU) must match the ``ref`` twin on a representative GQA shape —
+   forward and q/k/v cotangents <= 1e-5 (f32) — and split-KV decode must
+   match the single-pass softmax across uneven splits;
+2. full-step parity: the dispatched SAMA meta step vs the same step with
+   ``REPRO_KERNEL_BACKEND=ref`` forced agree <= 1e-5 on every output
+   leaf (identical on CPU where the default IS ref; the real comparison
+   on a TPU runtime), and off-TPU the forced-interpret step is checked
+   against ref too, so CI exercises the actual kernel body in the step;
+3. only then: measured PerfRecords per backend (``ref`` everywhere plus
+   ``pallas-interpret`` off-TPU / ``pallas-tpu`` on TPU) for the
+   training fwd+bwd path and the split-KV decode path, and the SAMA
+   step's attribution re-run reporting attention.py's FLOP share.
+
+Interpreter numbers document the CI-side cost of running the real kernel
+logic, not TPU performance (same caveat as bench_kernels).
+"""
+
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import data, optim, perf
+from repro.core import EngineConfig, init_state, make_meta_step, problems
+from repro.kernels import dispatch, flash_attn
+
+from benchmarks.common import emit, emit_record, mini_bert, wrench_task
+
+BATCH, UNROLL = 16, 2
+PARITY_TOL = 1e-5   # ISSUE 9 acceptance: f32 forward + step parity
+GRAD_TOL = 5e-5
+
+
+def _pallas_backend() -> str:
+    return "pallas-tpu" if jax.default_backend() == "tpu" else "pallas-interpret"
+
+
+# ---------------------------------------------------------------------------
+# 1. kernel-level parity gates
+# ---------------------------------------------------------------------------
+
+
+def _assert_kernel_parity():
+    B, S, H, KV, Dh = 2, 13, 4, 2, 64
+    rng = np.random.default_rng(9)
+    q = jnp.asarray(rng.standard_normal((B, S, H, Dh)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, S, KV, Dh)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, S, KV, Dh)), jnp.float32)
+    q_pos = jnp.broadcast_to(jnp.arange(S), (B, S))
+    kv_pos = jnp.arange(S)
+    lf = jnp.asarray(True)
+    kw = dict(softcap=30.0, window=5, causal=True)
+    interp = jax.default_backend() != "tpu"
+
+    ref = flash_attn.flash_attention_ref(q, k, v, q_pos, kv_pos, lf, **kw)
+    got = flash_attn.flash_attention(q, k, v, q_pos, kv_pos, lf,
+                                     interpret=interp, **kw)
+    err = float(jnp.max(jnp.abs(ref - got)))
+    if err > PARITY_TOL:
+        raise RuntimeError(f"flash forward diverged from ref: {err:.2e}")
+
+    cot = jnp.asarray(rng.standard_normal(q.shape), jnp.float32)
+    g_ref = jax.grad(lambda *a: jnp.sum(flash_attn.flash_attention_ref(
+        *a, q_pos, kv_pos, lf, **kw) * cot), argnums=(0, 1, 2))(q, k, v)
+    g_got = jax.grad(lambda *a: jnp.sum(flash_attn.flash_attention(
+        *a, q_pos, kv_pos, lf, interpret=interp, **kw) * cot),
+        argnums=(0, 1, 2))(q, k, v)
+    gerr = max(float(jnp.max(jnp.abs(a - b))) for a, b in zip(g_ref, g_got))
+    if gerr > GRAD_TOL:
+        raise RuntimeError(f"flash VJP diverged from ref: {gerr:.2e}")
+
+    # split-KV decode across uneven splits, staggered lanes incl. pos=0
+    T = 37
+    qd = jnp.asarray(rng.standard_normal((3, 1, H, Dh)), jnp.float32)
+    kd = jnp.asarray(rng.standard_normal((3, T, KV, Dh)), jnp.float32)
+    vd = jnp.asarray(rng.standard_normal((3, T, KV, Dh)), jnp.float32)
+    pos = jnp.asarray([[36], [10], [0]], jnp.int32)
+    dref = flash_attn.flash_decode_ref(qd, kd, vd, pos, softcap=30.0)
+    for ns in (1, 3, 5):
+        dgot = flash_attn.flash_decode(qd, kd, vd, pos, softcap=30.0,
+                                       interpret=interp, n_splits=ns)
+        derr = float(jnp.max(jnp.abs(dref - dgot)))
+        if derr > PARITY_TOL:
+            raise RuntimeError(
+                f"split-KV decode (n_splits={ns}) diverged: {derr:.2e}")
+    return err, gerr
+
+
+# ---------------------------------------------------------------------------
+# 2. full-SAMA-step parity gate
+# ---------------------------------------------------------------------------
+
+
+def _problem():
+    ccfg, train, meta, _ = wrench_task(seed=9)
+    model = mini_bert(num_labels=ccfg.num_classes, d_model=128)
+    spec = problems.make_data_optimization_spec(model.classifier_per_example,
+                                                reweight=True)
+    lam = problems.init_data_optimization_lam(jax.random.PRNGKey(1),
+                                              reweight=True)
+    theta = model.init(jax.random.PRNGKey(0))
+    it = data.BatchIterator(train, meta, batch_size=BATCH, meta_batch_size=BATCH,
+                            unroll=UNROLL, seed=0)
+    base_b, meta_b = next(it)
+    base_b = jax.tree_util.tree_map(jnp.asarray, base_b)
+    meta_b = jax.tree_util.tree_map(jnp.asarray, meta_b)
+    base_opt, meta_opt = optim.adam(1e-3), optim.adam(1e-3)
+    cfg = EngineConfig(method="sama", unroll_steps=UNROLL)
+    state = init_state(theta, lam, base_opt, meta_opt, scale=cfg.scale)
+    # a FACTORY, not a step: jax.jit keys its global executable cache on
+    # the function object, so re-jitting the same closure under a different
+    # REPRO_KERNEL_BACKEND would silently reuse the first backend's trace.
+    # Each backend gets a fresh make_meta_step closure -> a fresh trace.
+    def step_factory():
+        return make_meta_step(spec, base_opt, meta_opt, cfg)
+
+    return step_factory, state, base_b, meta_b
+
+
+def _step_with_backend(step_factory, state, bb, mb, backend):
+    """Trace+run one step with REPRO_KERNEL_BACKEND pinned (dispatch reads
+    the env at trace time; the fresh closure forces a fresh trace)."""
+    prev = os.environ.get(dispatch.ENV_VAR)
+    if backend is None:
+        os.environ.pop(dispatch.ENV_VAR, None)
+    else:
+        os.environ[dispatch.ENV_VAR] = backend
+    try:
+        dispatch.clear_dispatch_log()
+        out = jax.jit(step_factory())(state, bb, mb)
+        out = jax.block_until_ready(out)
+        picked = {b for k, b, _ in dispatch.dispatch_log()
+                  if k == "flash_attention"}
+        want = backend or ("pallas-tpu" if jax.default_backend() == "tpu"
+                           else "ref")
+        if picked and want not in picked:
+            raise RuntimeError(
+                f"backend forcing failed: wanted {want}, lowered {picked}")
+        return out
+    finally:
+        if prev is None:
+            os.environ.pop(dispatch.ENV_VAR, None)
+        else:
+            os.environ[dispatch.ENV_VAR] = prev
+
+
+def _max_leaf_diff(a, b) -> float:
+    diffs = jax.tree_util.tree_map(
+        lambda x, y: float(jnp.max(jnp.abs(jnp.asarray(x, jnp.float32)
+                                           - jnp.asarray(y, jnp.float32))))
+        if hasattr(x, "shape") else 0.0, a, b)
+    return max(jax.tree_util.tree_leaves(diffs) or [0.0])
+
+
+def _assert_step_parity(step_factory, state, bb, mb):
+    dispatched = _step_with_backend(step_factory, state, bb, mb, None)
+    forced_ref = _step_with_backend(step_factory, state, bb, mb, "ref")
+    d = _max_leaf_diff(dispatched, forced_ref)
+    if d > PARITY_TOL:
+        raise RuntimeError(
+            f"dispatched vs forced-ref SAMA step diverged: {d:.2e}")
+    diffs = {"dispatched_vs_ref": d}
+    if jax.default_backend() != "tpu":
+        interp = _step_with_backend(step_factory, state, bb, mb,
+                                    "pallas-interpret")
+        # Metrics (loss etc.) must track tightly, with two structural
+        # amplifiers carved out and bounded by what amplifies them rather
+        # than by kernel accuracy: hypergrad_norm passes a ~1e-6 forward
+        # diff through SAMA's finite-difference 1/eps, and the post-step
+        # STATE passes it through adam's first-step g/(sqrt(v)+eps)
+        # sign-like normalization (~2*lr on near-zero coordinates).
+        mi = dict(interp[1])
+        mr = dict(forced_ref[1])
+        dh = _max_leaf_diff(mi.pop("hypergrad_norm", 0.0),
+                            mr.pop("hypergrad_norm", 0.0))
+        dm = _max_leaf_diff(mi, mr)
+        ds = _max_leaf_diff(interp[0], forced_ref[0])
+        if dm > 1e-4 or dh > 1e-2 or ds > 5e-3:
+            raise RuntimeError(
+                f"forced-interpret vs ref SAMA step diverged: "
+                f"metrics {dm:.2e}, hypergrad_norm {dh:.2e}, state {ds:.2e}")
+        diffs["interpret_vs_ref_metrics"] = dm
+        diffs["interpret_vs_ref_state"] = ds
+    return diffs
+
+
+# ---------------------------------------------------------------------------
+# 3. measured records (only after the gates above)
+# ---------------------------------------------------------------------------
+
+
+def _attn_inputs(B, S, H, KV, Dh):
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.standard_normal((B, S, H, Dh)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, S, KV, Dh)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, S, KV, Dh)), jnp.float32)
+    return q, k, v, jnp.broadcast_to(jnp.arange(S), (B, S)), jnp.arange(S)
+
+
+def _bench_train(backend: str, fast: bool):
+    B, S, H, KV, Dh = 8, 128, 4, 2, 64
+    q, k, v, q_pos, kv_pos = _attn_inputs(B, S, H, KV, Dh)
+    fn = dispatch.get_kernel("flash_attention", backend=backend)
+
+    def fwd_bwd(q, k, v):
+        def loss(q, k, v):
+            return jnp.sum(fn(q, k, v, q_pos, kv_pos, softcap=30.0) ** 2)
+        l, g = jax.value_and_grad(loss, argnums=(0, 1, 2))(q, k, v)
+        return l, g
+
+    warmup, repeats = (1, 3) if fast else (2, 5)
+    rec = perf.profile_step(
+        f"attention_train_{backend}", jax.jit(fwd_bwd), q, k, v,
+        samples_per_step=B * S, warmup=warmup, repeats=repeats,
+        extra={"shape": f"B{B}xS{S}xH{H}/KV{KV}xDh{Dh}", "backend": backend},
+    )
+    emit_record(rec)
+    emit(rec.name, rec.timing.median_us,
+         f"backend={backend};tokens_per_s={rec.samples_per_s:.1f}")
+
+
+def _bench_decode(backend: str, fast: bool):
+    B, T, H, KV, Dh = 16, 512, 4, 2, 64
+    rng = np.random.default_rng(1)
+    q = jnp.asarray(rng.standard_normal((B, 1, H, Dh)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, T, KV, Dh)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, T, KV, Dh)), jnp.float32)
+    pos = jnp.asarray(rng.integers(0, T, (B, 1)), jnp.int32)
+    fn = dispatch.get_kernel("flash_decode", backend=backend)
+
+    warmup, repeats = (1, 3) if fast else (2, 5)
+    rec = perf.profile_step(
+        f"attention_decode_{backend}",
+        jax.jit(lambda q, k, v, pos: fn(q, k, v, pos, softcap=30.0)),
+        q, k, v, pos,
+        samples_per_step=B, warmup=warmup, repeats=repeats,
+        extra={"shape": f"B{B}xT{T}xH{H}/KV{KV}xDh{Dh}", "backend": backend,
+               "n_splits": flash_attn.pick_splits(T, B * KV)},
+    )
+    emit_record(rec)
+    emit(rec.name, rec.timing.median_us,
+         f"backend={backend};lanes_per_s={rec.samples_per_s:.1f}")
+
+
+def _attribution_share(step, state, bb, mb, fast: bool):
+    warmup, repeats = (1, 3) if fast else (2, 5)
+    rec = perf.profile_step(
+        "attention_step_attribution", jax.jit(step), state, bb, mb,
+        samples_per_step=BATCH * UNROLL, warmup=warmup, repeats=repeats,
+        extra={"method": "sama", "batch": BATCH, "unroll": UNROLL},
+        attribution=True,
+    )
+    attr = rec.attribution
+    assert attr is not None
+    share = attr["modules"].get("attention.py", {}).get("flop_frac", 0.0)
+    emit_record(rec)
+    emit("attention_step_attribution", rec.timing.median_us,
+         f"attention_flop_share={share:.4f};top_module={attr['top_module']}")
+    return share
+
+
+def main(fast: bool = True):
+    err, gerr = _assert_kernel_parity()
+    step_factory, state, bb, mb = _problem()
+    diffs = _assert_step_parity(step_factory, state, bb, mb)
+    emit("attention_parity", 0.0,
+         f"fwd_err={err:.2e};grad_err={gerr:.2e};"
+         + ";".join(f"{k}={v:.2e}" for k, v in diffs.items()))
+
+    backends = ["ref", _pallas_backend()] if jax.default_backend() != "tpu" \
+        else [_pallas_backend(), "ref"]
+    for b in backends:
+        _bench_train(b, fast)
+        _bench_decode(b, fast)
+    _attribution_share(step_factory(), state, bb, mb, fast)
+
+
+if __name__ == "__main__":
+    main()

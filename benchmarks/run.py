@@ -39,6 +39,7 @@ BENCHES = [
     "bench_serve",  # repro.serve: continuous-batch QPS vs serial + paged-cache memory
     "bench_obs",  # repro.obs: instrumented-loop overhead <= 3% + census with obs on
     "bench_attribution",  # repro.obs.profile: per-phase FLOP coverage + top sink
+    "bench_attention",  # flash attention kernels: parity gates + per-backend timing
 ]
 
 #: benches whose rows are produced by the repro.dataopt subsystem

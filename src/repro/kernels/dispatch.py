@@ -244,8 +244,50 @@ def _ce_tiles_ok(logits, targets, **kwargs) -> bool:
     return logits.ndim == 2 and logits.shape[-1] % 128 == 0
 
 
+_ATTN_DTYPES = ("float32", "bfloat16", "float16")
+
+
+def _attn_shapes_ok(q, k, v, *args, **kwargs) -> bool:
+    """Flash attention handles any S/T (pad+mask internally); the gate is
+    the calling convention itself: 4-D GQA layouts with H % KV == 0 and a
+    dtype the f32-accumulating kernel supports."""
+
+    return (
+        q.ndim == 4 and k.ndim == 4 and v.shape == k.shape
+        and q.shape[0] == k.shape[0] and q.shape[-1] == k.shape[-1]
+        and k.shape[2] > 0 and q.shape[2] % k.shape[2] == 0
+        and str(q.dtype) in _ATTN_DTYPES
+    )
+
+
+def _attn_tpu_ok(q, k, v, *args, **kwargs) -> bool:
+    """Compiled TPU tiles additionally want a lane-aligned head dim and
+    sequences long enough that 128-wide q/kv tiles are not all padding."""
+
+    return (
+        _attn_shapes_ok(q, k, v, *args, **kwargs)
+        and q.shape[-1] % 128 == 0
+        and q.shape[1] >= 128 and k.shape[1] >= 128
+    )
+
+
+def _decode_shapes_ok(q, k, v, *args, **kwargs) -> bool:
+    return (
+        q.ndim == 4 and q.shape[1] == 1 and k.ndim == 4 and v.shape == k.shape
+        and q.shape[0] == k.shape[0] and q.shape[-1] == k.shape[-1]
+        and k.shape[2] > 0 and q.shape[2] % k.shape[2] == 0
+        and str(q.dtype) in _ATTN_DTYPES
+    )
+
+
+def _decode_tpu_ok(q, k, v, *args, **kwargs) -> bool:
+    return (_decode_shapes_ok(q, k, v, *args, **kwargs)
+            and q.shape[-1] % 128 == 0 and k.shape[1] >= 128)
+
+
 def _register_builtins() -> None:
-    from repro.kernels import adafactor_adapt, adam_adapt, lion_adapt, ref, weighted_ce
+    from repro.kernels import (adafactor_adapt, adam_adapt, flash_attn,
+                               lion_adapt, ref, weighted_ce)
 
     # -- adam_adapt: (g, m, v, g_meta, *, t, b1, b2, eps, lr) -> (out, sumsq)
     register_kernel(
@@ -299,6 +341,35 @@ def _register_builtins() -> None:
         eligible=lambda logits, targets: logits.ndim == 2,
     )
     register_kernel("weighted_ce", "ref", ref.cross_entropy)
+
+    # -- flash_attention: (q, k, v, q_pos, kv_pos, local_flag=None, *,
+    #    softcap, window, causal, chunk) -> (B, S, H, Dh); differentiable
+    #    (recompute-based custom VJP on the pallas paths).
+    register_kernel(
+        "flash_attention", "pallas-tpu",
+        lambda *a, **k: flash_attn.flash_attention(*a, interpret=False, **k),
+        eligible=_attn_tpu_ok,
+    )
+    register_kernel(
+        "flash_attention", "pallas-interpret",
+        lambda *a, **k: flash_attn.flash_attention(*a, interpret=True, **k),
+        eligible=_attn_shapes_ok,
+    )
+    register_kernel("flash_attention", "ref", flash_attn.flash_attention_ref)
+
+    # -- flash_decode: (q, k, v, q_pos, local_flag=None, *, softcap,
+    #    window) -> (B, 1, H, Dh); split-KV two-stage merge, inference-only.
+    register_kernel(
+        "flash_decode", "pallas-tpu",
+        lambda *a, **k: flash_attn.flash_decode(*a, interpret=False, **k),
+        eligible=_decode_tpu_ok,
+    )
+    register_kernel(
+        "flash_decode", "pallas-interpret",
+        lambda *a, **k: flash_attn.flash_decode(*a, interpret=True, **k),
+        eligible=_decode_shapes_ok,
+    )
+    register_kernel("flash_decode", "ref", flash_attn.flash_decode_ref)
 
 
 _register_builtins()

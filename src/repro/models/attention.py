@@ -19,9 +19,16 @@ from typing import Any, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import dispatch
 from repro.models import common as cm
 
 PyTree = Any
+
+#: ISSUE 9 dispatch seams: GQA self-attention routes through the kernel
+#: registry (flash Pallas kernels on TPU / forced backends, the literal
+#: pre-kernel jnp ops on the always-eligible ``ref`` path).
+_flash_attention = dispatch.get_kernel("flash_attention")
+_flash_decode = dispatch.get_kernel("flash_decode")
 
 
 def make_mask(q_pos, kv_pos, *, causal=True, local_flag=None, window=0):
@@ -50,8 +57,12 @@ def _chunked_sdpa(q, k, v, q_pos, kv_pos, *, chunk, softcap=0.0, local_flag=None
 
     B, S, KV, G, Dh = q.shape
     T = k.shape[1]
-    nc = T // chunk
-    assert nc * chunk == T, (T, chunk)
+    nc = -(-T // chunk)
+    if nc * chunk != T:  # ragged T: pad KV with -1-position sentinel rows
+        pad = nc * chunk - T
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kv_pos = jnp.pad(kv_pos, (0, pad), constant_values=-1)
     k_c = jnp.moveaxis(k.reshape(B, nc, chunk, KV, Dh), 1, 0)
     v_c = jnp.moveaxis(v.reshape(B, nc, chunk, KV, Dh), 1, 0)
     pos_c = kv_pos.reshape(nc, chunk)
@@ -66,6 +77,7 @@ def _chunked_sdpa(q, k, v, q_pos, kv_pos, *, chunk, softcap=0.0, local_flag=None
         s = jnp.einsum("bskgd,btkd->bkgst", q, kc) * scale  # (B,KV,G,S,C)
         s = cm.softcap(s.astype(jnp.float32), softcap)
         mask = make_mask(q_pos, pc, causal=causal, local_flag=local_flag, window=window)
+        mask = mask & (pc >= 0)[None, None, None, :]  # drop padded sentinel rows
         mask_b = jnp.broadcast_to(mask[:, :, None], s.shape)  # (B,1,1,S,C)->(B,KV,G,S,C)
         s = jnp.where(mask_b, s, NEG)
         m_new = jnp.maximum(m, jnp.max(s, axis=-1))
@@ -142,20 +154,18 @@ def self_attention(
 
     if cache is None:
         kv_pos = positions[0] if positions.ndim == 2 else positions
-        if cfg.attn_chunk and S % cfg.attn_chunk == 0 and S > cfg.attn_chunk:
-            G = H // KV
-            out = _chunked_sdpa(
-                q.reshape(B, S, KV, G, Dh), k, v, positions, kv_pos,
-                chunk=cfg.attn_chunk, softcap=cfg.attn_logit_softcap,
-                local_flag=local_flag, window=cfg.sliding_window, causal=causal,
-            )
-        else:
-            mask = (
-                make_mask(positions, kv_pos, causal=True, local_flag=local_flag, window=cfg.sliding_window)
-                if causal
-                else None
-            )
-            out = _sdpa(q, k, v, mask, softcap=cfg.attn_logit_softcap)
+        q_pos = (positions if positions.ndim == 2
+                 else jnp.broadcast_to(positions[None], (B, S)))
+        # ISSUE 9: training/prefill attention dispatches through the kernel
+        # registry. The ref backend reproduces the pre-kernel ops literally
+        # (including the chunk-gated _sdpa/_chunked_sdpa selection), so the
+        # default CPU path is unchanged; TPU / forced backends lower the
+        # blockwise flash Pallas kernel with its recompute-based VJP.
+        out = _flash_attention(
+            q, k, v, q_pos, kv_pos, local_flag,
+            softcap=cfg.attn_logit_softcap, window=cfg.sliding_window,
+            causal=causal, chunk=cfg.attn_chunk,
+        )
         new_cache = None
     else:
         # decode: insert the S new k/v rows at cache_pos, attend over the
@@ -171,9 +181,19 @@ def self_attention(
             idx = cache_pos[:, None] + jnp.arange(S)
             ck = cache["k"].at[lane, idx].set(k.astype(cache["k"].dtype))
             cv = cache["v"].at[lane, idx].set(v.astype(cache["v"].dtype))
-        kv_pos = jnp.arange(T)
-        mask = make_mask(positions, kv_pos, causal=True, local_flag=local_flag, window=cfg.sliding_window)
-        out = _sdpa(q, ck.astype(q.dtype), cv.astype(q.dtype), mask, softcap=cfg.attn_logit_softcap)
+        if S == 1:
+            # one-token decode: the split-KV kernel consumes per-lane
+            # positions directly (continuous batching's ragged lanes); the
+            # ref backend is the exact make_mask + _sdpa ops from before.
+            out = _flash_decode(
+                q, ck.astype(q.dtype), cv.astype(q.dtype), positions,
+                local_flag, softcap=cfg.attn_logit_softcap,
+                window=cfg.sliding_window,
+            )
+        else:
+            kv_pos = jnp.arange(T)
+            mask = make_mask(positions, kv_pos, causal=True, local_flag=local_flag, window=cfg.sliding_window)
+            out = _sdpa(q, ck.astype(q.dtype), cv.astype(q.dtype), mask, softcap=cfg.attn_logit_softcap)
         new_cache = {"k": ck, "v": cv}
 
     out = out.reshape(B, S, H * Dh) @ p["wo"].astype(x.dtype)

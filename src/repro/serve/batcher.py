@@ -228,11 +228,14 @@ class ContinuousBatcher:
         bucket = self.bucket_for(need)
 
         S = self.cfg.slots
-        pos = np.zeros((S,), np.int32)
+        # per-lane positions come from the cache's ragged qo_indptr layout
+        # (ISSUE 9): consecutive row-pointer differences are each active
+        # slot's live length — the same view the split-KV decode kernel
+        # keys its per-lane masking on. Inactive lanes diff to 0.
+        pos = np.diff(self.cache.qo_indptr()).astype(np.int32)
         toks = np.zeros((S,), np.int32)
         active = np.zeros((S,), bool)
         for ln in live:
-            pos[ln.slot] = self.cache.seq_lens[ln.slot]
             toks[ln.slot] = ln.tokens[-1]
             active[ln.slot] = True
 

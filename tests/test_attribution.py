@@ -506,6 +506,91 @@ def test_manual_schedule_collectives_by_phase(manual_attr):
     assert ph["allreduce_flat"]["collective_bytes"] > 0
 
 
+# ISSUE 9: the single-sync census must be invariant to the attention
+# backend. With the flash Pallas kernel (interpret mode) forcibly
+# dispatched, the 8-device manual schedule still shows EXACTLY unroll+1
+# all-reduces and the attribution/event streams stay obs-clean
+# (schema-valid, fractions summing to 1). Dims are tiny: interpret mode
+# unrolls the kernel grid into the HLO, so this pins structure, not speed.
+FLASH_MANUAL_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+os.environ["REPRO_KERNEL_BACKEND"] = "pallas-interpret"
+import json
+import jax
+import jax.numpy as jnp
+
+from repro import configs, optim
+from repro.core import EngineConfig, init_state, problems
+from repro.kernels import dispatch
+from repro.launch import distributed as dist
+from repro.launch.mesh import AxisType, make_mesh
+from repro.models import Model
+from repro.obs import profile as profile_mod
+
+UNROLL = 2
+mesh = make_mesh((8, 1), ("data", "model"), axis_types=(AxisType.Auto,) * 2)
+cfg = configs.get_smoke_config("bert-base").replace(
+    d_model=64, num_layers=1, num_labels=4, num_heads=2, num_kv_heads=2,
+    head_dim=32, d_ff=128, remat=False)
+model = Model(cfg)
+spec = problems.make_data_optimization_spec(model.classifier_per_example,
+                                            reweight=True)
+lam = problems.init_data_optimization_lam(jax.random.PRNGKey(1), reweight=True)
+theta = model.init(jax.random.PRNGKey(0))
+base_opt, meta_opt = optim.adam(1e-3), optim.adam(1e-3)
+K, B, S, MB = UNROLL, 16, 8, 8
+bb = {"tokens": jnp.zeros((K, B, S), jnp.int32), "y": jnp.zeros((K, B), jnp.int32)}
+mb = {"tokens": jnp.zeros((MB, S), jnp.int32), "y": jnp.zeros((MB,), jnp.int32)}
+ecfg = EngineConfig(method="sama", unroll_steps=K)
+state = init_state(theta, lam, base_opt, meta_opt, scale=ecfg.scale)
+with mesh:
+    manual = jax.jit(dist.make_manual_step(spec, base_opt, meta_opt, ecfg, mesh))
+    compiled = manual.lower(state, bb, mb).compile()
+attr = profile_mod.attribute(compiled, n_devices=8)
+picks = sorted({(k, b) for k, b, _ in dispatch.dispatch_log()
+                if k == "flash_attention"})
+print(json.dumps({"unroll": UNROLL, "attribution": attr,
+                  "flash_picks": picks}))
+"""
+
+
+@pytest.fixture(scope="module")
+def manual_attr_flash():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run(
+        [sys.executable, "-c", FLASH_MANUAL_SCRIPT], capture_output=True,
+        text=True, env=env,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        timeout=600,
+    )
+    assert out.returncode == 0, out.stderr[-3000:]
+    return json.loads(out.stdout.strip().splitlines()[-1])
+
+
+def test_manual_census_invariant_under_flash_dispatch(manual_attr_flash):
+    # the kernel actually lowered (not a silent ref fallback)
+    assert ["flash_attention", "pallas-interpret"] in [
+        list(p) for p in manual_attr_flash["flash_picks"]]
+    attr = manual_attr_flash["attribution"]
+    unroll = manual_attr_flash["unroll"]
+    ph = attr["phases"]
+    assert ph["base_unroll"]["collective_count"] == unroll
+    assert ph["allreduce_flat"]["collective_count"] == 1
+    assert attr["total"]["collective_count"] == unroll + 1
+    for quiet in ("meta_pass", "cd_passes"):
+        assert ph[quiet]["collective_count"] == 0
+
+
+def test_manual_flash_attribution_stays_obs_clean(manual_attr_flash):
+    attr = manual_attr_flash["attribution"]
+    assert validate_attribution(attr) == []
+    assert sum(b["flop_frac"]
+               for b in attr["phases"].values()) == pytest.approx(1.0)
+
+
 # ---------------------------------------------------------------------------
 # the profile CLI
 # ---------------------------------------------------------------------------

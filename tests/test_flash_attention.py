@@ -1,0 +1,384 @@
+"""ISSUE 9 oracle-parity battery for the flash attention kernels.
+
+The pallas kernels (interpret mode — CPU container, TPU is the compile
+target) are pinned against the ``ref`` twins, which are by construction
+the literal pre-kernel ``models/attention.py`` ops. Coverage:
+
+* forward parity across GQA group sizes, S/T not multiples of the
+  block, causal x sliding-window x softcap combinations, bf16/f32
+  (f32 forward <= 1e-5);
+* VJP parity on the q/k/v cotangents (recompute-based backward);
+* the traced ``local_flag`` riding into the kernel inside a jitted
+  ``lax.scan`` over heterogeneous local/global layers;
+* split-KV decode: two-stage LSE merge == single-pass softmax for
+  uneven/single/lane-masked splits, ragged per-lane positions;
+* the ``_chunked_sdpa`` ragged-T fix (T % chunk != 0 pads + masks
+  instead of asserting);
+* dispatch eligibility fall-through to ``ref``;
+* decode-through-``qo_indptr``: continuous batching with the interpret
+  kernel forced is token-identical to the serial ``greedy_generate``
+  reference on mixed-length staggered lanes.
+
+A deterministic parametrized core always runs; a hypothesis section
+widens the sweep where hypothesis is installed (same skip idiom as
+tests/test_kernels.py, but without skipping the deterministic core).
+"""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs, serve
+from repro.kernels import dispatch, flash_attn
+from repro.models import attention as attn
+from repro.models.model import Model
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+FWD_TOL = 1e-5   # ISSUE 9 acceptance: f32 forward parity
+GRAD_TOL = 5e-5  # f32 VJP parity on q/k/v cotangents
+BF16_TOL = 2e-2
+
+
+def _mk(rng, shape, dtype=jnp.float32):
+    return jnp.asarray(rng.standard_normal(shape), jnp.float32).astype(dtype)
+
+
+def _inputs(seed, B, S, H, KV, Dh, dtype=jnp.float32):
+    rng = np.random.default_rng(seed)
+    q = _mk(rng, (B, S, H, Dh), dtype)
+    k = _mk(rng, (B, S, KV, Dh), dtype)
+    v = _mk(rng, (B, S, KV, Dh), dtype)
+    q_pos = jnp.broadcast_to(jnp.arange(S), (B, S))
+    kv_pos = jnp.arange(S)
+    return q, k, v, q_pos, kv_pos
+
+
+# (B, S, H, KV, Dh, softcap, window, causal) — S deliberately not a
+# multiple of the forced block_q/block_k = 8 in most rows, group sizes
+# G = H/KV in {1, 2, 3, 4}.
+CASES = [
+    (2, 7, 4, 2, 16, 0.0, 0, True),      # G=2, ragged S
+    (1, 13, 8, 2, 32, 30.0, 5, True),    # G=4, softcap + window
+    (2, 5, 2, 2, 8, 0.0, 3, True),       # G=1, window only
+    (1, 9, 6, 3, 16, 0.0, 0, False),     # G=2, non-causal (encoder)
+    (1, 16, 4, 1, 16, 50.0, 0, True),    # G=4, MQA, block-aligned S
+    (2, 11, 4, 4, 8, 20.0, 4, True),     # G=1, everything on, ragged
+]
+
+
+def _run_pair(case, dtype):
+    B, S, H, KV, Dh, softcap, window, causal = case
+    q, k, v, q_pos, kv_pos = _inputs(hash(case) % 2**31, B, S, H, KV, Dh, dtype)
+    lf = jnp.asarray(True) if window else None
+    kw = dict(softcap=softcap, window=window, causal=causal)
+    ref = flash_attn.flash_attention_ref(q, k, v, q_pos, kv_pos, lf, **kw)
+    got = flash_attn.flash_attention(q, k, v, q_pos, kv_pos, lf,
+                                     interpret=True, block_q=8, block_k=8, **kw)
+    return ref, got, (q, k, v, q_pos, kv_pos, lf, kw)
+
+
+@pytest.mark.parametrize("case", CASES)
+def test_forward_matches_ref_f32(case):
+    ref, got, _ = _run_pair(case, jnp.float32)
+    assert got.dtype == ref.dtype
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref), atol=FWD_TOL,
+                               rtol=0)
+
+
+@pytest.mark.parametrize("case", [CASES[0], CASES[1], CASES[5]])
+def test_forward_matches_ref_bf16(case):
+    ref, got, _ = _run_pair(case, jnp.bfloat16)
+    assert got.dtype == jnp.bfloat16
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(ref, np.float32),
+                               atol=BF16_TOL, rtol=BF16_TOL)
+
+
+@pytest.mark.parametrize("case", CASES)
+def test_vjp_matches_ref(case):
+    _, _, (q, k, v, q_pos, kv_pos, lf, kw) = _run_pair(case, jnp.float32)
+    cot = _mk(np.random.default_rng(1), q.shape)
+
+    def loss(fn, interpret):
+        extra = dict(interpret=True, block_q=8, block_k=8) if interpret else {}
+        return lambda q, k, v: jnp.sum(
+            fn(q, k, v, q_pos, kv_pos, lf, **kw, **extra) * cot)
+
+    g_ref = jax.grad(loss(flash_attn.flash_attention_ref, False),
+                     argnums=(0, 1, 2))(q, k, v)
+    g_got = jax.grad(loss(flash_attn.flash_attention, True),
+                     argnums=(0, 1, 2))(q, k, v)
+    for name, a, b in zip("qkv", g_got, g_ref):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=GRAD_TOL, rtol=1e-4,
+                                   err_msg=f"d{name} cotangent mismatch")
+
+
+def test_local_flag_traced_in_scan():
+    """Heterogeneous local/global layers inside one jitted lax.scan: the
+    window gate must ride into the kernel as a traced scalar (no retrace,
+    no concretization error)."""
+
+    B, S, H, KV, Dh, window = 1, 9, 4, 2, 16, 4
+    q, k, v, q_pos, kv_pos = _inputs(3, B, S, H, KV, Dh)
+    flags = jnp.asarray([True, False, True, True])
+
+    def run(fn, **extra):
+        def body(x, flag):
+            out = fn(q + x, k, v, q_pos, kv_pos, flag, softcap=0.0,
+                     window=window, causal=True, **extra)
+            return x + jnp.mean(out), jnp.sum(out)
+        return jax.jit(lambda: jax.lax.scan(body, 0.0, flags))()
+
+    _, ref = run(flash_attn.flash_attention_ref)
+    _, got = run(flash_attn.flash_attention, interpret=True,
+                 block_q=8, block_k=8)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref), atol=1e-4,
+                               rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# _chunked_sdpa ragged-T regression (satellite 3)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("t,chunk", [(13, 4), (7, 8), (9, 4)])
+def test_chunked_sdpa_ragged_t(t, chunk):
+    """T % chunk != 0 pads + masks instead of the old hard assert."""
+
+    B, KV, G, Dh = 2, 2, 2, 16
+    rng = np.random.default_rng(t * chunk)
+    q5 = _mk(rng, (B, t, KV, G, Dh))
+    k = _mk(rng, (B, t, KV, Dh))
+    v = _mk(rng, (B, t, KV, Dh))
+    q_pos = jnp.broadcast_to(jnp.arange(t), (B, t))
+    kv_pos = jnp.arange(t)
+    got = attn._chunked_sdpa(q5, k, v, q_pos, kv_pos, chunk=chunk)
+    mask = attn.make_mask(q_pos, kv_pos, causal=True)
+    ref = attn._sdpa(q5.reshape(B, t, KV * G, Dh), k, v, mask)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref), atol=2e-5,
+                               rtol=1e-4)
+
+
+def test_self_attention_ragged_seq_with_chunk():
+    """The chunk gate no longer requires S % chunk == 0: a ragged prefill
+    length routes through the padded chunked path and matches the
+    unchunked config."""
+
+    cfg = configs.get_smoke_config("gemma3-1b")
+    m = Model(cfg.replace(attn_chunk=4))
+    m0 = Model(cfg.replace(attn_chunk=0))
+    params = m.init(jax.random.PRNGKey(0))
+    toks = jnp.asarray(np.random.default_rng(0).integers(
+        0, cfg.vocab_size, (2, 13)), jnp.int32)
+    a = m.forward(params, {"tokens": toks})
+    b = m0.forward(params, {"tokens": toks})
+    a = a[0] if isinstance(a, tuple) else a
+    b = b[0] if isinstance(b, tuple) else b
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-4,
+                               rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# split-KV decode (satellite 2)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n_splits", [1, 2, 3, 5])
+@pytest.mark.parametrize("softcap,window", [(0.0, 0), (25.0, 0), (0.0, 3)])
+def test_decode_matches_ref_across_splits(n_splits, softcap, window):
+    """Uneven splits (T=11 over 1/2/3/5 spans, incl. fully-padded tail
+    spans) reproduce the single-pass softmax; staggered per-lane
+    positions include a pos=0 lane (the trash-lane shape)."""
+
+    B, T, H, KV, Dh = 3, 11, 4, 2, 16
+    rng = np.random.default_rng(n_splits)
+    q = _mk(rng, (B, 1, H, Dh))
+    k = _mk(rng, (B, T, KV, Dh))
+    v = _mk(rng, (B, T, KV, Dh))
+    pos = jnp.asarray([[10], [4], [0]], jnp.int32)  # staggered; lane 2 ~ trash
+    lf = jnp.asarray(True) if window else None
+    ref = flash_attn.flash_decode_ref(q, k, v, pos, lf, softcap=softcap,
+                                      window=window)
+    got = flash_attn.flash_decode(q, k, v, pos, lf, softcap=softcap,
+                                  window=window, interpret=True,
+                                  n_splits=n_splits)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref), atol=FWD_TOL,
+                               rtol=0)
+
+
+def test_merge_partials_is_single_pass_softmax():
+    """Stage-2 LSE combine over a hand-built uneven decomposition equals
+    the one-shot softmax."""
+
+    G, Dh, T = 4, 8, 10
+    rng = np.random.default_rng(0)
+    s = jnp.asarray(rng.standard_normal((G, T)), jnp.float32)
+    vv = jnp.asarray(rng.standard_normal((T, Dh)), jnp.float32)
+    full = jax.nn.softmax(s, axis=-1) @ vv
+
+    spans = [(0, 3), (3, 4), (4, 10)]  # uneven
+    o_parts, lse_parts = [], []
+    for lo, hi in spans:
+        sl = s[:, lo:hi]
+        m = jnp.max(sl, axis=-1)
+        p = jnp.exp(sl - m[:, None])
+        l = jnp.sum(p, axis=-1)
+        o_parts.append((p @ vv[lo:hi]) / l[:, None])
+        lse_parts.append(m + jnp.log(l))
+    got = flash_attn.merge_partials(jnp.stack(o_parts, 0), jnp.stack(lse_parts, 0))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(full), atol=1e-6,
+                               rtol=1e-6)
+
+    # single split: identity
+    one = flash_attn.merge_partials(got[None], jnp.zeros((1, G)))
+    np.testing.assert_allclose(np.asarray(one), np.asarray(got), atol=0, rtol=0)
+
+    # lane-masked (empty/trash) splits carry lse = NEG and contribute 0
+    o_pad = jnp.concatenate([jnp.stack(o_parts, 0),
+                             jnp.full((2, G, Dh), 123.0)], 0)
+    lse_pad = jnp.concatenate([jnp.stack(lse_parts, 0),
+                               jnp.full((2, G), flash_attn.NEG)], 0)
+    masked = flash_attn.merge_partials(o_pad, lse_pad)
+    np.testing.assert_allclose(np.asarray(masked), np.asarray(full), atol=1e-6,
+                               rtol=1e-6)
+
+
+def test_pick_splits_occupancy():
+    assert flash_attn.pick_splits(64, 1) == 1           # short KV: no split
+    assert flash_attn.pick_splits(4096, 1) >= 8         # one lane: fan out
+    assert flash_attn.pick_splits(4096, 256) == 1       # grid already full
+    assert flash_attn.pick_splits(10**6, 1) <= 16       # merge cost cap
+    for t in (1, 100, 1000):
+        assert flash_attn.pick_splits(t, 8) >= 1
+
+
+# ---------------------------------------------------------------------------
+# dispatch seam
+# ---------------------------------------------------------------------------
+
+
+def test_ineligible_dtype_falls_through_to_ref():
+    """A dtype the f32-accumulating kernel doesn't support (int32) is
+    ineligible: even a forced pallas backend degrades to ref (never an
+    error)."""
+
+    B, S, H, KV, Dh = 1, 6, 2, 2, 8
+    _, _, _, q_pos, kv_pos = _inputs(0, B, S, H, KV, Dh)
+    q = jnp.ones((B, S, H, Dh), jnp.int32)
+    k = jnp.ones((B, S, KV, Dh), jnp.int32)
+    v = jnp.ones((B, S, KV, Dh), jnp.int32)
+    fn = dispatch.get_kernel("flash_attention", backend="pallas-interpret")
+    dispatch.clear_dispatch_log()
+    out = fn(q, k, v, q_pos, kv_pos)
+    assert out.shape == (B, S, H, Dh)
+    log = [e for e in dispatch.dispatch_log() if e[0] == "flash_attention"]
+    assert log and log[-1][1] == "ref" and "ineligible" in log[-1][2]
+
+
+def test_default_cpu_dispatch_is_ref():
+    q, k, v, q_pos, kv_pos = _inputs(0, 1, 6, 2, 2, 8)
+    dispatch.clear_dispatch_log()
+    fn = dispatch.get_kernel("flash_attention")
+    fn(q, k, v, q_pos, kv_pos)
+    log = [e for e in dispatch.dispatch_log() if e[0] == "flash_attention"]
+    assert log and log[-1][1] == "ref"
+
+
+# ---------------------------------------------------------------------------
+# decode-through-qo_indptr: continuous batching vs serial reference with
+# the interpret kernel forced (satellite 2, the serving pin)
+# ---------------------------------------------------------------------------
+
+
+def test_continuous_batching_token_identical_with_flash_forced(monkeypatch):
+    """Mixed-length staggered lanes through queue -> batcher (per-lane pos
+    from ``PagedCache.qo_indptr()``) -> split-KV decode, with
+    REPRO_KERNEL_BACKEND=pallas-interpret forced at trace time, emit
+    EXACTLY the serial greedy_generate token ids (itself running the
+    interpret kernel on its dense cache)."""
+
+    monkeypatch.setenv(dispatch.ENV_VAR, "pallas-interpret")
+    cfg = configs.get_smoke_config("gemma3-1b")
+    m = Model(cfg)  # fresh Model: identity-keyed jit caches retrace under the env
+    params = m.init(jax.random.PRNGKey(0))
+
+    lens, gens = [5, 9, 2], [4, 3, 5]
+    prompts = [np.random.default_rng(i).integers(
+        0, cfg.vocab_size, (L,)).astype(np.int32) for i, L in enumerate(lens)]
+    ref = [serve.greedy_generate(m, params, jnp.asarray(p[None]), g, 24)[0]
+           for p, g in zip(prompts, gens)]
+
+    dispatch.clear_dispatch_log()
+    ex = serve.ServeExecutor(m, params, serve.ServeConfig(
+        slots=2, page_size=4, max_len=24, max_new_tokens=8))
+    ids = [ex.submit(p, max_new_tokens=g) for p, g in zip(prompts, gens)]
+    stats = ex.run()
+
+    for rid, r in zip(ids, ref):
+        res = ex.results[rid]
+        assert res.status == serve.STATUS_OK
+        assert res.tokens == [int(t) for t in r]
+    assert stats.completed == len(lens) and stats.errors == 0
+    # the one-token path actually lowered the split-KV interpret kernel
+    decode_picks = {e[1] for e in dispatch.dispatch_log()
+                    if e[0] == "flash_decode"}
+    assert "pallas-interpret" in decode_picks
+
+
+# ---------------------------------------------------------------------------
+# hypothesis sweep (widens the deterministic grid where installed)
+# ---------------------------------------------------------------------------
+
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=12, deadline=None)
+    @given(
+        s=st.integers(2, 17),
+        g=st.sampled_from([1, 2, 4]),
+        kv=st.sampled_from([1, 2]),
+        dh=st.sampled_from([8, 16]),
+        softcap=st.sampled_from([0.0, 30.0]),
+        window=st.sampled_from([0, 3]),
+        causal=st.booleans(),
+        seed=st.integers(0, 2**16),
+    )
+    def test_forward_parity_property(s, g, kv, dh, softcap, window, causal, seed):
+        q, k, v, q_pos, kv_pos = _inputs(seed, 1, s, g * kv, kv, dh)
+        lf = jnp.asarray(True) if window else None
+        kw = dict(softcap=softcap, window=window, causal=causal)
+        ref = flash_attn.flash_attention_ref(q, k, v, q_pos, kv_pos, lf, **kw)
+        got = flash_attn.flash_attention(q, k, v, q_pos, kv_pos, lf,
+                                         interpret=True, block_q=8,
+                                         block_k=8, **kw)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                                   atol=FWD_TOL, rtol=0)
+
+    @settings(max_examples=8, deadline=None)
+    @given(
+        t=st.integers(1, 23),
+        n_splits=st.integers(1, 6),
+        pos0=st.integers(0, 22),
+        softcap=st.sampled_from([0.0, 25.0]),
+        seed=st.integers(0, 2**16),
+    )
+    def test_decode_parity_property(t, n_splits, pos0, softcap, seed):
+        rng = np.random.default_rng(seed)
+        q = _mk(rng, (2, 1, 4, 8))
+        k = _mk(rng, (2, t, 2, 8))
+        v = _mk(rng, (2, t, 2, 8))
+        pos = jnp.asarray([[min(pos0, t - 1)], [0]], jnp.int32)
+        ref = flash_attn.flash_decode_ref(q, k, v, pos, softcap=softcap)
+        got = flash_attn.flash_decode(q, k, v, pos, softcap=softcap,
+                                      interpret=True, n_splits=n_splits)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                                   atol=FWD_TOL, rtol=0)

@@ -41,7 +41,8 @@ def _clean_log():
 
 def test_builtin_matrix():
     assert dispatch.available_kernels() == (
-        "adafactor_adapt", "adam_adapt", "lion_adapt", "weighted_ce")
+        "adafactor_adapt", "adam_adapt", "flash_attention", "flash_decode",
+        "lion_adapt", "weighted_ce")
     for name in dispatch.available_kernels():
         assert dispatch.kernel_backends(name) == dispatch.BACKENDS  # all three
 
