@@ -42,8 +42,10 @@ def make_requests(cfg, n: int, prompt_len: int, gen: int, seed: int = 0):
 
 
 def run_continuous(model, params, prompts, gens, scfg: serve.ServeConfig,
-                   obs=None):
+                   obs=None, inject_hang=None):
     ex = serve.ServeExecutor(model, params, scfg, obs=obs)
+    if inject_hang:
+        ex.inject_hang(inject_hang)
     ids = [ex.submit(p, max_new_tokens=g) for p, g in zip(prompts, gens)]
     stats = ex.run()
     return ex, ids, stats
@@ -72,7 +74,22 @@ def main():
                          "`python -m repro.obs.report`")
     ap.add_argument("--chrome-trace", default=None, metavar="PATH",
                     help="write a Perfetto/chrome://tracing span timeline "
-                         "(serve ticks, or per-request spans under --serial)")
+                         "(serve ticks + per-lane request tracks, or "
+                         "per-request spans under --serial)")
+    ap.add_argument("--flight-dir", default=None, metavar="DIR",
+                    help="write flight-recorder postmortem bundles here "
+                         "(read with `repro.obs.report --postmortem`)")
+    ap.add_argument("--hang-deadline-s", type=float, default=None,
+                    help="hang watchdog: dump a postmortem when no tick "
+                         "completes within this deadline")
+    ap.add_argument("--inject-hang", type=float, default=None,
+                    metavar="SECONDS",
+                    help="fault injection: stall the tick loop once for "
+                         "SECONDS (CI exercises the watchdog with this)")
+    ap.add_argument("--slo-budget", type=float, default=None,
+                    help="allowed deadline-miss fraction; arms the SLO "
+                         "burn-rate alert (which also triggers a postmortem "
+                         "dump)")
     args = ap.parse_args()
 
     cfg = configs.get_smoke_config(args.arch) if args.smoke else configs.get_config(args.arch)
@@ -87,7 +104,8 @@ def main():
     if args.obs_log:
         from repro import obs as obs_mod
         obs = obs_mod.make_obs(log_path=args.obs_log,
-                               run_id=f"serve-{cfg.name}")
+                               run_id=f"serve-{cfg.name}",
+                               slo_budget=args.slo_budget)
         obs_mod.set_default(obs)
         obs.emit("run", "run_start", data={
             "cli": "serve", "arch": cfg.name,
@@ -140,38 +158,57 @@ def main():
         scfg = serve.ServeConfig(
             slots=args.slots, page_size=pg, max_len=max_len,
             max_new_tokens=args.gen, default_timeout_s=args.timeout_s,
+            flight_dir=args.flight_dir,
+            hang_deadline_s=args.hang_deadline_s,
         )
         if tracer is not None:
             from repro import obs as obs_mod
             with obs_mod.activate(tracer):
                 ex, ids, stats = run_continuous(model, params, prompts, gens,
-                                                scfg, obs=obs)
+                                                scfg, obs=obs,
+                                                inject_hang=args.inject_hang)
         else:
             ex, ids, stats = run_continuous(model, params, prompts, gens, scfg,
-                                            obs=obs)
+                                            obs=obs,
+                                            inject_hang=args.inject_hang)
         payload = {
             "mode": "continuous", "arch": cfg.name, "requests": args.requests,
             "statuses": {s: sum(ex.results[i].status == s for i in ids)
                          for s in set(ex.results[i].status for i in ids)},
             "qps": round(stats.qps, 2),
             "latency_us": stats.latency.as_dict(),
+            "ttft_us": stats.ttft.as_dict(),
+            "tpot_us": stats.tpot.as_dict(),
+            "queue_wait_us": stats.queue_wait.as_dict(),
+            "lanes": stats.lanes,
             "decode_steps": stats.steps,
             "memory": stats.memory,
             "sample": ex.results[ids[0]].tokens,
         }
+        if ex.flight is not None and ex.flight.dumps:
+            payload["postmortems"] = list(ex.flight.dumps)
         record = perf.PerfRecord(
             name=f"serve_{cfg.name}",
             latency=stats.latency.as_dict() if stats.latency.n else None,
             samples_per_s=stats.qps if np.isfinite(stats.qps) else None,
             extra={"requests": args.requests, "gen": args.gen,
                    "slots": args.slots, "decode_steps": stats.steps,
-                   "cache_peak_bytes": stats.memory["peak_bytes"]},
+                   "cache_peak_bytes": stats.memory["peak_bytes"],
+                   "ttft_p50_us": stats.ttft.p50_us if stats.ttft.n else None,
+                   "tpot_p50_us": stats.tpot.p50_us if stats.tpot.n else None},
         )
     if tracer is not None:
         from repro import obs as obs_mod
-        obs_mod.write_chrome_trace(args.chrome_trace, tracer.spans)
+        # continuous mode: each decode lane becomes its own track, built
+        # from the flight ring's lifecycle events (always on by default)
+        lane_events = []
+        if not args.serial and ex.flight is not None:
+            lane_events = obs_mod.lane_chrome_events(ex.flight.events())
+        obs_mod.write_chrome_trace(args.chrome_trace, tracer.spans,
+                                   extra_events=lane_events)
         payload["chrome_trace"] = {"path": args.chrome_trace,
-                                   "spans": len(tracer.spans)}
+                                   "spans": len(tracer.spans),
+                                   "lane_events": len(lane_events)}
     payload["perf"] = record.as_dict()
     print(json.dumps(payload))
     if obs is not None:

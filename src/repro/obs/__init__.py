@@ -36,16 +36,19 @@ import math
 from typing import Any, Dict, List, Optional
 
 from . import events as events_mod
+from . import flight as flight_mod
 from . import health as health_mod
 from . import metrics as metrics_mod
 from . import trace as trace_mod
 from .events import (ConsoleSink, Event, JsonlSink, NullSink, RingSink, Sink,
                      TeeSink, make_event, read_jsonl, read_jsonl_stats,
                      validate_event, validate_jsonl)
-from .health import Alert, HealthMonitor
+from .flight import FlightRecorder, HangWatchdog, load_bundle, validate_bundle
+from .health import Alert, HealthMonitor, default_monitors
 from .metrics import Counter, Gauge, Histogram, MetricsRegistry, packed_read
 from .trace import PHASES, Span, Tracer, activate, active_tracer, \
-    chrome_trace, phase, span_tree_summary, write_chrome_trace
+    chrome_trace, lane_chrome_events, phase, span_tree_summary, \
+    write_chrome_trace
 
 __all__ = [
     "Obs", "NULL_OBS", "make_obs", "set_default", "get_default",
@@ -54,8 +57,9 @@ __all__ = [
     "validate_event", "validate_jsonl",
     "Counter", "Gauge", "Histogram", "MetricsRegistry", "packed_read",
     "Tracer", "Span", "phase", "activate", "active_tracer", "chrome_trace",
-    "write_chrome_trace", "span_tree_summary", "PHASES",
-    "HealthMonitor", "Alert",
+    "write_chrome_trace", "span_tree_summary", "PHASES", "lane_chrome_events",
+    "HealthMonitor", "Alert", "default_monitors",
+    "FlightRecorder", "HangWatchdog", "validate_bundle", "load_bundle",
 ]
 
 
@@ -213,11 +217,12 @@ NULL_OBS = Obs(sink=NullSink(), enabled=False, monitor=False)
 
 def make_obs(log_path: Optional[str] = None, *, console: bool = False,
              ring: int = 0, run_id: Optional[str] = None,
-             monitor: bool = True) -> Obs:
+             monitor: bool = True, slo_budget: Optional[float] = None) -> Obs:
     """Build an enabled Obs from CLI-ish knobs: JSONL file sink
     (``log_path``), legacy-stdout console sink, and/or a ring buffer.
     With no sinks requested you get a 1024-event ring (events are kept,
-    nothing is printed or written)."""
+    nothing is printed or written). ``slo_budget`` (allowed deadline-miss
+    fraction) arms ServeSLOMonitor's burn-rate mode."""
 
     sinks: List[Sink] = []
     if log_path:
@@ -229,7 +234,10 @@ def make_obs(log_path: Optional[str] = None, *, console: bool = False,
     if not sinks:
         sinks.append(RingSink())
     sink: Sink = sinks[0] if len(sinks) == 1 else TeeSink(sinks)
-    return Obs(sink=sink, run_id=run_id, monitor=monitor)
+    health = None
+    if monitor and slo_budget is not None:
+        health = HealthMonitor(monitors=default_monitors(slo_budget))
+    return Obs(sink=sink, run_id=run_id, monitor=monitor, health=health)
 
 
 _default_obs: Obs = NULL_OBS

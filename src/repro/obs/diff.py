@@ -38,13 +38,36 @@ class PhaseDelta:
         return dataclasses.asdict(self)
 
 
+#: serve terminal-event metric -> pseudo-phase name; the serve latency
+#: splits diff exactly like engine phases (same µs unit, so the
+#: unit-mismatch refusal semantics are untouched)
+SERVE_METRIC_PHASES = (
+    ("ttft_us", "serve:ttft"),
+    ("tpot_us", "serve:tpot"),
+    ("queue_wait_us", "serve:queue_wait"),
+    ("resident_us", "serve:resident"),
+)
+
+_SERVE_TERMINALS = ("done", "deadline_miss", "shed", "rejected", "error")
+
+
 def phase_costs_from_events(events) -> Dict[str, float]:
     """Mean runtime-span µs per phase name (mean, not total, so streams
-    of different lengths compare)."""
+    of different lengths compare). Serve streams additionally contribute
+    ``serve:*`` pseudo-phases — the mean TTFT/TPOT/queue-wait/resident µs
+    over terminal request events — so two serving runs diff on the
+    request-latency splits, not just tick spans."""
 
     total: Dict[str, float] = {}
     n: Dict[str, int] = {}
     for e in events:
+        if e.kind == "serve" and e.name in _SERVE_TERMINALS:
+            for key, phase in SERVE_METRIC_PHASES:
+                v = e.data.get(key)
+                if v is not None:
+                    total[phase] = total.get(phase, 0.0) + float(v)
+                    n[phase] = n.get(phase, 0) + 1
+            continue
         if e.kind != "span" or e.data.get("traced"):
             continue
         total[e.name] = total.get(e.name, 0.0) + float(e.data.get("dur_us", 0.0))

@@ -265,6 +265,15 @@ class ServeSLOMonitor(Monitor):
 
     Terminal events: ``serve/done`` (completed in deadline),
     ``serve/deadline_miss``, ``serve/shed``.
+
+    **Burn-rate mode** (``budget`` set): alongside the plain rate
+    thresholds, the monitor tracks the miss rate over a *fast* window
+    (catches spikes quickly) and the main *slow* window (confirms they
+    are sustained, not one unlucky batch). When BOTH windows burn the
+    deadline-miss budget faster than ``burn_threshold``× the allowed
+    rate, it fires a ``degraded`` alert immediately — the multi-window
+    multi-burn-rate SLO alerting shape, and the signal the flight
+    recorder's alert-escalation trigger dumps a postmortem on.
     """
 
     name = "serve_slo"
@@ -272,11 +281,18 @@ class ServeSLOMonitor(Monitor):
     TERMINAL = ("done", "deadline_miss", "shed")
 
     def __init__(self, window: int = 100, warn_rate: float = 0.10,
-                 degraded_rate: float = 0.30, min_events: int = 10):
+                 degraded_rate: float = 0.30, min_events: int = 10,
+                 budget: Optional[float] = None, fast_window: int = 20,
+                 burn_threshold: float = 4.0):
         self.warn_rate = warn_rate
         self.degraded_rate = degraded_rate
         self.min_events = min_events
+        self.budget = budget
+        self.burn_threshold = burn_threshold
         self._recent: "deque[bool]" = deque(maxlen=window)  # True = miss/shed
+        self._fast: "deque[bool]" = deque(maxlen=fast_window)
+        self._burning = False
+        self.burn_alerts = 0
         self.totals = {k: 0 for k in self.TERMINAL}
         self._severity = "ok"
 
@@ -286,10 +302,12 @@ class ServeSLOMonitor(Monitor):
         bad = event.name != "done"
         self.totals[event.name] += 1
         self._recent.append(bad)
-        if len(self._recent) < self.min_events:
-            return []
-        rate = sum(self._recent) / len(self._recent)
+        self._fast.append(bad)
         alerts: List[Alert] = []
+        alerts.extend(self._observe_burn(event))
+        if len(self._recent) < self.min_events:
+            return alerts
+        rate = sum(self._recent) / len(self._recent)
         if rate > self.degraded_rate and self._severity != "degraded":
             self._severity = "degraded"
             alerts.append(self._alert(
@@ -302,11 +320,39 @@ class ServeSLOMonitor(Monitor):
                 "were shed", event, rate=rate))
         return alerts
 
+    def _observe_burn(self, event: Event) -> List[Alert]:
+        if self.budget is None or len(self._fast) < self._fast.maxlen \
+                or len(self._recent) < self.min_events:
+            return []
+        fast_rate = sum(self._fast) / len(self._fast)
+        slow_rate = sum(self._recent) / len(self._recent)
+        burn = self.burn_threshold * self.budget
+        if fast_rate >= burn and slow_rate >= burn:
+            if self._burning:
+                return []  # one alert per sustained burn episode
+            self._burning = True
+            self.burn_alerts += 1
+            self._severity = "degraded"
+            return [self._alert(
+                "degraded",
+                f"SLO burn: miss rate {fast_rate:.0%} (fast) / "
+                f"{slow_rate:.0%} (slow) >= {self.burn_threshold:g}x the "
+                f"{self.budget:.0%} budget", event,
+                fast_rate=fast_rate, slow_rate=slow_rate,
+                budget=self.budget, burn_threshold=self.burn_threshold)]
+        if fast_rate < burn:
+            self._burning = False  # episode over; re-arm
+        return []
+
     def verdict(self) -> Dict[str, Any]:
         n = sum(self.totals.values())
         bad = self.totals["deadline_miss"] + self.totals["shed"]
-        return {"status": self._severity, "requests": n, **self.totals,
-                "detail": f"{bad}/{n} requests missed deadline or shed"}
+        out = {"status": self._severity, "requests": n, **self.totals,
+               "detail": f"{bad}/{n} requests missed deadline or shed"}
+        if self.budget is not None:
+            out["budget"] = self.budget
+            out["burn_alerts"] = self.burn_alerts
+        return out
 
 
 class QueueDepthMonitor(Monitor):
@@ -356,9 +402,12 @@ class QueueDepthMonitor(Monitor):
                 "detail": f"peak queue occupancy {self.max_frac:.0%}"}
 
 
-def default_monitors() -> List[Monitor]:
+def default_monitors(slo_budget: Optional[float] = None) -> List[Monitor]:
+    """The built-in monitor set. ``slo_budget`` (an allowed deadline-miss
+    fraction, e.g. 0.05) arms ServeSLOMonitor's burn-rate mode."""
+
     return [NonfiniteMonitor(), LossScaleThrashMonitor(), CensusMonitor(),
-            ServeSLOMonitor(), QueueDepthMonitor()]
+            ServeSLOMonitor(budget=slo_budget), QueueDepthMonitor()]
 
 
 class HealthMonitor:

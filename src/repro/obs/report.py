@@ -29,6 +29,13 @@ from .events import Event, read_jsonl_stats, validate_jsonl
 from .health import replay
 from .trace import PHASES
 
+#: serve-plane terminal event names (the executor's TERMINAL_EVENT
+#: values) — every trace ends in exactly one of these
+TERMINAL_NAMES = ("done", "deadline_miss", "shed", "rejected", "error")
+
+#: non-terminal lifecycle stages in canonical order
+STAGE_NAMES = ("enqueued", "admitted", "prefill_start", "first_token", "token")
+
 
 def _fmt_us(us: float) -> str:
     if us >= 1e6:
@@ -36,6 +43,81 @@ def _fmt_us(us: float) -> str:
     if us >= 1e3:
         return f"{us / 1e3:.1f}ms"
     return f"{us:.0f}us"
+
+
+def _pct_dict(samples: List[float]) -> Optional[Dict[str, float]]:
+    """{p50,p90,p99,n} over raw samples (sorted-index percentiles, same
+    convention as the tick percentiles below); None when empty."""
+
+    if not samples:
+        return None
+    s = sorted(samples)
+
+    def at(q: float) -> float:
+        return s[min(len(s) - 1, int(q * len(s)))]
+
+    return {"p50": at(0.50), "p90": at(0.90), "p99": at(0.99),
+            "n": len(s)}
+
+
+# ---------------------------------------------------------------------------
+# request timeline reconstruction (the tentpole's offline consumer)
+# ---------------------------------------------------------------------------
+
+
+def serve_timelines(events: List[Event]) -> Dict[str, List[Event]]:
+    """Group the serve-plane lifecycle events by ``trace_id``, preserving
+    stream order — one entry per request that ever touched the queue."""
+
+    out: Dict[str, List[Event]] = {}
+    for e in events:
+        if e.kind != "serve":
+            continue
+        tid = e.data.get("trace_id")
+        if tid is None:
+            continue
+        out.setdefault(tid, []).append(e)
+    return out
+
+
+def validate_timelines(events: List[Event]) -> List[str]:
+    """End-to-end timeline checks over a serve event stream ([] = every
+    request's lifecycle reconstructs). Per trace_id:
+
+    * the first event is ``enqueued`` (minted at queue.submit);
+    * timestamps are monotone non-decreasing;
+    * exactly ONE terminal event, and it is the last event;
+    * the stages present appear in canonical order (first occurrences;
+      repeats are allowed — a stalled admission retries its
+      admitted/prefill_start pair).
+
+    A score-API trace (enqueued → done, no decode stages) passes: order
+    is only enforced over the stages that are present.
+    """
+
+    errors: List[str] = []
+    for tid, evs in serve_timelines(events).items():
+        names = [e.name for e in evs]
+        short = tid[:8]
+        if names[0] != "enqueued":
+            errors.append(f"{short}: first event is {names[0]!r}, "
+                          "expected 'enqueued'")
+        ts = [e.t for e in evs]
+        if any(b < a for a, b in zip(ts, ts[1:])):
+            errors.append(f"{short}: timestamps not monotone")
+        terminals = [n for n in names if n in TERMINAL_NAMES]
+        if len(terminals) != 1:
+            errors.append(f"{short}: {len(terminals)} terminal events "
+                          f"({terminals}), expected exactly 1")
+        elif names[-1] not in TERMINAL_NAMES:
+            errors.append(f"{short}: last event is {names[-1]!r}, "
+                          "expected the terminal")
+        firsts = {n: names.index(n) for n in STAGE_NAMES if n in names}
+        order = [firsts[n] for n in STAGE_NAMES if n in firsts]
+        if order != sorted(order):
+            errors.append(f"{short}: stages out of order: "
+                          + " -> ".join(n for n in names))
+    return errors
 
 
 def _span_table(events: List[Event], traced: bool) -> List[Dict[str, Any]]:
@@ -115,10 +197,11 @@ def summarize(events: List[Event],
         {"step": e.step, "gate": e.name, "reason": e.data.get("reason")}
         for e in gate_events]
 
+    serve_events = [e for e in events if e.kind == "serve"]
     serve_term = TallyCounter(
-        e.name for e in events
-        if e.kind == "serve" and e.name in ("done", "deadline_miss", "shed"))
-    ticks = [e for e in events if e.kind == "serve" and e.name == "tick"]
+        e.name for e in serve_events
+        if e.name in ("done", "deadline_miss", "shed"))
+    ticks = [e for e in serve_events if e.name == "tick"]
     if serve_term or ticks:
         tick_us = sorted(float(e.data["dur_us"]) for e in ticks
                          if "dur_us" in e.data)
@@ -129,6 +212,7 @@ def summarize(events: List[Event],
             i = min(len(tick_us) - 1, int(q * len(tick_us)))
             return tick_us[i]
 
+        terminals = [e for e in serve_events if e.name in TERMINAL_NAMES]
         summary["serve"] = {
             "terminal": dict(sorted(serve_term.items())),
             "ticks": len(ticks),
@@ -136,7 +220,27 @@ def summarize(events: List[Event],
             "tick_p99_us": _pct(0.99),
             "max_queue_depth": max(
                 (e.data.get("queue_depth", 0) for e in ticks), default=0),
+            # request-latency splits derived from the terminal events'
+            # embedded metrics (no cross-event joins needed offline)
+            "ttft_us": _pct_dict([float(e.data["ttft_us"])
+                                  for e in terminals if "ttft_us" in e.data]),
+            "tpot_us": _pct_dict([float(e.data["tpot_us"])
+                                  for e in terminals if "tpot_us" in e.data]),
+            "queue_wait_us": _pct_dict(
+                [float(e.data["queue_wait_us"])
+                 for e in terminals if "queue_wait_us" in e.data]),
+            "resident_us": _pct_dict(
+                [float(e.data["resident_us"])
+                 for e in terminals if "resident_us" in e.data]),
         }
+        lane_ev = next((e for e in reversed(serve_events)
+                        if e.name == "lane_stats"), None)
+        if lane_ev is not None:
+            summary["serve"]["lanes"] = lane_ev.data.get("lanes")
+        timelines = serve_timelines(events)
+        if timelines:
+            summary["serve"]["traces"] = len(timelines)
+            summary["serve"]["trace_errors"] = validate_timelines(events)
 
     dispatch = TallyCounter(
         (e.data.get("kernel", e.name), e.data.get("backend", "?"),
@@ -232,6 +336,31 @@ def render(summary: Dict[str, Any]) -> str:
                 f"{_fmt_us(p50) if p50 is not None else '-'}  p99 "
                 f"{_fmt_us(p99) if p99 is not None else '-'}  "
                 f"max queue depth {serve['max_queue_depth']}")
+        lat_rows = [(label, serve.get(key))
+                    for label, key in (("ttft", "ttft_us"),
+                                       ("tpot", "tpot_us"),
+                                       ("queue wait", "queue_wait_us"),
+                                       ("resident", "resident_us"))
+                    if serve.get(key)]
+        if lat_rows:
+            add(f"{'latency':<12} {'n':>5} {'p50':>10} {'p90':>10} {'p99':>10}")
+            for label, d in lat_rows:
+                add(f"{label:<12} {d['n']:>5} {_fmt_us(d['p50']):>10} "
+                    f"{_fmt_us(d['p90']):>10} {_fmt_us(d['p99']):>10}")
+        lanes = serve.get("lanes")
+        if lanes:
+            add(f"{'lane':<6} {'useful':>8} {'trash':>8} {'tokens':>8} "
+                f"{'goodput':>9}")
+            for r in lanes:
+                gp = f"{r['goodput']:.0%}" if r.get("goodput") is not None else "-"
+                add(f"{r['slot']:<6} {r['useful_ticks']:>8} "
+                    f"{r['trash_ticks']:>8} {r['tokens']:>8} {gp:>9}")
+        if serve.get("traces"):
+            errs = serve.get("trace_errors") or []
+            mark = "OK" if not errs else f"{len(errs)} BROKEN"
+            add(f"traces: {serve['traces']} request timelines ({mark})")
+            for msg in errs[:10]:
+                add(f"  broken timeline: {msg}")
 
     dispatch = summary.get("dispatch")
     if dispatch:
@@ -264,11 +393,64 @@ def render(summary: Dict[str, Any]) -> str:
     return "\n".join(lines)
 
 
+def render_postmortem(bundle: Dict[str, Any], tail: int = 25) -> str:
+    """Human-readable rendering of a flight-recorder postmortem bundle
+    (``repro.obs.flight.FlightRecorder.dump``)."""
+
+    lines: List[str] = []
+    add = lines.append
+    trig = bundle.get("trigger") or {}
+    add("== repro.obs postmortem ==")
+    add(f"trigger: {trig.get('reason', '?')}  {trig.get('detail', '')}".rstrip())
+    events = [Event.from_dict(d) for d in bundle.get("events", [])]
+    add(f"events: {len(events)} in ring"
+        + (f"  (+{bundle.get('dropped', 0)} evicted)"
+           if bundle.get("dropped") else ""))
+
+    if events:
+        t_end = events[-1].t
+        add("")
+        add(f"-- last {min(tail, len(events))} events (t relative to "
+            "trigger) --")
+        for e in events[-tail:]:
+            tid = e.data.get("trace_id")
+            label = f"  trace={tid[:8]}" if isinstance(tid, str) else ""
+            add(f"{e.t - t_end:+9.3f}s  {e.kind}/{e.name}{label}")
+        errs = validate_timelines(events)
+        open_traces = sum(
+            1 for evs in serve_timelines(events).values()
+            if not any(ev.name in TERMINAL_NAMES for ev in evs))
+        add("")
+        add(f"traces in ring: {len(serve_timelines(events))} "
+            f"({open_traces} still open — the likely hang suspects)")
+        # a ring is a window: truncated head timelines are expected, so
+        # timeline errors here are context, not verdicts
+        for msg in errs[:5]:
+            add(f"  note: {msg}")
+
+    snaps = bundle.get("metrics_snapshots") or []
+    if snaps:
+        add("")
+        add(f"-- metric snapshots ({len(snaps)}) --")
+        for s in snaps[-5:]:
+            kv = ", ".join(f"{k}={v}" for k, v in s.items() if k != "t")
+            add(f"t={s.get('t', 0):.3f}: {kv}")
+
+    state = bundle.get("state") or {}
+    if state:
+        add("")
+        add("-- live state at dump --")
+        for name, v in state.items():
+            add(f"{name}: {json.dumps(v, default=str)}")
+    return "\n".join(lines)
+
+
 def main(argv: Optional[List[str]] = None) -> int:
     parser = argparse.ArgumentParser(
         prog="python -m repro.obs.report",
         description="Summarize a repro.obs JSONL event log.")
-    parser.add_argument("log", help="path to the JSONL event log")
+    parser.add_argument("log", help="path to the JSONL event log (or a "
+                                    "postmortem bundle with --postmortem)")
     parser.add_argument("--json", action="store_true",
                         help="emit the machine-readable summary instead")
     parser.add_argument("--validate", action="store_true",
@@ -276,7 +458,30 @@ def main(argv: Optional[List[str]] = None) -> int:
     parser.add_argument("--diff", default=None, metavar="BASELINE",
                         help="also print a per-phase cost diff against a "
                              "baseline log/record (repro.obs.diff)")
+    parser.add_argument("--postmortem", action="store_true",
+                        help="treat LOG as a flight-recorder postmortem "
+                             "bundle (repro.obs.flight) instead of a JSONL "
+                             "stream")
     args = parser.parse_args(argv)
+
+    if args.postmortem:
+        from . import flight as flight_mod
+        try:
+            bundle = flight_mod.load_bundle(args.log)
+        except (OSError, json.JSONDecodeError) as e:
+            print(f"{args.log}: cannot read bundle: {e}", file=sys.stderr)
+            return 1
+        if args.validate:
+            errors = flight_mod.validate_bundle(bundle)
+            if errors:
+                for e in errors:
+                    print(f"{args.log}: {e}", file=sys.stderr)
+                return 1
+        if args.json:
+            print(json.dumps(bundle, indent=2, default=str))
+        else:
+            print(render_postmortem(bundle))
+        return 0
 
     if args.validate:
         errors = validate_jsonl(args.log)

@@ -206,11 +206,86 @@ def chrome_trace(spans: Sequence[Span]) -> Dict[str, Any]:
     }
 
 
-def write_chrome_trace(path: str, spans: Sequence[Span]) -> str:
+def lane_chrome_events(events: Sequence[Any]) -> List[Dict[str, Any]]:
+    """Per-decode-lane request tracks from a serve event stream.
+
+    Consumes the lifecycle events the serving executor emits (admitted /
+    first_token / terminal, each carrying a ``trace_id``) and renders one
+    Chrome-trace row per decode lane (``pid=1``, ``tid=slot``) with a
+    request span from admission to its terminal event. Load next to the
+    tick spans in Perfetto and the lane occupancy/goodput picture is the
+    timeline itself: gaps are trash-page ticks.
+    """
+
+    TERMINALS = ("done", "deadline_miss", "shed", "rejected", "error")
+    # trace_id -> {start, end, slot, status, tokens, request_id}
+    reqs: Dict[str, Dict[str, Any]] = {}
+    for e in events:
+        if e.kind != "serve":
+            continue
+        tid = e.data.get("trace_id")
+        if tid is None:
+            continue
+        r = reqs.setdefault(tid, {"start": None, "end": None, "slot": None,
+                                  "status": None, "tokens": None,
+                                  "request_id": e.data.get("request_id")})
+        if e.name == "admitted" and r["start"] is None:
+            r["start"] = e.t
+        elif e.name == "first_token":
+            r["slot"] = e.data.get("slot", r["slot"])
+            if r["start"] is None:
+                r["start"] = e.t
+        elif e.name in TERMINALS:
+            r["end"] = e.t
+            r["status"] = e.data.get("status", e.name)
+            r["tokens"] = e.data.get("tokens")
+            if r["slot"] is None:
+                r["slot"] = e.data.get("slot")
+
+    spans = [(tid, r) for tid, r in reqs.items()
+             if r["slot"] is not None and r["start"] is not None
+             and r["end"] is not None]
+    if not spans:
+        return []
+    t0 = min(r["start"] for _, r in spans)
+    out: List[Dict[str, Any]] = [
+        {"name": "process_name", "ph": "M", "pid": 1, "tid": 0,
+         "args": {"name": "serve lanes"}},
+    ]
+    for slot in sorted({r["slot"] for _, r in spans}):
+        out.append({"name": "thread_name", "ph": "M", "pid": 1, "tid": slot,
+                    "args": {"name": f"lane {slot}"}})
+    for tid, r in sorted(spans, key=lambda kv: kv[1]["start"]):
+        out.append({
+            "name": f"req {r['request_id']}" if r["request_id"] is not None
+            else f"req {tid[:8]}",
+            "ph": "X",
+            "ts": (r["start"] - t0) * 1e6,
+            "dur": max(0.0, (r["end"] - r["start"]) * 1e6),
+            "pid": 1,
+            "tid": r["slot"],
+            "args": {k: v for k, v in (("trace_id", tid),
+                                       ("status", r["status"]),
+                                       ("tokens", r["tokens"]))
+                     if v is not None},
+        })
+    return out
+
+
+def write_chrome_trace(path: str, spans: Sequence[Span],
+                       extra_events: Optional[Sequence[Dict[str, Any]]] = None
+                       ) -> str:
+    """Write a Chrome-trace document for ``spans``; ``extra_events`` are
+    appended to ``traceEvents`` verbatim (e.g. :func:`lane_chrome_events`
+    request tracks)."""
+
     parent = os.path.dirname(os.path.abspath(path))
     os.makedirs(parent, exist_ok=True)
+    doc = chrome_trace(spans)
+    if extra_events:
+        doc["traceEvents"].extend(extra_events)
     with open(path, "w", encoding="utf-8") as f:
-        json.dump(chrome_trace(spans), f)
+        json.dump(doc, f)
     return path
 
 

@@ -58,6 +58,13 @@ class ServeConfig:
     initial_pages: Optional[int] = None
     max_pages: Optional[int] = None
     dtype: Optional[str] = None
+    # flight recorder / hang watchdog (docs/observability.md):
+    # flight_capacity=0 disables the always-on postmortem ring;
+    # hang_deadline_s=None disables the watchdog thread.
+    flight_capacity: int = 2048
+    flight_dir: Optional[str] = None
+    flight_snapshot_every: int = 16   # ticks between flight metric snapshots
+    hang_deadline_s: Optional[float] = None
 
 
 def decode_buckets(spec: CacheSpec, cfg: ServeConfig) -> Tuple[int, ...]:
@@ -118,6 +125,9 @@ class Lane:
     target_new: int
     tokens: List[int]
     admitted_t: float
+    # set by the executor once prefill has produced the first token —
+    # the TTFT anchor (and the point TPOT measures from)
+    first_token_t: Optional[float] = None
 
 
 @dataclasses.dataclass
@@ -156,6 +166,12 @@ class ContinuousBatcher:
         self.lanes: List[Optional[Lane]] = [None] * cfg.slots
         self._step_fn = _fused_step(model, self.cache.spec)
         self.steps_dispatched = 0
+        # per-slot goodput accounting: every dispatched step runs ALL
+        # slots — an inactive slot burns the step on trash inputs, so
+        # useful/(useful+trash) is each lane's useful-token fraction
+        self.useful_ticks = [0] * cfg.slots
+        self.trash_ticks = [0] * cfg.slots
+        self.tokens_emitted = [0] * cfg.slots
 
     # -- admission -----------------------------------------------------------
 
@@ -238,6 +254,11 @@ class ContinuousBatcher:
         for ln in live:
             toks[ln.slot] = ln.tokens[-1]
             active[ln.slot] = True
+        for s in range(S):
+            if active[s]:
+                self.useful_ticks[s] += 1
+            else:
+                self.trash_ticks[s] += 1
 
         pools, states, next_tok, finite = self._step_fn(
             self.params, self.cache.pools, self.cache.states,
@@ -268,6 +289,7 @@ class ContinuousBatcher:
             if ok:
                 lane.tokens.append(tok)
                 self.cache.set_len(slot, int(self.cache.seq_lens[slot]) + 1)
+                self.tokens_emitted[slot] += 1
             out.append((lane, tok, ok))
         return out
 
@@ -294,6 +316,23 @@ class ContinuousBatcher:
             lambda x: jax.ShapeDtypeStruct(jnp.shape(x), jnp.result_type(x)),
             args)
         return self._step_fn.lower(*abstract)
+
+    def lane_stats(self) -> List[Dict[str, Any]]:
+        """Per-slot occupancy/goodput over the run so far. ``goodput`` is
+        the useful-token fraction of the steps the slot rode along in —
+        the cost of fixed-lane batching made visible per lane."""
+
+        out: List[Dict[str, Any]] = []
+        for s in range(self.cfg.slots):
+            useful = self.useful_ticks[s]
+            trash = self.trash_ticks[s]
+            total = useful + trash
+            out.append({
+                "slot": s, "useful_ticks": useful, "trash_ticks": trash,
+                "tokens": self.tokens_emitted[s],
+                "goodput": (useful / total) if total else None,
+            })
+        return out
 
     def memory_stats(self) -> Dict[str, Any]:
         return {

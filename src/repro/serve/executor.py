@@ -28,7 +28,9 @@ from typing import Any, Callable, Dict, List, Optional
 import jax.numpy as jnp
 import numpy as np
 
+from repro.obs import flight as flight_mod
 from repro.obs import trace as trace_mod
+from repro.obs.events import make_event
 from repro.perf.timers import LatencyStats
 from repro.serve.batcher import ContinuousBatcher, Lane, ServeConfig
 from repro.serve.cache import PagedCacheError
@@ -54,7 +56,11 @@ OK_STATUSES = (STATUS_OK, STATUS_FALLBACK)
 
 @dataclasses.dataclass
 class RequestResult:
-    """Terminal record for one submitted request."""
+    """Terminal record for one submitted request. ``finish_t`` is set
+    only for statuses that produced a complete (or errored-out)
+    generation; ``resolved_t`` is set for EVERY terminal status — the
+    moment the request left the system, whatever happened to it — so
+    queue-resident time is measurable for sheds too."""
 
     id: int
     status: str
@@ -62,6 +68,10 @@ class RequestResult:
     submit_t: float
     admitted_t: Optional[float] = None
     finish_t: Optional[float] = None
+    resolved_t: Optional[float] = None
+    first_token_t: Optional[float] = None
+    slot: Optional[int] = None
+    trace_id: str = ""
     detail: str = ""
 
     @property
@@ -76,6 +86,33 @@ class RequestResult:
             return None
         return self.admitted_t - self.submit_t
 
+    @property
+    def resident_s(self) -> Optional[float]:
+        """submit -> terminal, regardless of outcome (the satellite fix:
+        sheds used to drop out of the latency histogram entirely)."""
+
+        if self.resolved_t is None:
+            return None
+        return self.resolved_t - self.submit_t
+
+    @property
+    def ttft_s(self) -> Optional[float]:
+        """Time to first token: submit -> first generated token."""
+
+        if self.first_token_t is None:
+            return None
+        return self.first_token_t - self.submit_t
+
+    @property
+    def tpot_s(self) -> Optional[float]:
+        """Time per output token (inter-token latency): the decode-phase
+        wall time amortized over tokens after the first."""
+
+        if self.first_token_t is None or self.resolved_t is None \
+                or len(self.tokens) < 2:
+            return None
+        return (self.resolved_t - self.first_token_t) / (len(self.tokens) - 1)
+
 
 @dataclasses.dataclass
 class ServeStats:
@@ -89,6 +126,9 @@ class ServeStats:
     qps: float
     latency: LatencyStats       # n == 0 when nothing completed
     queue_wait: LatencyStats
+    ttft: LatencyStats          # time to first token (completed requests)
+    tpot: LatencyStats          # per-output-token decode latency
+    lanes: List[Dict[str, Any]]  # per-slot occupancy/goodput
     memory: Dict[str, Any]
 
 
@@ -115,25 +155,98 @@ class ServeExecutor:
             from repro.obs import NULL_OBS
             obs = NULL_OBS
         self._obs = obs
+        # always-on flight recorder (cfg.flight_capacity=0 opts out): the
+        # ring keeps the recent event tail in memory even with no obs
+        # pipeline, so a crash/hang postmortem never depends on the run
+        # having been launched with --obs-log
+        self.flight: Optional[flight_mod.FlightRecorder] = None
+        if cfg.flight_capacity > 0:
+            self.flight = flight_mod.FlightRecorder(
+                cfg.flight_capacity, out_dir=cfg.flight_dir)
+            self.flight.attach(obs)  # degraded health alert -> dump
+            self.flight.add_state_provider("queue", self._queue_state)
+            self.flight.add_state_provider("lanes", self._lane_state)
+            self.flight.add_state_provider("memory",
+                                           lambda: self.batcher.memory_stats())
+        self._watchdog: Optional[flight_mod.HangWatchdog] = None
+        if cfg.hang_deadline_s is not None:
+            self._watchdog = flight_mod.HangWatchdog(
+                cfg.hang_deadline_s, self._on_hang)
         self.batcher = ContinuousBatcher(model, params, cfg)  # rejects encoders
         self.queue = RequestQueue(cfg.queue_depth,
                                   default_timeout_s=cfg.default_timeout_s,
-                                  clock=clock, obs=obs)
+                                  clock=clock, obs=obs, flight=self.flight)
         self._clock = clock
         self.results: Dict[int, RequestResult] = {}
         self._stalled: Optional[Request] = None
+        self._inject_hang: Optional[tuple] = None  # (at_step, seconds) debug hook
+        # per-call instrument handles, hoisted out of the hot loop (each
+        # registry access is a lock + dict lookup)
+        if obs.enabled:
+            self._hist_request = obs.histogram("serve_request_us")
+            self._hist_tick = obs.histogram("serve_tick_us")
+            self._ctr_requests = obs.counter("serve_requests")
+            self._gauge_lanes = obs.gauge("serve_active_lanes")
+            self._gauge_depth = obs.gauge("serve_queue_depth")
+
+    # -- flight-recorder plumbing -------------------------------------------
+
+    def _queue_state(self) -> Dict[str, Any]:
+        return dataclasses.asdict(self.queue.stats())
+
+    def _lane_state(self) -> List[Dict[str, Any]]:
+        return [{"slot": ln.slot, "trace_id": ln.request.trace_id,
+                 "request_id": ln.request.id, "prompt_len": ln.prompt_len,
+                 "tokens": len(ln.tokens), "target_new": ln.target_new}
+                for ln in self.batcher.live_lanes()]
+
+    def _on_hang(self, stall_s: float) -> None:
+        """Watchdog trigger — runs on the watchdog thread while the tick
+        loop is stuck, so it must only read."""
+
+        if self.flight is not None:
+            self.flight.dump(
+                flight_mod.REASON_HANG,
+                detail=f"no tick progress for {stall_s:.2f}s "
+                       f"(deadline {self.cfg.hang_deadline_s}s)")
+
+    def _emit(self, name: str, data: Dict[str, Any],
+              step: Optional[int] = None) -> None:
+        """One serve-plane lifecycle event, teed into the obs pipeline
+        (when enabled) and the flight ring (when present)."""
+
+        ev = self._obs.emit("serve", name, data=data, step=step)
+        if self.flight is not None:
+            self.flight.write(ev if ev is not None else
+                              make_event("serve", name, data=data, step=step))
 
     def _observe_terminal(self, result: RequestResult) -> None:
-        if not self._obs.enabled:
+        if not self._obs.enabled and self.flight is None:
             return
         name = self.TERMINAL_EVENT.get(result.status, result.status)
         data: Dict[str, Any] = {"request_id": result.id,
-                                "status": result.status}
+                                "trace_id": result.trace_id,
+                                "status": result.status,
+                                "tokens": len(result.tokens)}
+        if result.slot is not None:
+            data["slot"] = result.slot
         if result.latency_s is not None:
             data["latency_us"] = result.latency_s * 1e6
-            self._obs.histogram("serve_request_us").observe(result.latency_s * 1e6)
-        self._obs.counter("serve_requests").inc(labels={"status": result.status})
-        self._obs.emit("serve", name, data=data)
+        # queue-resident time exists for EVERY terminal status — sheds
+        # included — so SLO percentiles see the worst outcomes too
+        if result.resident_s is not None:
+            data["resident_us"] = result.resident_s * 1e6
+        if result.queue_s is not None:
+            data["queue_wait_us"] = result.queue_s * 1e6
+        if result.ttft_s is not None:
+            data["ttft_us"] = result.ttft_s * 1e6
+        if result.tpot_s is not None:
+            data["tpot_us"] = result.tpot_s * 1e6
+        if self._obs.enabled:
+            if result.resident_s is not None:
+                self._hist_request.observe(result.resident_s * 1e6)
+            self._ctr_requests.inc(labels={"status": result.status})
+        self._emit(name, data)
 
     # -- submission ----------------------------------------------------------
 
@@ -163,13 +276,16 @@ class ServeExecutor:
         return req.id
 
     def _record(self, req: Request, status: str, tokens: List[int],
-                admitted_t: Optional[float], detail: str = "") -> None:
+                admitted_t: Optional[float], detail: str = "", *,
+                slot: Optional[int] = None,
+                first_token_t: Optional[float] = None) -> None:
         now = self._clock()
         self.results[req.id] = RequestResult(
             id=req.id, status=status, tokens=list(tokens),
             submit_t=req.submit_t, admitted_t=admitted_t,
             finish_t=now if status in OK_STATUSES + (STATUS_ERROR,) else None,
-            detail=detail,
+            resolved_t=now, first_token_t=first_token_t, slot=slot,
+            trace_id=req.trace_id, detail=detail,
         )
         self._observe_terminal(self.results[req.id])
 
@@ -177,7 +293,8 @@ class ServeExecutor:
         for ev in self.queue.drain_shed():
             self.results[ev.request.id] = RequestResult(
                 id=ev.request.id, status=ev.reason, tokens=[],
-                submit_t=ev.request.submit_t,
+                submit_t=ev.request.submit_t, resolved_t=ev.t,
+                trace_id=ev.request.trace_id,
             )
             self._observe_terminal(self.results[ev.request.id])
 
@@ -186,7 +303,8 @@ class ServeExecutor:
     def _finalize(self, lane: Lane, status: str, detail: str = "") -> None:
         self.batcher.retire(lane)
         self._record(lane.request, status, lane.tokens[: lane.target_new],
-                     lane.admitted_t, detail)
+                     lane.admitted_t, detail, slot=lane.slot,
+                     first_token_t=lane.first_token_t)
 
     def _shed_lane(self, lane: Lane) -> None:
         """Mid-generation deadline miss: keep the partial output but mark
@@ -196,7 +314,9 @@ class ServeExecutor:
         self.results[lane.request.id] = RequestResult(
             id=lane.request.id, status=STATUS_SHED_DEADLINE,
             tokens=list(lane.tokens), submit_t=lane.request.submit_t,
-            admitted_t=lane.admitted_t,
+            admitted_t=lane.admitted_t, resolved_t=self._clock(),
+            first_token_t=lane.first_token_t, slot=lane.slot,
+            trace_id=lane.request.trace_id,
         )
         self._observe_terminal(self.results[lane.request.id])
 
@@ -216,12 +336,26 @@ class ServeExecutor:
                 dtype=self.batcher.dtype, prefill_mode=self.cfg.prefill_mode,
             )
             self._record(req, STATUS_FALLBACK, [int(t) for t in toks[0]],
-                         lane.admitted_t, "nonfinite logits in batched path")
+                         lane.admitted_t, "nonfinite logits in batched path",
+                         slot=lane.slot, first_token_t=lane.first_token_t)
         except Exception as e:  # degradation must not take the loop down
             self._record(req, STATUS_ERROR, lane.tokens, lane.admitted_t,
-                         f"serial fallback failed: {e!r}")
+                         f"serial fallback failed: {e!r}",
+                         slot=lane.slot, first_token_t=lane.first_token_t)
 
     def _admit_one(self, req: Request, now: float) -> None:
+        trace = self._obs.enabled or self.flight is not None
+        if trace:
+            # "admitted" precedes batcher.admit (the slot is unknown until
+            # prefill allocates one — it rides on first_token instead); a
+            # stalled-then-retried admission repeats both stage events,
+            # which timeline validation allows
+            self._emit("admitted", {
+                "trace_id": req.trace_id, "request_id": req.id,
+                "queue_wait_us": (now - req.submit_t) * 1e6})
+            self._emit("prefill_start", {
+                "trace_id": req.trace_id, "request_id": req.id,
+                "prompt_len": int(np.asarray(req.payload["prompt"]).size)})
         try:
             lane = self.batcher.admit(req, now)
         except PagedCacheError as e:
@@ -233,6 +367,12 @@ class ServeExecutor:
         except ValueError as e:
             self._record(req, STATUS_REJECTED, [], None, str(e))
             return
+        lane.first_token_t = self._clock()  # prefill produced token 0
+        if trace:
+            self._emit("first_token", {
+                "trace_id": req.trace_id, "request_id": req.id,
+                "slot": lane.slot,
+                "ttft_us": (lane.first_token_t - req.submit_t) * 1e6})
         if self.batcher.lane_done(lane):  # max_new_tokens == 1
             self._finalize(lane, STATUS_OK)
 
@@ -246,28 +386,64 @@ class ServeExecutor:
                 break
             self._admit_one(got[0], now)
 
+    def inject_hang(self, seconds: float, at_step: int = 1) -> None:
+        """Debug/CI fault injection: stall the tick loop for ``seconds``
+        just before harvesting decode step ``at_step`` — the watchdog must
+        notice and dump a postmortem (the obs-smoke CI job asserts it)."""
+
+        self._inject_hang = (at_step, seconds)
+
     def run(self) -> ServeStats:
         """Drive until the queue and all lanes drain. Deterministic: no
-        threads — async overlap comes from JAX's dispatch model."""
+        threads (the optional hang watchdog only reads) — async overlap
+        comes from JAX's dispatch model."""
 
+        if self._watchdog is not None:
+            self._watchdog.beat()
+            self._watchdog.start()
+        try:
+            return self._run()
+        except Exception as e:
+            if self.flight is not None:  # unhandled loop failure -> postmortem
+                self.flight.dump(flight_mod.REASON_EXCEPTION, detail=repr(e))
+            raise
+        finally:
+            if self._watchdog is not None:
+                self._watchdog.stop()
+
+    def _run(self) -> ServeStats:
         pending = None
         observe = self._obs.enabled  # hoisted: zero per-tick work when off
+        trace = observe or self.flight is not None
         tracer = trace_mod.active_tracer()  # hoisted: contextvar read once
+        watchdog = self._watchdog
+        tick_n = 0
+        snapshot_every = max(1, self.cfg.flight_snapshot_every)
         while True:
             # --chrome-trace: each tick is one span on the Perfetto
             # timeline; nullcontext (no tracer) costs nothing per tick
             span = (tracer.span("serve_tick") if tracer is not None
                     else contextlib.nullcontext())
             with span:
-                tick_t0 = time.perf_counter() if observe else 0.0
+                tick_t0 = time.perf_counter() if trace else 0.0
                 now = self._clock()
                 self._resolve_shed()
                 for lane in self.batcher.live_lanes():
                     if lane.request.expired(now):
                         self._shed_lane(lane)
                 self._admissions(now)  # host + prefill work overlapping `pending`
+                if self._inject_hang is not None \
+                        and self.batcher.steps_dispatched >= self._inject_hang[0]:
+                    seconds, self._inject_hang = self._inject_hang[1], None
+                    time.sleep(seconds)
                 if pending is not None:
+                    step_n = self.batcher.steps_dispatched
                     for lane, _tok, ok in self.batcher.harvest(pending):
+                        if trace and ok:
+                            self._emit("token", {
+                                "trace_id": lane.request.trace_id,
+                                "slot": lane.slot, "n": len(lane.tokens)},
+                                step=step_n)
                         if not ok:
                             self._fallback(lane)
                         elif self.batcher.lane_done(lane):
@@ -276,25 +452,38 @@ class ServeExecutor:
                 live = self.batcher.live_lanes()
                 if live:
                     pending = self.batcher.dispatch()
-                if observe:
+                if trace:
                     self._observe_tick(tick_t0, len(live))
+                tick_n += 1
+                if self.flight is not None and tick_n % snapshot_every == 0:
+                    self.flight.record_snapshot({
+                        "tick": tick_n, "queue_depth": len(self.queue),
+                        "active_lanes": len(live),
+                        "steps": self.batcher.steps_dispatched})
+                if watchdog is not None:
+                    watchdog.beat()  # tick completed = progress
             if not live and len(self.queue) == 0 and self._stalled is None:
                 break
         self._resolve_shed()
+        if trace:
+            self._emit("lane_stats", {"lanes": self.batcher.lane_stats(),
+                                      "steps": self.batcher.steps_dispatched})
         return self.stats()
 
     def _observe_tick(self, tick_t0: float, active_lanes: int) -> None:
         """Per-tick telemetry: tick latency histogram, lane-occupancy and
         queue-depth gauges, and the ``serve/tick`` event the queue-depth
-        health monitor consumes. Called only when obs is enabled."""
+        health monitor consumes. Called when obs is enabled OR a flight
+        ring needs the tick context (metric instruments stay obs-only)."""
 
         dur_us = (time.perf_counter() - tick_t0) * 1e6
         depth = len(self.queue)
         lanes = self.cfg.slots
-        self._obs.histogram("serve_tick_us").observe(dur_us)
-        self._obs.gauge("serve_active_lanes").set(active_lanes)
-        self._obs.gauge("serve_queue_depth").set(depth)
-        self._obs.emit("serve", "tick", data={
+        if self._obs.enabled:
+            self._hist_tick.observe(dur_us)
+            self._gauge_lanes.set(active_lanes)
+            self._gauge_depth.set(depth)
+        self._emit("tick", data={
             "dur_us": dur_us, "active_lanes": active_lanes, "lanes": lanes,
             "queue_depth": depth, "capacity": self.queue.max_depth,
         })
@@ -306,6 +495,8 @@ class ServeExecutor:
         ok = [r for r in res if r.status in OK_STATUSES]
         lat = [r.latency_s for r in ok if r.latency_s is not None]
         qwait = [r.queue_s for r in ok if r.queue_s is not None]
+        ttft = [r.ttft_s for r in ok if r.ttft_s is not None]
+        tpot = [r.tpot_s for r in ok if r.tpot_s is not None]
         qps = 0.0
         if ok:
             span = max(r.finish_t for r in ok) - min(r.submit_t for r in ok)
@@ -324,5 +515,8 @@ class ServeExecutor:
             # or going None — consumers branch on `.n`
             latency=LatencyStats.from_samples(lat),
             queue_wait=LatencyStats.from_samples(qwait),
+            ttft=LatencyStats.from_samples(ttft),
+            tpot=LatencyStats.from_samples(tpot),
+            lanes=self.batcher.lane_stats(),
             memory=self.batcher.memory_stats(),
         )

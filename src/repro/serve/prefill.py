@@ -35,6 +35,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.models import common as cm
+from repro.obs import trace as obs_trace
 from repro.serve import cache as cache_mod
 
 RECURRENT_FAMILIES = ("ssm", "hybrid")
@@ -47,9 +48,12 @@ def default_mode(cfg) -> str:
 @functools.lru_cache(maxsize=None)  # Model is eq=False: identity-keyed
 def _block_fn(model):
     def fn(params, cache, prompt, lengths):
-        logits, cache = model.decode_step(params, cache, prompt,
-                                          jnp.asarray(0, jnp.int32))
-        last = logits[jnp.arange(prompt.shape[0]), lengths - 1]
+        # phase() = metadata-only named_scope: prefill cost shows up as
+        # "serve_prefill" in repro.obs.profile attribution, HLO unchanged
+        with obs_trace.phase("serve_prefill"):
+            logits, cache = model.decode_step(params, cache, prompt,
+                                              jnp.asarray(0, jnp.int32))
+            last = logits[jnp.arange(prompt.shape[0]), lengths - 1]
         return last, cache
     return jax.jit(fn)
 
@@ -74,27 +78,31 @@ def _scan_fn(model):
 
     def fn(params, cache, prompt, lengths):
         B, P = prompt.shape
-        # step 0 outside the scan: it fixes the carry dtypes (logits dtype
-        # is family-dependent) and P >= 1 always holds
-        logits, new_cache = model.decode_step(params, cache, prompt[:, :1],
-                                              jnp.asarray(0, jnp.int32))
-        cache = gate(new_cache, cache, 0 < lengths)
-        last = logits[:, 0]
-        if P == 1:
-            return last, cache
+        # phase() = metadata-only named_scope: the whole scan prefill is
+        # attributable as "serve_prefill", HLO unchanged
+        with obs_trace.phase("serve_prefill"):
+            # step 0 outside the scan: it fixes the carry dtypes (logits
+            # dtype is family-dependent) and P >= 1 always holds
+            logits, new_cache = model.decode_step(params, cache, prompt[:, :1],
+                                                  jnp.asarray(0, jnp.int32))
+            cache = gate(new_cache, cache, 0 < lengths)
+            last = logits[:, 0]
+            if P == 1:
+                return last, cache
 
-        def body(carry, xs):
-            c, lg = carry
-            tok, t = xs
-            step_logits, c_new = model.decode_step(params, c, tok[:, None], t)
-            valid = t < lengths
-            c = gate(c_new, c, valid)
-            lg = jnp.where(valid[:, None], step_logits[:, 0], lg)
-            return (c, lg), None
+            def body(carry, xs):
+                c, lg = carry
+                tok, t = xs
+                step_logits, c_new = model.decode_step(params, c,
+                                                       tok[:, None], t)
+                valid = t < lengths
+                c = gate(c_new, c, valid)
+                lg = jnp.where(valid[:, None], step_logits[:, 0], lg)
+                return (c, lg), None
 
-        ts = jnp.arange(1, P, dtype=jnp.int32)
-        (cache, last), _ = jax.lax.scan(body, (cache, last),
-                                        (prompt[:, 1:].T, ts))
+            ts = jnp.arange(1, P, dtype=jnp.int32)
+            (cache, last), _ = jax.lax.scan(body, (cache, last),
+                                            (prompt[:, 1:].T, ts))
         return last, cache
     return jax.jit(fn)
 

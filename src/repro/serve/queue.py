@@ -20,11 +20,19 @@ import dataclasses
 import itertools
 import threading
 import time
+import uuid
 from collections import deque
 from typing import Any, Callable, Deque, Dict, List, Optional
 
 SHED_OVERFLOW = "shed_overflow"
 SHED_DEADLINE = "shed_deadline"
+
+
+def mint_trace_id() -> str:
+    """A fresh request trace id (16 hex chars — unique within any
+    realistic request volume, short enough to read in a log line)."""
+
+    return uuid.uuid4().hex[:16]
 
 
 class QueueFull(RuntimeError):
@@ -42,13 +50,18 @@ class QueueClosed(RuntimeError):
 @dataclasses.dataclass
 class Request:
     """One admitted decode request. ``deadline`` is an absolute clock
-    reading (``None`` = no SLO); ``payload`` is opaque to the queue."""
+    reading (``None`` = no SLO); ``payload`` is opaque to the queue.
+    ``trace_id`` is minted at submit and rides on every lifecycle event
+    the request produces downstream (enqueued → admitted → prefill →
+    tokens → terminal), so any request's timeline reconstructs from the
+    event stream alone."""
 
     id: int
     payload: Any
     submit_t: float
     deadline: Optional[float] = None
     meta: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    trace_id: str = dataclasses.field(default_factory=mint_trace_id)
 
     def expired(self, now: float) -> bool:
         return self.deadline is not None and now > self.deadline
@@ -78,7 +91,7 @@ class RequestQueue:
                  default_timeout_s: Optional[float] = None,
                  validator: Optional[Callable[[Any], None]] = None,
                  clock: Callable[[], float] = time.monotonic,
-                 obs=None):
+                 obs=None, flight=None):
         if max_depth < 1:
             raise ValueError("max_depth must be >= 1")
         self.max_depth = max_depth
@@ -89,6 +102,9 @@ class RequestQueue:
             from repro.obs import NULL_OBS
             obs = NULL_OBS
         self._obs = obs
+        # always-on postmortem ring (repro.obs.flight) — lifecycle events
+        # land here even when no obs pipeline is enabled
+        self._flight = flight
         self._ids = itertools.count()
         self._q: Deque[Request] = deque()
         self._shed: List[ShedEvent] = []
@@ -122,6 +138,9 @@ class RequestQueue:
             )
             if self._closed:
                 raise QueueClosed("queue is closed")
+            # lifecycle start: emitted before the overflow check so even an
+            # overflow-shed request has an enqueued→shed timeline
+            self._observe_enqueued(req)
             if len(self._q) >= self.max_depth:
                 self._n_shed_overflow += 1
                 ev = ShedEvent(req, SHED_OVERFLOW, now)
@@ -171,16 +190,31 @@ class RequestQueue:
             self._nonempty.wait(timeout=timeout_s)
             return bool(self._q)
 
+    def _observe_enqueued(self, req: Request) -> None:
+        """First lifecycle event of every request's trace."""
+
+        if not self._obs.enabled and self._flight is None:
+            return
+        from repro.obs.flight import emit_teed
+        emit_teed(self._obs, self._flight, "serve", "enqueued", data={
+            "trace_id": req.trace_id, "request_id": req.id,
+            "deadline_s": None if req.deadline is None
+            else req.deadline - req.submit_t,
+        })
+
     def _observe_shed(self, ev: ShedEvent) -> None:
         """Mirror a shed into the obs pipeline: a counter keyed by reason
         plus the queue-level shed fact (the executor emits the request's
         TERMINAL serve event — this is the queue's own accounting)."""
 
-        if not self._obs.enabled:
+        if not self._obs.enabled and self._flight is None:
             return
-        self._obs.counter("queue_sheds").inc(labels={"reason": ev.reason})
-        self._obs.emit("serve", "queue_shed",
-                       data={"reason": ev.reason, "request_id": ev.request.id})
+        if self._obs.enabled:
+            self._obs.counter("queue_sheds").inc(labels={"reason": ev.reason})
+        from repro.obs.flight import emit_teed
+        emit_teed(self._obs, self._flight, "serve", "queue_shed",
+                  data={"reason": ev.reason, "request_id": ev.request.id,
+                        "trace_id": ev.request.trace_id})
 
     def drain_shed(self) -> List[ShedEvent]:
         """Return-and-clear shed events (the executor resolves each into a

@@ -105,14 +105,18 @@ class ScoreAPI:
     def __init__(self, store: ScoreStore, *, max_batch: int = 64,
                  queue_depth: int = 256,
                  default_timeout_s: Optional[float] = None,
-                 clock: Callable[[], float] = time.monotonic):
+                 clock: Callable[[], float] = time.monotonic, obs=None):
         if max_batch < 1:
             raise ValueError("max_batch must be >= 1")
         self.store = store
         self.max_batch = max_batch
+        if obs is None:
+            from repro.obs import NULL_OBS
+            obs = NULL_OBS
+        self._obs = obs
         self.queue = RequestQueue(queue_depth,
                                   default_timeout_s=default_timeout_s,
-                                  clock=clock)
+                                  clock=clock, obs=obs)
         self._clock = clock
         self._latency_s: List[float] = []
         self.answered = 0
@@ -159,6 +163,14 @@ class ScoreAPI:
                 req.payload["future"].set_result(vals[indptr[k]:indptr[k + 1]])
                 self._latency_s.append(now - req.submit_t)
                 self.answered += 1
+                # terminal lifecycle event: a score trace is
+                # enqueued -> done (no decode stages), and timeline
+                # validation accepts exactly that shape
+                self._obs.emit("serve", "done", data={
+                    "trace_id": req.trace_id, "request_id": req.id,
+                    "status": "ok", "kind": kind,
+                    "resident_us": (now - req.submit_t) * 1e6,
+                    "latency_us": (now - req.submit_t) * 1e6})
         self.batches += 1
 
     def run_pending(self) -> int:
@@ -172,6 +184,16 @@ class ScoreAPI:
                 fut = ev.request.payload["future"]
                 if not fut.done():  # overflow futures resolved at submit
                     fut.set_exception(TimeoutError(f"request shed: {ev.reason}"))
+                # same terminal vocabulary as the decode executor so the
+                # SLO monitor and timeline validation treat both planes
+                # uniformly
+                self._obs.emit("serve", "deadline_miss"
+                               if ev.reason == "shed_deadline" else "shed",
+                               data={"trace_id": ev.request.trace_id,
+                                     "request_id": ev.request.id,
+                                     "status": ev.reason,
+                                     "resident_us":
+                                         (ev.t - ev.request.submit_t) * 1e6})
             if not batch:
                 break
             self._answer(batch)

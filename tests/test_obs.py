@@ -592,10 +592,16 @@ def test_request_queue_emits_shed_events():
         q.submit({"p": 2})  # overflow shed
     t[0] = 5.0
     q.pop(4)  # p1's deadline passed -> deadline shed at pop
-    sheds = [e for e in sink.events() if e.kind == "serve"]
-    assert [e.name for e in sheds] == ["queue_shed", "queue_shed"]
+    serve_events = [e for e in sink.events() if e.kind == "serve"]
+    # every submit mints a trace and emits "enqueued" BEFORE the overflow
+    # check, so even an overflow-shed request has a reconstructible
+    # enqueued -> queue_shed timeline
+    assert [e.name for e in serve_events] == [
+        "enqueued", "enqueued", "queue_shed", "queue_shed"]
+    sheds = [e for e in serve_events if e.name == "queue_shed"]
     reasons = {e.data["reason"] for e in sheds}
     assert reasons == {"shed_overflow", "shed_deadline"}
+    assert all(e.data.get("trace_id") for e in serve_events)
     assert obs.counter("queue_sheds").total() == 2.0
 
 

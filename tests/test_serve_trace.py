@@ -1,0 +1,757 @@
+"""ISSUE 10: request-level lifecycle tracing, TTFT/TPOT/goodput
+accounting, the serving flight recorder + hang watchdog, and burn-rate
+SLO alerting.
+
+The load-bearing invariant pinned here: every request's timeline
+reconstructs end-to-end from the event stream alone — first event
+``enqueued``, monotone timestamps, lifecycle stages in order, and
+exactly ONE terminal event per ``trace_id`` whose name is pinned
+against ``ServeExecutor.TERMINAL_EVENT`` — including for mid-flight
+deadline sheds and the nonfinite->serial-fallback path, where a lane
+dies in ways the happy path never exercises.
+"""
+
+import dataclasses
+import glob
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs, serve
+from repro import obs as obs_mod
+from repro.obs import events as events_mod
+from repro.obs import flight as flight_mod
+from repro.obs import health as health_mod
+from repro.obs import report as report_mod
+from repro.obs import diff as diff_mod
+from repro.models import Model
+
+
+class FakeClock:
+    """Deterministic auto-advancing clock for deadline tests."""
+
+    def __init__(self, dt=0.0):
+        self.t = 0.0
+        self.dt = dt
+
+    def __call__(self):
+        self.t += self.dt
+        return self.t
+
+
+@pytest.fixture(scope="module")
+def models():
+    cache = {}
+
+    def get(arch):
+        if arch not in cache:
+            cfg = configs.get_smoke_config(arch)
+            m = Model(cfg)
+            cache[arch] = (cfg, m, m.init(jax.random.PRNGKey(0)))
+        return cache[arch]
+
+    return get
+
+
+def _prompt(cfg, n, seed=0):
+    rng = np.random.default_rng(seed)
+    return rng.integers(0, cfg.vocab_size, size=(n,)).astype(np.int32)
+
+
+def ring_obs(capacity=4096, monitor=True):
+    sink = events_mod.RingSink(capacity)
+    return obs_mod.Obs(sink=sink, monitor=monitor), sink
+
+
+def ev(kind, name, data=None, t=None):
+    e = events_mod.make_event(kind, name, data=data)
+    if t is not None:
+        e = dataclasses.replace(e, t=t)
+    return e
+
+
+def _terminals(events, trace_id):
+    return [e for e in events
+            if e.kind == "serve" and e.name in report_mod.TERMINAL_NAMES
+            and e.data.get("trace_id") == trace_id]
+
+
+# ---------------------------------------------------------------------------
+# lifecycle tracing: complete ordered timelines per trace_id
+# ---------------------------------------------------------------------------
+
+
+def test_ok_requests_have_complete_ordered_timelines(models):
+    cfg, m, params = models("gemma3-1b")
+    obs, sink = ring_obs()
+    ex = serve.ServeExecutor(m, params, serve.ServeConfig(
+        slots=2, page_size=4, max_len=16, max_new_tokens=3), obs=obs)
+    ids = [ex.submit(_prompt(cfg, 4, seed=i)) for i in range(4)]
+    ex.run()
+    events = sink.events()
+
+    assert report_mod.validate_timelines(events) == []
+    timelines = report_mod.serve_timelines(events)
+    assert len(timelines) == 4
+    for i in ids:
+        r = ex.results[i]
+        assert r.trace_id in timelines
+        names = [e.name for e in timelines[r.trace_id]]
+        # happy path walks the full lifecycle
+        assert names[0] == "enqueued"
+        for stage in ("admitted", "prefill_start", "first_token", "token"):
+            assert stage in names
+        assert names[-1] == serve.ServeExecutor.TERMINAL_EVENT[r.status]
+        assert len(_terminals(events, r.trace_id)) == 1
+        # terminal event carries the derived latency splits
+        term = timelines[r.trace_id][-1]
+        for key in ("ttft_us", "tpot_us", "queue_wait_us", "resident_us"):
+            assert term.data.get(key) is not None, key
+        assert term.data["ttft_us"] <= term.data["resident_us"]
+
+
+def test_deadline_shed_midflight_timelines(models):
+    """A request shed mid-decode still ends in exactly one terminal
+    (``deadline_miss``), and its partial lifecycle stays ordered."""
+
+    cfg, m, params = models("gemma3-1b")
+    obs, sink = ring_obs()
+    clock = FakeClock(dt=1.0)
+    ex = serve.ServeExecutor(m, params, serve.ServeConfig(
+        slots=1, page_size=4, max_len=16, max_new_tokens=4),
+        clock=clock, obs=obs)
+    first = ex.submit(_prompt(cfg, 4, seed=0))  # no deadline
+    late = [ex.submit(_prompt(cfg, 4, seed=i), timeout_s=2.0)
+            for i in range(1, 4)]
+    ex.run()
+    events = sink.events()
+
+    assert report_mod.validate_timelines(events) == []
+    assert ex.results[first].status == serve.STATUS_OK
+    for i in late:
+        r = ex.results[i]
+        assert r.status == serve.STATUS_SHED_DEADLINE
+        terms = _terminals(events, r.trace_id)
+        assert [e.name for e in terms] == ["deadline_miss"]
+        assert terms[0].name == serve.ServeExecutor.TERMINAL_EVENT[r.status]
+        # resident time is recorded even though the request never finished
+        assert terms[0].data.get("resident_us") is not None
+
+
+def test_nonfinite_fallback_timelines(models):
+    """The serial-fallback path retires lanes outside the normal decode
+    loop — its requests must still close their timelines exactly once."""
+
+    cfg, m, _ = models("gemma3-1b")
+    params = m.init(jax.random.PRNGKey(0))
+    params = jax.tree_util.tree_map(lambda x: jnp.full_like(x, jnp.inf),
+                                    params)
+    obs, sink = ring_obs()
+    ex = serve.ServeExecutor(m, params, serve.ServeConfig(
+        slots=2, page_size=4, max_len=16, max_new_tokens=3), obs=obs)
+    ids = [ex.submit(_prompt(cfg, 4, seed=i)) for i in range(2)]
+    ex.run()
+    events = sink.events()
+
+    assert report_mod.validate_timelines(events) == []
+    for i in ids:
+        r = ex.results[i]
+        assert r.status in (serve.STATUS_FALLBACK, serve.STATUS_ERROR)
+        terms = _terminals(events, r.trace_id)
+        assert len(terms) == 1
+        assert terms[0].name == serve.ServeExecutor.TERMINAL_EVENT[r.status]
+
+
+def test_overflow_shed_timeline_reconstructs(models):
+    """Requests shed at submit (queue overflow) never reach the executor
+    loop, but the queue emits ``enqueued`` BEFORE the overflow check so
+    even they have a reconstructible timeline."""
+
+    cfg, m, params = models("gemma3-1b")
+    obs, sink = ring_obs()
+    ex = serve.ServeExecutor(m, params, serve.ServeConfig(
+        slots=1, page_size=4, max_len=16, max_new_tokens=2, queue_depth=2),
+        obs=obs)
+    ids = [ex.submit(_prompt(cfg, 4, seed=i)) for i in range(5)]
+    ex.run()
+    events = sink.events()
+
+    assert report_mod.validate_timelines(events) == []
+    shed = [ex.results[i] for i in ids
+            if ex.results[i].status == serve.STATUS_SHED_OVERFLOW]
+    assert len(shed) == 3
+    for r in shed:
+        names = [e.name for e in
+                 report_mod.serve_timelines(events)[r.trace_id]]
+        assert names[0] == "enqueued"
+        assert names[-1] == "shed"
+
+
+def test_validate_timelines_catches_broken_streams():
+    tid = "aaaa000011112222"
+
+    def serve_ev(name, t, **data):
+        return ev("serve", name, data={"trace_id": tid, **data}, t=t)
+
+    # missing enqueued
+    errs = report_mod.validate_timelines(
+        [serve_ev("admitted", 1.0), serve_ev("done", 2.0)])
+    assert any("enqueued" in e for e in errs)
+
+    # two terminals
+    errs = report_mod.validate_timelines(
+        [serve_ev("enqueued", 1.0), serve_ev("done", 2.0),
+         serve_ev("done", 3.0)])
+    assert any("terminal" in e for e in errs)
+
+    # no terminal
+    errs = report_mod.validate_timelines(
+        [serve_ev("enqueued", 1.0), serve_ev("admitted", 2.0)])
+    assert any("terminal" in e for e in errs)
+
+    # non-monotone timestamps
+    errs = report_mod.validate_timelines(
+        [serve_ev("enqueued", 2.0), serve_ev("admitted", 1.0),
+         serve_ev("done", 3.0)])
+    assert any("monotone" in e or "timestamp" in e for e in errs)
+
+    # stage order violated (first_token before prefill_start)
+    errs = report_mod.validate_timelines(
+        [serve_ev("enqueued", 1.0), serve_ev("admitted", 2.0),
+         serve_ev("first_token", 3.0), serve_ev("prefill_start", 4.0),
+         serve_ev("done", 5.0)])
+    assert any("order" in e for e in errs)
+
+    # a complete well-formed stream validates clean
+    errs = report_mod.validate_timelines(
+        [serve_ev("enqueued", 1.0), serve_ev("admitted", 2.0),
+         serve_ev("prefill_start", 3.0), serve_ev("first_token", 4.0),
+         serve_ev("token", 5.0), serve_ev("done", 6.0)])
+    assert errs == []
+
+
+def test_terminal_names_pin_executor_vocabulary():
+    """report.TERMINAL_NAMES is the offline mirror of the executor's
+    TERMINAL_EVENT values — drift blinds timeline validation."""
+
+    assert set(serve.ServeExecutor.TERMINAL_EVENT.values()) \
+        <= set(report_mod.TERMINAL_NAMES)
+
+
+# ---------------------------------------------------------------------------
+# TTFT / TPOT / queue-wait / resident accounting
+# ---------------------------------------------------------------------------
+
+
+def test_request_result_latency_properties():
+    r = serve.RequestResult(
+        id=0, status=serve.STATUS_OK, tokens=[1, 2, 3], submit_t=1.0,
+        admitted_t=2.0, finish_t=7.0, resolved_t=7.0, first_token_t=3.0)
+    assert r.ttft_s == pytest.approx(2.0)
+    assert r.tpot_s == pytest.approx((7.0 - 3.0) / 2)
+    assert r.resident_s == pytest.approx(6.0)
+    assert r.queue_s == pytest.approx(1.0)
+
+    # one token: inter-token latency is undefined, not div-by-zero
+    one = serve.RequestResult(
+        id=1, status=serve.STATUS_OK, tokens=[1], submit_t=0.0,
+        resolved_t=2.0, first_token_t=1.0)
+    assert one.tpot_s is None
+
+    # never produced a token (e.g. shed while queued)
+    shed = serve.RequestResult(
+        id=2, status=serve.STATUS_SHED_DEADLINE, tokens=[], submit_t=0.0,
+        resolved_t=4.0)
+    assert shed.ttft_s is None and shed.tpot_s is None
+    assert shed.resident_s == pytest.approx(4.0)
+
+
+def test_resident_time_recorded_for_every_terminal(models):
+    """The seed recorded ``serve_request_us`` only for requests carrying
+    ``latency_s`` — sheds were invisible to the latency histogram. Now
+    every terminal status records queue-resident time."""
+
+    cfg, m, params = models("gemma3-1b")
+    obs, _ = ring_obs()
+    ex = serve.ServeExecutor(m, params, serve.ServeConfig(
+        slots=1, page_size=4, max_len=16, max_new_tokens=2, queue_depth=2),
+        obs=obs)
+    ids = [ex.submit(_prompt(cfg, 4, seed=i)) for i in range(5)]
+    ex.run()
+    # 2 ok + 3 overflow-shed: ALL five land in the histogram
+    hist = obs.metrics.get("serve_request_us")
+    assert hist.n == 5
+    for i in ids:
+        assert ex.results[i].resolved_t is not None
+        assert ex.results[i].resident_s >= 0.0
+
+
+def test_executor_stats_ttft_tpot_lanes(models):
+    cfg, m, params = models("gemma3-1b")
+    ex = serve.ServeExecutor(m, params, serve.ServeConfig(
+        slots=2, page_size=4, max_len=16, max_new_tokens=3))
+    ids = [ex.submit(_prompt(cfg, 4, seed=i)) for i in range(4)]
+    stats = ex.run()
+    assert stats.ttft.n == 4 and stats.tpot.n == 4
+    assert stats.ttft.p50_us > 0 and stats.tpot.p50_us > 0
+    assert len(stats.lanes) == 2
+    for lane in stats.lanes:
+        assert set(lane) == {"slot", "useful_ticks", "trash_ticks",
+                             "tokens", "goodput"}
+        assert lane["goodput"] is None or 0.0 <= lane["goodput"] <= 1.0
+    # all lanes busy the whole run -> perfect goodput
+    assert all(lane["goodput"] == 1.0 for lane in stats.lanes)
+    assert all(ex.results[i].slot is not None for i in ids)
+
+
+# ---------------------------------------------------------------------------
+# flight recorder
+# ---------------------------------------------------------------------------
+
+
+def test_flight_ring_bounds_and_counts_drops():
+    fr = flight_mod.FlightRecorder(capacity=4)
+    for i in range(10):
+        fr.record("serve", "token", data={"i": i})
+    evs = fr.events()
+    assert len(evs) == 4
+    assert [e.data["i"] for e in evs] == [6, 7, 8, 9]  # oldest evicted
+    assert fr.dropped == 6
+
+
+def test_flight_dump_bundle_and_throttle(tmp_path):
+    clock = FakeClock(dt=0.0)
+    fr = flight_mod.FlightRecorder(capacity=16, out_dir=str(tmp_path),
+                                   min_interval_s=5.0, clock=clock)
+    fr.record("serve", "enqueued", data={"trace_id": "t1"})
+    fr.record_snapshot({"queue_depth": 3})
+    fr.add_state_provider("queue", lambda: {"depth": 3})
+    fr.add_state_provider("broken", lambda: 1 / 0)
+
+    bundle = fr.dump(flight_mod.REASON_HANG, detail="no progress")
+    assert bundle is not None
+    assert flight_mod.validate_bundle(bundle) == []
+    assert bundle["trigger"]["reason"] == "hang"
+    assert [e["name"] for e in bundle["events"]] == ["enqueued"]
+    assert bundle["metrics_snapshots"][0]["queue_depth"] == 3
+    assert bundle["state"]["queue"] == {"depth": 3}
+    # a raising provider degrades to an error string, not a failed dump
+    assert "failed" in bundle["state"]["broken"]
+
+    # throttled: same reason within min_interval_s
+    assert fr.dump(flight_mod.REASON_HANG) is None
+    # different reason and force both bypass the throttle
+    assert fr.dump(flight_mod.REASON_EXCEPTION) is not None
+    assert fr.dump(flight_mod.REASON_HANG, force=True) is not None
+    clock.t = 100.0
+    assert fr.dump(flight_mod.REASON_HANG) is not None
+
+    # every dump landed as an atomic file the loader round-trips
+    assert len(fr.dumps) == 4
+    for path in fr.dumps:
+        assert os.path.exists(path)
+        loaded = flight_mod.load_bundle(path)
+        assert flight_mod.validate_bundle(loaded) == []
+    assert not glob.glob(str(tmp_path / "*.tmp"))
+
+
+def test_flight_validate_bundle_rejects_garbage():
+    assert flight_mod.validate_bundle([]) != []
+    assert any("v" in e for e in flight_mod.validate_bundle(
+        {"kind": "postmortem"}))
+    bad_event = {"v": 1, "kind": "postmortem",
+                 "trigger": {"reason": "hang", "t": 1.0},
+                 "events": [{"nope": 1}], "dropped": 0,
+                 "metrics_snapshots": [], "state": {}}
+    assert any("events[0]" in e for e in flight_mod.validate_bundle(bad_event))
+
+
+def test_flight_attach_dumps_on_degraded_alert():
+    monitor = health_mod.ServeSLOMonitor(
+        window=20, min_events=4, warn_rate=2.0, degraded_rate=0.5)
+    obs = obs_mod.Obs(sink=events_mod.RingSink(64),
+                      health=health_mod.HealthMonitor(monitors=[monitor]))
+    fr = flight_mod.FlightRecorder(capacity=16)
+    fr.attach(obs)
+    for _ in range(6):
+        obs.emit("serve", "deadline_miss", data={"trace_id": "x"})
+    assert fr.last_bundle is not None
+    assert fr.last_bundle["trigger"]["reason"] == flight_mod.REASON_ALERT
+    assert "serve_slo" in fr.last_bundle["trigger"]["detail"]
+
+
+def test_executor_flight_always_on_without_obs(models):
+    """The postmortem ring runs with NO obs pipeline configured — the
+    crashed run that never set up logging is the one that needs it."""
+
+    cfg, m, params = models("gemma3-1b")
+    ex = serve.ServeExecutor(m, params, serve.ServeConfig(
+        slots=2, page_size=4, max_len=16, max_new_tokens=3))
+    ids = [ex.submit(_prompt(cfg, 4, seed=i)) for i in range(3)]
+    ex.run()
+    assert ex.flight is not None
+    ring = ex.flight.events()
+    assert ring, "flight ring must capture lifecycle events without obs"
+    # full timelines reconstruct from the ring alone
+    assert report_mod.validate_timelines(ring) == []
+    assert {ex.results[i].trace_id for i in ids} \
+        <= set(report_mod.serve_timelines(ring))
+
+    # and flight_capacity=0 opts out entirely
+    ex2 = serve.ServeExecutor(m, params, serve.ServeConfig(
+        slots=1, page_size=4, max_len=16, flight_capacity=0))
+    assert ex2.flight is None
+
+
+def test_executor_inject_hang_produces_postmortem(models, tmp_path):
+    """Fault injection end-to-end: a stalled tick loop trips the
+    watchdog thread, which dumps a validatable bundle mid-hang."""
+
+    cfg, m, params = models("gemma3-1b")
+    ex = serve.ServeExecutor(m, params, serve.ServeConfig(
+        slots=1, page_size=4, max_len=16, max_new_tokens=3,
+        flight_dir=str(tmp_path), hang_deadline_s=0.15))
+    ex.inject_hang(0.7)
+    ids = [ex.submit(_prompt(cfg, 4, seed=i)) for i in range(2)]
+    ex.run()
+    # the run still completes after the stall...
+    assert all(ex.results[i].status == serve.STATUS_OK for i in ids)
+    # ...but the watchdog fired and froze a bundle while it was stuck
+    paths = glob.glob(str(tmp_path / "postmortem-hang-*.json"))
+    assert len(paths) == 1
+    bundle = flight_mod.load_bundle(paths[0])
+    assert flight_mod.validate_bundle(bundle) == []
+    assert bundle["trigger"]["reason"] == flight_mod.REASON_HANG
+    assert bundle["events"], "bundle must carry the recent event ring"
+    assert "queue" in bundle["state"] and "lanes" in bundle["state"]
+
+
+# ---------------------------------------------------------------------------
+# hang watchdog
+# ---------------------------------------------------------------------------
+
+
+def test_hang_watchdog_fires_once_and_rearms():
+    fired = []
+    t = [0.0]
+    wd = flight_mod.HangWatchdog(1.0, fired.append, clock=lambda: t[0])
+    assert not wd.check()          # fresh: no stall
+    t[0] = 0.9
+    assert not wd.check()          # within deadline
+    t[0] = 1.5
+    assert wd.check()              # stalled past deadline -> fires
+    assert fired == [pytest.approx(1.5)]
+    t[0] = 3.0
+    assert not wd.check()          # same stall: at most one fire
+    wd.beat()                      # progress re-arms
+    t[0] = 5.0
+    assert wd.check()              # second stall fires again
+    assert wd.fires == 2 and wd.beats == 1
+
+
+def test_hang_watchdog_rejects_bad_deadline():
+    with pytest.raises(ValueError):
+        flight_mod.HangWatchdog(0.0, lambda s: None)
+
+
+# ---------------------------------------------------------------------------
+# burn-rate SLO alerting
+# ---------------------------------------------------------------------------
+
+
+def _miss():
+    return ev("serve", "deadline_miss", data={"trace_id": "x"})
+
+
+def _done():
+    return ev("serve", "done", data={"trace_id": "x"})
+
+
+def test_slo_burn_rate_alerts_once_per_episode():
+    # plain-rate thresholds disabled (rates can't exceed 2.0) so only
+    # the burn-rate path fires
+    mon = health_mod.ServeSLOMonitor(
+        window=20, min_events=5, warn_rate=2.0, degraded_rate=2.0,
+        budget=0.05, fast_window=5, burn_threshold=4.0)
+
+    alerts = []
+    for _ in range(5):
+        alerts += mon.observe(_done())
+    assert alerts == []  # healthy baseline
+
+    for _ in range(5):
+        alerts += mon.observe(_miss())
+    burn = [a for a in alerts if "burn" in a.message]
+    assert len(burn) == 1 and burn[0].severity == "degraded"
+    assert burn[0].data["fast_rate"] >= 4.0 * 0.05
+    assert burn[0].data["slow_rate"] >= 4.0 * 0.05
+
+    # sustained burn: still one alert for the episode
+    for _ in range(5):
+        alerts += mon.observe(_miss())
+    assert len([a for a in alerts if "burn" in a.message]) == 1
+
+    # recovery drains the fast window below the burn line -> re-arm
+    for _ in range(5):
+        alerts += mon.observe(_done())
+    # second episode alerts again
+    for _ in range(5):
+        alerts += mon.observe(_miss())
+    assert len([a for a in alerts if "burn" in a.message]) == 2
+    assert mon.burn_alerts == 2
+    v = mon.verdict()
+    assert v["budget"] == 0.05 and v["burn_alerts"] == 2
+
+
+def test_slo_burn_rate_requires_budget():
+    mon = health_mod.ServeSLOMonitor(window=20, min_events=5,
+                                     warn_rate=2.0, degraded_rate=2.0)
+    alerts = []
+    for _ in range(30):
+        alerts += mon.observe(_miss())
+    assert alerts == []  # no budget -> burn mode off
+    assert "budget" not in mon.verdict()
+
+
+def test_make_obs_slo_budget_arms_burn_mode():
+    obs = obs_mod.make_obs(ring=16, slo_budget=0.05)
+    slo = [m for m in obs.health.monitors
+           if isinstance(m, health_mod.ServeSLOMonitor)]
+    assert len(slo) == 1 and slo[0].budget == 0.05
+    # default monitors stay budget-less
+    default = obs_mod.make_obs(ring=16)
+    slo = [m for m in default.health.monitors
+           if isinstance(m, health_mod.ServeSLOMonitor)]
+    assert slo[0].budget is None
+
+
+# ---------------------------------------------------------------------------
+# emit_teed: one event, two destinations
+# ---------------------------------------------------------------------------
+
+
+def test_emit_teed_reuses_event_and_runs_without_obs():
+    obs, sink = ring_obs(monitor=False)
+    fr = flight_mod.FlightRecorder(capacity=8)
+    flight_mod.emit_teed(obs, fr, "serve", "enqueued",
+                         data={"trace_id": "t1"})
+    assert len(sink.events()) == 1 and len(fr.events()) == 1
+    assert sink.events()[0] is fr.events()[0]  # built once, teed
+
+    # obs disabled: constructed only for the ring
+    fr2 = flight_mod.FlightRecorder(capacity=8)
+    flight_mod.emit_teed(obs_mod.NULL_OBS, fr2, "serve", "enqueued",
+                         data={"trace_id": "t2"})
+    assert len(fr2.events()) == 1
+    assert fr2.events()[0].data["trace_id"] == "t2"
+
+    # neither: a no-op
+    flight_mod.emit_teed(obs_mod.NULL_OBS, None, "serve", "enqueued")
+
+
+# ---------------------------------------------------------------------------
+# report: latency percentiles, goodput table, postmortem rendering
+# ---------------------------------------------------------------------------
+
+
+def _lifecycle_events(n_ok=3, n_miss=1):
+    """A synthetic, fully-formed serve stream with known latencies."""
+
+    out = []
+    t = 0.0
+    for i in range(n_ok + n_miss):
+        tid = f"{i:016x}"
+        ok = i < n_ok
+        out.append(ev("serve", "enqueued", {"trace_id": tid}, t=t))
+        out.append(ev("serve", "admitted",
+                      {"trace_id": tid, "queue_wait_us": 1000.0}, t=t + 0.001))
+        out.append(ev("serve", "prefill_start", {"trace_id": tid}, t=t + 0.002))
+        if ok:
+            out.append(ev("serve", "first_token",
+                          {"trace_id": tid, "slot": i % 2,
+                           "ttft_us": 3000.0}, t=t + 0.003))
+            out.append(ev("serve", "done",
+                          {"trace_id": tid, "status": "ok", "tokens": 4,
+                           "slot": i % 2, "ttft_us": 3000.0 + i,
+                           "tpot_us": 500.0 + i, "queue_wait_us": 1000.0,
+                           "resident_us": 5000.0 + i}, t=t + 0.005))
+        else:
+            out.append(ev("serve", "deadline_miss",
+                          {"trace_id": tid, "status": "shed_deadline",
+                           "resident_us": 2500.0}, t=t + 0.004))
+        t += 0.01
+    out.append(ev("serve", "lane_stats", {"lanes": [
+        {"slot": 0, "useful_ticks": 8, "trash_ticks": 2, "tokens": 8,
+         "goodput": 0.8},
+        {"slot": 1, "useful_ticks": 6, "trash_ticks": 4, "tokens": 6,
+         "goodput": 0.6}]}, t=t))
+    return out
+
+
+def test_report_serve_latency_and_goodput_sections():
+    events = _lifecycle_events()
+    summary = report_mod.summarize(events)
+    sv = summary["serve"]
+    assert sv["ttft_us"]["n"] == 3
+    assert sv["tpot_us"]["n"] == 3
+    assert sv["queue_wait_us"]["n"] == 3
+    assert sv["resident_us"]["n"] == 4  # sheds counted too
+    assert {"p50", "p90", "p99"} <= set(sv["ttft_us"])
+    assert [lane["goodput"] for lane in sv["lanes"]] == [0.8, 0.6]
+    assert sv["traces"] == 4 and sv["trace_errors"] == []
+
+    text = report_mod.render(summary)
+    assert "ttft" in text and "tpot" in text and "queue wait" in text
+    assert "goodput" in text
+    assert "4 request timelines (OK)" in text
+
+
+def test_report_flags_broken_timelines_in_render():
+    events = _lifecycle_events()
+    # drop one terminal: that trace never closes
+    events = [e for e in events
+              if not (e.name == "done" and e.data["trace_id"] == f"{0:016x}")]
+    summary = report_mod.summarize(events)
+    assert summary["serve"]["trace_errors"] != []
+    assert "BROKEN" in report_mod.render(summary)
+
+
+def test_report_postmortem_render_and_cli(tmp_path, capsys):
+    fr = flight_mod.FlightRecorder(capacity=16, out_dir=str(tmp_path))
+    for e in _lifecycle_events(n_ok=1, n_miss=0)[:-2]:  # open trace
+        fr.write(e)
+    fr.record_snapshot({"queue_depth": 2})
+    fr.add_state_provider("queue", lambda: {"depth": 2})
+    fr.dump(flight_mod.REASON_EXCEPTION, detail="RuntimeError('boom')")
+    path = fr.dumps[0]
+
+    text = report_mod.render_postmortem(flight_mod.load_bundle(path))
+    assert "exception" in text and "boom" in text
+    assert "still open" in text  # the hang-suspect line
+    assert "queue_depth" in text
+
+    # CLI: --postmortem --validate exits 0 on a good bundle
+    assert report_mod.main([path, "--postmortem", "--validate"]) == 0
+    capsys.readouterr()
+    # and non-zero on a corrupt one
+    bad = tmp_path / "bad.json"
+    bad.write_text(json.dumps({"v": 99}))
+    assert report_mod.main([str(bad), "--postmortem", "--validate"]) == 1
+
+
+# ---------------------------------------------------------------------------
+# chrome trace: per-lane request tracks
+# ---------------------------------------------------------------------------
+
+
+def test_lane_chrome_events_render_request_tracks():
+    events = _lifecycle_events(n_ok=3, n_miss=0)
+    out = obs_mod.lane_chrome_events(events)
+    meta = [e for e in out if e["ph"] == "M"]
+    spans = [e for e in out if e["ph"] == "X"]
+    assert {m["args"]["name"] for m in meta} \
+        == {"serve lanes", "lane 0", "lane 1"}
+    assert len(spans) == 3
+    for s in spans:
+        assert s["pid"] == 1 and s["tid"] in (0, 1)
+        assert s["ts"] >= 0.0 and s["dur"] >= 0.0
+        assert "trace_id" in s["args"]
+    # lanes match what first_token reported
+    assert sorted(s["tid"] for s in spans) == [0, 0, 1]
+
+    # incomplete requests (no terminal) render nothing rather than lying
+    assert obs_mod.lane_chrome_events(events[:3]) == []
+
+
+def test_write_chrome_trace_merges_lane_events(tmp_path):
+    span = obs_mod.Span(name="tick", start_s=0.0, dur_s=0.1, depth=0,
+                        parent=None, traced=False)
+    lane_events = obs_mod.lane_chrome_events(
+        _lifecycle_events(n_ok=2, n_miss=0))
+    path = obs_mod.write_chrome_trace(
+        str(tmp_path / "trace.json"), [span], extra_events=lane_events)
+    doc = json.load(open(path))
+    assert len(doc["traceEvents"]) == 1 + len(lane_events)
+    pids = {e["pid"] for e in doc["traceEvents"]}
+    assert pids == {0, 1}  # host spans + lane tracks
+
+
+# ---------------------------------------------------------------------------
+# diff: serve latency pseudo-phases
+# ---------------------------------------------------------------------------
+
+
+def test_diff_serve_latency_pseudophases(tmp_path):
+    def stream(path, ttft, resident):
+        evs = [ev("serve", "done", {"trace_id": "t", "status": "ok",
+                                    "ttft_us": ttft, "tpot_us": 100.0,
+                                    "queue_wait_us": 50.0,
+                                    "resident_us": resident})]
+        with open(path, "w") as f:
+            for e in evs:
+                f.write(json.dumps(e.as_dict()) + "\n")
+        return str(path)
+
+    base = stream(tmp_path / "base.jsonl", ttft=1000.0, resident=2000.0)
+    cur = stream(tmp_path / "cur.jsonl", ttft=3000.0, resident=2000.0)
+
+    costs = diff_mod.phase_costs_from_events(
+        events_mod.read_jsonl(base))
+    assert costs["serve:ttft"] == 1000.0
+    assert costs["serve:resident"] == 2000.0
+
+    rows, unit = diff_mod.diff_paths(base, cur)
+    assert unit == "us"
+    worst = diff_mod.top_regressor(rows)
+    assert worst.phase == "serve:ttft" and worst.ratio == pytest.approx(3.0)
+
+    # unit-mismatch refusal semantics unchanged: events vs FLOPs bench
+    bench = tmp_path / "bench.json"
+    bench.write_text(json.dumps({
+        "records": [{"attribution": {"phases": {"x": {"flops": 1.0}}}}]}))
+    with pytest.raises(ValueError, match="cannot diff"):
+        diff_mod.diff_paths(base, str(bench))
+
+
+# ---------------------------------------------------------------------------
+# score API tracing
+# ---------------------------------------------------------------------------
+
+
+def test_score_api_emits_lifecycle_events(tmp_path):
+    from repro.dataopt import export as dataopt_export
+
+    scores = np.linspace(-1.0, 1.0, 10).astype(np.float32)
+    path = dataopt_export.export_scores(str(tmp_path / "scores"), scores,
+                                        scorer="sama")
+    store = serve.ScoreStore.load(path, expect_n=10, expect_scorer="sama")
+
+    obs, sink = ring_obs()
+    api = serve.ScoreAPI(store, max_batch=8, obs=obs)
+    api.submit([0, 1, 2])
+    api.submit([5])
+    api.run_pending()
+    events = sink.events()
+    done = [e for e in events if e.kind == "serve" and e.name == "done"]
+    assert len(done) == 2
+    assert all(e.data.get("trace_id") for e in done)
+    # score requests have (enqueued -> done) timelines that validate
+    assert report_mod.validate_timelines(events) == []
+
+    # deadline shed surfaces as its own terminal
+    clock = FakeClock()
+    obs2, sink2 = ring_obs()
+    api2 = serve.ScoreAPI(store, queue_depth=4, default_timeout_s=5.0,
+                          clock=clock, obs=obs2)
+    api2.submit([1])
+    clock.t = 100.0
+    api2.run_pending()
+    misses = [e for e in sink2.events()
+              if e.kind == "serve" and e.name == "deadline_miss"]
+    assert len(misses) == 1
+    assert misses[0].data.get("resident_us") is not None
+    assert report_mod.validate_timelines(sink2.events()) == []
